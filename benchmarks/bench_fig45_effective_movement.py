@@ -1,0 +1,43 @@
+"""Paper Fig. 4/5: effective movement as a convergence indicator — per-step
+EM series from the ProFL run (reused from the Table 1 bench when available),
+checked for the paper's qualitative shape: high at step start, declining
+toward the freeze point."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def bench(ctx: dict, full: bool = False):
+    hist = ctx.get("profl_history")
+    if not hist:  # standalone invocation: run a short ProFL
+        from repro.fl.server import ProFLServer
+        xtr, ytr, xte, yte, parts, budgets = C.world()
+        srv = ProFLServer(C.small_cnn("resnet18"), C.default_fl(),
+                          xtr, ytr, xte, yte, parts, budgets)
+        hist = {"resnet18-iid": srv.run()["history"]}
+
+    out = {}
+    for tag, h in hist.items():
+        series = {}
+        for rec in h:
+            if rec.get("em") is None:
+                continue
+            series.setdefault((rec["stage"], rec["t"]), []).append(rec["em"])
+        for (stage, t), ems in series.items():
+            if len(ems) < 2:
+                continue
+            declines = ems[-1] <= ems[0] + 1e-6
+            out[f"{tag}/{stage}{t}"] = {
+                "em_first": ems[0], "em_last": ems[-1], "n": len(ems),
+                "declines_or_flat": bool(declines),
+            }
+            C.emit(
+                f"fig45/{tag}/{stage}{t}", 0.0,
+                f"em_first={ems[0]:.3f};em_last={ems[-1]:.3f};n={len(ems)}",
+            )
+    frac_decl = np.mean([v["declines_or_flat"] for v in out.values()]) if out else 0
+    C.emit("fig45/summary", 0.0, f"fraction_declining={frac_decl:.2f}")
+    ctx["fig45"] = out
+    C.save_json("bench_fig45.json", out)

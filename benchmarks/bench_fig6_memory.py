@@ -1,0 +1,41 @@
+"""Paper Fig. 6: training-memory footprint and participation rate per
+ProFL block (full paper-scale memory model), plus the headline
+peak-memory-reduction numbers (paper: up to 57.4%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_cnn import PAPER_CNNS
+from repro.fl import memory_model as MM
+
+from benchmarks import common as C
+
+
+def bench(ctx: dict, full: bool = False):
+    budgets = MM.assign_budgets_mb(np.random.default_rng(0), 100)
+    out = {}
+    for name, cfg in PAPER_CNNS.items():
+        fullmb = MM.full_train_memory_mb(cfg)
+        rows = []
+        for t in range(cfg.n_prog_blocks):
+            mb = MM.submodel_train_memory_mb(cfg, t)
+            pr = len(MM.eligible(budgets, mb)) / 100.0
+            rows.append({"block": t + 1, "mem_mb": mb, "pr": pr})
+        headmb = MM.head_only_memory_mb(cfg)
+        peak = max(r["mem_mb"] for r in rows)
+        reduction = 1.0 - peak / fullmb
+        out[name] = {
+            "full_mb": fullmb,
+            "blocks": rows,
+            "head_only_mb": headmb,
+            "peak_reduction": reduction,
+            "pr_full": len(MM.eligible(budgets, fullmb)) / 100.0,
+        }
+        C.emit(
+            f"fig6/{name}", 0.0,
+            f"full={fullmb:.0f}MB;peak_block={peak:.0f}MB;"
+            f"reduction={reduction:.1%};pr_full={out[name]['pr_full']:.0%};"
+            f"pr_blocks=" + "/".join(f"{r['pr']:.0%}" for r in rows),
+        )
+    ctx["fig6"] = out
+    C.save_json("bench_fig6.json", out)

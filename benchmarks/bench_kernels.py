@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks (CPU wall-clock for the jnp paths; the Pallas
+kernels run in interpret mode here and are timed for regression tracking,
+not TPU-performance claims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from benchmarks import common as C
+
+
+def bench(ctx: dict, full: bool = False):
+    rng = jax.random.PRNGKey(0)
+    B, H, K, S, hd = 2, 8, 2, 1024, 64
+    q = jax.random.normal(rng, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, K, S, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, K, S, hd))
+
+    att = jax.jit(functools.partial(ops.attention, impl="chunked", bq=256,
+                                    bk=256))
+    us = C.time_call(att, q, k, v)
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    C.emit("kernels/attention_chunked_1k", us,
+           f"gflops_s={flops/us/1e3:.1f}")
+
+    n = 2_000_000
+    pn = jax.random.normal(rng, (n,))
+    po = pn + 0.01 * jax.random.normal(jax.random.fold_in(rng, 3), (n,))
+    net = jnp.zeros((n,))
+    em = jax.jit(functools.partial(ops.effective_movement_update, impl="naive"))
+    us = C.time_call(em, pn, po, net)
+    C.emit("kernels/effective_movement_2M", us,
+           f"gbytes_s={4*4*n/us/1e3:.2f}")
+    em_pl = jax.jit(functools.partial(ops.effective_movement_update,
+                                      impl="pallas"))
+    us_pl = C.time_call(em_pl, pn, po, net, iters=3)
+    C.emit("kernels/effective_movement_2M_pallas_interp", us_pl,
+           "interpret_mode=1")
+
+    Kc, n2 = 20, 1_000_000
+    p = jax.random.normal(rng, (Kc, n2))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(rng, 4), (Kc,)))
+    fa = jax.jit(functools.partial(ops.fedavg, impl="naive"))
+    us = C.time_call(fa, p, w)
+    C.emit("kernels/fedavg_20x1M", us, f"gbytes_s={4*Kc*n2/us/1e3:.2f}")

@@ -1,0 +1,68 @@
+"""Paper Table 1: ProFL vs AllSmall / ExclusiveFL / HeteroFL / DepthFL on
+the ResNet family (reduced CPU scale, synthetic data — the reproduced signal
+is the accuracy ORDERING and the participation rates; see DESIGN.md §6)."""
+from __future__ import annotations
+
+import time
+
+from repro.fl import baselines as BL
+from repro.fl.server import ProFLServer
+
+from benchmarks import common as C
+
+
+def run(kind: str, non_iid: bool, rounds: int):
+    xtr, ytr, xte, yte, parts, budgets = C.world(non_iid=non_iid)
+    cfg = C.small_cnn(kind)
+    fl = C.default_fl()
+    out = {}
+    t0 = time.time()
+    srv = ProFLServer(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+    res = srv.run()
+    out["ProFL"] = {"acc": res["final_acc"], "pr": 1.0}
+    out["_profl_history"] = res["history"]
+    out["_profl_steps"] = res["steps"]
+    out["_profl_uplink"] = res["uplink_params"]
+    for name, fn in [
+        ("AllSmall", BL.run_allsmall),
+        ("ExclusiveFL", BL.run_exclusivefl),
+        ("HeteroFL", BL.run_heterofl),
+        ("DepthFL", BL.run_depthfl),
+    ]:
+        r = fn(cfg, fl, xtr, ytr, xte, yte, parts, budgets, rounds)
+        out[name] = {"acc": r["acc"], "pr": r["pr"]}
+    out["_elapsed_s"] = time.time() - t0
+    return out
+
+
+def bench(ctx: dict, full: bool = False):
+    rounds = C.BASELINE_ROUNDS
+    cases = [("resnet18", False)] + ([("resnet18", True), ("resnet34", False)]
+                                     if full else [])
+    table = {}
+    for kind, non_iid in cases:
+        tag = f"{kind}-{'noniid' if non_iid else 'iid'}"
+        table[tag] = run(kind, non_iid, rounds)
+        r = table[tag]
+        best_base = max(
+            (v["acc"] or 0.0) for k, v in r.items()
+            if not k.startswith("_") and k != "ProFL"
+        )
+        C.emit(
+            f"table1/{tag}/ProFL",
+            r["_elapsed_s"] * 1e6,
+            f"acc={r['ProFL']['acc']:.3f};best_baseline={best_base:.3f};"
+            f"margin={r['ProFL']['acc'] - best_base:+.3f}",
+        )
+        for k, v in r.items():
+            if k.startswith("_") or k == "ProFL":
+                continue
+            acc = "NA" if v["acc"] is None else f"{v['acc']:.3f}"
+            C.emit(f"table1/{tag}/{k}", 0.0, f"acc={acc};pr={v['pr']:.2f}")
+    ctx["table1"] = table
+    C.save_json("bench_table1.json", {
+        k: {kk: vv for kk, vv in v.items() if not kk.startswith("_")}
+        for k, v in table.items()
+    })
+    # keep histories for fig4/5 benches
+    ctx["profl_history"] = {k: v["_profl_history"] for k, v in table.items()}

@@ -1,0 +1,24 @@
+"""Paper Table 2: the same comparison on the VGG family."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from benchmarks.bench_table1_resnet import run
+
+
+def bench(ctx: dict, full: bool = False):
+    cases = [("vgg11", False)] + ([("vgg16", False)] if full else [])
+    table = {}
+    for kind, non_iid in cases:
+        tag = f"{kind}-{'noniid' if non_iid else 'iid'}"
+        table[tag] = run(kind, non_iid, C.BASELINE_ROUNDS)
+        r = table[tag]
+        for k, v in r.items():
+            if k.startswith("_"):
+                continue
+            acc = "NA" if v["acc"] is None else f"{v['acc']:.3f}"
+            C.emit(f"table2/{tag}/{k}", 0.0, f"acc={acc};pr={v['pr']:.2f}")
+    ctx["table2"] = table
+    C.save_json("bench_table2.json", {
+        k: {kk: vv for kk, vv in v.items() if not kk.startswith("_")}
+        for k, v in table.items()
+    })

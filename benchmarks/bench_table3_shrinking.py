@@ -1,0 +1,30 @@
+"""Paper Table 3: ablation of progressive model shrinking — final global
+accuracy with and without the shrinking stage (init params + proxy bank)."""
+from __future__ import annotations
+
+from repro.fl.server import ProFLServer
+
+from benchmarks import common as C
+
+
+def bench(ctx: dict, full: bool = False):
+    xtr, ytr, xte, yte, parts, budgets = C.world()
+    cfg = C.small_cnn("resnet18")
+    out = {}
+    for use_shrink in (True, False):
+        fl = C.default_fl(use_shrinking=use_shrink, seed=1)
+        srv = ProFLServer(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+        res = srv.run()
+        # per-step sub-model accuracies (the paper's Step1..4 columns)
+        sub = [h.get("sub_acc") for h in res["history"] if "sub_acc" in h
+               and h["stage"] == "grow"]
+        out["with" if use_shrink else "without"] = {
+            "global_acc": res["final_acc"],
+            "grow_sub_accs": sub,
+        }
+    delta = out["with"]["global_acc"] - out["without"]["global_acc"]
+    C.emit("table3/shrinking_ablation", 0.0,
+           f"with={out['with']['global_acc']:.3f};"
+           f"without={out['without']['global_acc']:.3f};delta={delta:+.3f}")
+    ctx["table3"] = out
+    C.save_json("bench_table3.json", out)

@@ -1,0 +1,41 @@
+"""Paper Table 5: parameter count + percentage per block, ResNet18/34 —
+reproduced EXACTLY at the paper's full scale (this is a hard numerical check
+of the block partition: 0.15/0.53/2.10/8.39 M etc.)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.paper_cnn import RESNET18, RESNET34
+from repro.models import cnn as CN
+
+from benchmarks import common as C
+
+PAPER = {
+    "resnet18": ([0.15, 0.53, 2.10, 8.39], 11.2),
+    "resnet34": ([0.22, 1.11, 6.82, 13.11], 21.28),
+}
+
+
+def bench(ctx: dict, full: bool = False):
+    out = {}
+    for cfg in (RESNET18, RESNET34):
+        params, _ = CN.init_cnn(cfg, jax.random.PRNGKey(0))
+        counts = CN.block_param_counts(params)
+        total = sum(counts)
+        pcts = [100.0 * c / total for c in counts]
+        exp_counts, exp_total = PAPER[cfg.kind]
+        ok = all(abs(c / 1e6 - e) < 0.02 for c, e in zip(counts, exp_counts))
+        out[cfg.kind] = {
+            "counts_M": [c / 1e6 for c in counts],
+            "pcts": pcts,
+            "total_M": total / 1e6,
+            "matches_paper": ok,
+        }
+        C.emit(
+            f"table5/{cfg.kind}", 0.0,
+            "blocks_M=" + "/".join(f"{c/1e6:.2f}" for c in counts)
+            + f";total_M={total/1e6:.2f};paper_match={ok}",
+        )
+        assert ok, f"{cfg.kind} block params diverge from paper Table 5"
+    ctx["table5"] = out
+    C.save_json("bench_table5.json", out)

@@ -1,0 +1,101 @@
+"""Shared world setup + timing helpers for the benchmark suite.
+
+Default profile is CPU-sized (reduced-width CNNs, small round budgets) so
+``python -m benchmarks.run`` completes in tens of minutes; pass --full for
+longer runs.  Client *eligibility* always uses the paper-scale memory model
+(fl/memory_model.py), so participation-rate structure matches the paper
+regardless of the simulated width.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core.effective_movement import EMConfig
+from repro.fl import data as D
+from repro.fl import memory_model as MM
+from repro.fl.server import FLConfig
+from repro.models.cnn import CNNConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def results_path(name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, name)
+
+
+_WORLD_CACHE = {}
+
+
+def world(non_iid: bool = False, n_clients: int = 100, seed: int = 0):
+    """(xtr, ytr, xte, yte, parts, budgets) — cached."""
+    key = (non_iid, n_clients, seed)
+    if key not in _WORLD_CACHE:
+        rng = jax.random.PRNGKey(seed)
+        xtr, ytr, xte, yte = D.make_synthetic(
+            rng, n_train=2000, n_test=500, size=16
+        )
+        if non_iid:
+            parts = D.partition_dirichlet(
+                jax.random.PRNGKey(seed + 1), ytr, n_clients, alpha=1.0
+            )
+        else:
+            parts = D.partition_iid(jax.random.PRNGKey(seed + 1), len(xtr),
+                                    n_clients)
+        budgets = MM.assign_budgets_mb(np.random.default_rng(seed), n_clients)
+        _WORLD_CACHE[key] = (xtr, ytr, xte, yte, parts, budgets)
+    return _WORLD_CACHE[key]
+
+
+def small_cnn(kind: str) -> CNNConfig:
+    return CNNConfig(kind, width_mult=0.25, in_size=16)
+
+
+def default_fl(**kw) -> FLConfig:
+    base = dict(
+        n_clients=100,
+        clients_per_round=10,
+        local_steps=4,
+        batch_size=16,
+        n_local_fixed=32,
+        max_rounds_per_step=8,
+        distill_rounds=2,
+        eval_every=4,
+        em=EMConfig(window_h=2, slope_phi=0.03, patience_w=2, fit_points=4,
+                    em_level=0.92, min_rounds=4),
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+BASELINE_ROUNDS = 12  # per baseline in the accuracy tables (CPU profile)
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10, **kw):
+    """Median microseconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str):
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name: str, obj):
+    with open(results_path(name), "w") as f:
+        json.dump(obj, f, indent=1, default=float)

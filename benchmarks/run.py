@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure (+ kernels and the
+roofline report).  Prints ``name,us_per_call,derived`` CSV.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_fig45_effective_movement,
+    bench_fig6_memory,
+    bench_kernels,
+    bench_table1_resnet,
+    bench_table2_vgg,
+    bench_table3_shrinking,
+    bench_table4_freezing,
+    bench_table5_blockparams,
+    roofline,
+)
+
+MODULES = [
+    ("table5_blockparams", bench_table5_blockparams),  # fast, exact checks first
+    ("fig6_memory", bench_fig6_memory),
+    ("kernels", bench_kernels),
+    ("roofline", roofline),
+    ("table1_resnet", bench_table1_resnet),
+    ("fig45_effective_movement", bench_fig45_effective_movement),
+    ("table2_vgg", bench_table2_vgg),
+    ("table3_shrinking", bench_table3_shrinking),
+    ("table4_freezing", bench_table4_freezing),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="bigger FL runs (more model families)")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    ctx: dict = {}
+    failures = []
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.bench(ctx, full=args.full)
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # keep the suite going
+            failures.append((name, e))
+            import traceback
+            traceback.print_exc()
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+    if failures:
+        raise SystemExit(f"{len(failures)} bench modules failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

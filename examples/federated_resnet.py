@@ -1,0 +1,67 @@
+"""The paper's headline experiment at CPU scale: ProFL vs the baselines on
+a memory-heterogeneous federation of 100 clients training ResNet18 on a
+synthetic CIFAR-like task (no dataset downloads in this container).
+
+    PYTHONPATH=src python examples/federated_resnet.py [--rounds 20]
+"""
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.effective_movement import EMConfig
+from repro.fl import baselines as BL
+from repro.fl import data as D
+from repro.fl import memory_model as MM
+from repro.fl.server import FLConfig, ProFLServer
+from repro.models.cnn import CNNConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="max FL rounds per ProFL step / per baseline")
+    ap.add_argument("--non-iid", action="store_true")
+    args = ap.parse_args()
+
+    rng = jax.random.PRNGKey(0)
+    xtr, ytr, xte, yte = D.make_synthetic(rng, n_train=2000, n_test=500,
+                                          size=16)
+    if args.non_iid:
+        parts = D.partition_dirichlet(jax.random.PRNGKey(1), ytr, 100, 1.0)
+    else:
+        parts = D.partition_iid(jax.random.PRNGKey(1), len(xtr), 100)
+    budgets = MM.assign_budgets_mb(np.random.default_rng(0), 100)
+    cfg = CNNConfig("resnet18", width_mult=0.25, in_size=16)
+    fl = FLConfig(
+        clients_per_round=10, local_steps=4, batch_size=16, n_local_fixed=32,
+        max_rounds_per_step=args.rounds, distill_rounds=2, eval_every=4,
+        em=EMConfig(window_h=2, slope_phi=0.03, patience_w=2, fit_points=4,
+                    em_level=0.92, min_rounds=4),
+    )
+
+    print(f"ResNet18 paper-scale training memory: "
+          f"{MM.full_train_memory_mb(CNNConfig('resnet18')):.0f} MB; "
+          f"client budgets 100-900 MB")
+    print("\n=== ProFL ===")
+    srv = ProFLServer(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+    res = srv.run()
+    for s in res["steps"]:
+        print(f"  {s['stage']:6s} block {s['t']}: {s['rounds']} rounds, "
+              f"PR={s['pr']:.0%}")
+    print(f"  final accuracy: {res['final_acc']:.3f} (PR=100%)")
+
+    print("\n=== Baselines ===")
+    for name, fn in [("AllSmall", BL.run_allsmall),
+                     ("ExclusiveFL", BL.run_exclusivefl),
+                     ("HeteroFL", BL.run_heterofl),
+                     ("DepthFL", BL.run_depthfl)]:
+        r = fn(cfg, fl, xtr, ytr, xte, yte, parts, budgets, 2 * args.rounds)
+        acc = "NA (no client fits)" if r["acc"] is None else f"{r['acc']:.3f}"
+        print(f"  {name:12s} acc={acc} PR={r['pr']:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

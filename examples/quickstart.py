@@ -1,0 +1,66 @@
+"""Quickstart: ProFL progressive training of a small transformer, end to
+end through every block — shrinking, growing, effective-movement freezing —
+on synthetic tokens, single process.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import blocks as B
+from repro.core import effective_movement as EM
+from repro.core import progressive as P
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWCfg, adamw
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b").reduced(d_model=128, vocab=256).with_(
+        n_prog_blocks=2
+    )
+    rng = jax.random.PRNGKey(0)
+    params = T.init_model(cfg, rng)
+    opt = adamw(AdamWCfg(lr=2e-3, warmup=5, weight_decay=0.0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab)
+    }
+    em_cfg = EM.EMConfig(window_h=3, slope_phi=0.02, patience_w=2,
+                         fit_points=4, em_level=0.9, min_rounds=6)
+
+    print(f"model: {cfg.name}, {B.n_blocks(cfg)} progressive blocks")
+    for stage, t in P.schedule(B.n_blocks(cfg), use_shrinking=True):
+        frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(t), t)
+        n_train = sum(x.size for x in jax.tree.leaves(trainable))
+        n_froz = sum(x.size for x in jax.tree.leaves(frozen))
+        step = jax.jit(P.make_progressive_train_step(cfg, opt, t))
+        state = {"params": trainable, "opt": opt.init(trainable),
+                 "step": jnp.zeros((), jnp.int32)}
+        em_state = EM.em_init(trainable)
+        print(f"\n[{stage} t={t}] trainable={n_train/1e6:.2f}M "
+              f"frozen={n_froz/1e6:.2f}M")
+        for i in range(40):
+            state, m = step(state, frozen, batch)
+            em = EM.em_update(em_cfg, em_state, state["params"])
+            if i % 10 == 0:
+                print(f"  step {i:3d} loss={float(m['loss']):.3f}"
+                      + (f" em={em:.3f}" if em is not None else ""))
+            if em is not None and EM.should_freeze(em_cfg, em_state):
+                print(f"  block froze at step {i} (effective movement)")
+                break
+        params = B.merge_block_into(cfg, params, state["params"]["active"], t)
+        params["final_norm"] = state["params"]["op"]["final_norm"]
+        if not cfg.tie_embeddings:
+            params["head"] = state["params"]["op"]["head"]
+
+    # final full-model loss
+    from repro.train.train_step import make_loss_fn
+    loss, _ = make_loss_fn(cfg, remat=False)(params, batch)
+    print(f"\nfull-model loss after progressive training: {float(loss):.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuations with the rotating-window KV cache — the same serve_step the
+decode dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch qwen3-8b]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.train import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    Bz, S, N = args.batch, args.prompt_len, args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (Bz, S), 0, cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.frontend is not None:
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (Bz, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (Bz, cfg.encoder.n_frames, cfg.d_model))
+
+    t0 = time.time()
+    logits, cache, pos = serve.prefill(cfg, params, batch, cache_len=S + N + 8)
+    print(f"prefill: {Bz}×{S} tokens in {time.time()-t0:.2f}s "
+          f"({args.arch} reduced)")
+
+    dstep = jax.jit(
+        lambda c, t, p: serve.decode_step(cfg, params, c, t, p))
+    cur = jnp.argmax(logits, -1)
+    out = [cur]
+    t0 = time.time()
+    npre = cfg.frontend.n_tokens if cfg.frontend else 0
+    for i in range(N - 1):
+        logits, cache = dstep(cache, cur, jnp.int32(npre + S + i))
+        cur = jnp.argmax(logits, -1)
+        out.append(cur)
+    dt = time.time() - t0
+    gen = jnp.stack(out, 1)
+    print(f"decoded {Bz}×{N} tokens in {dt:.2f}s "
+          f"({Bz*N/max(dt,1e-9):.1f} tok/s)")
+    for b in range(min(Bz, 2)):
+        print(f"  seq {b}: prompt[-6:]={prompts[b,-6:].tolist()} "
+              f"-> gen[:10]={gen[b,:10].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

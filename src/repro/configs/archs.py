@@ -1,0 +1,13 @@
+"""Imports every architecture config module, registering them all."""
+from repro.configs import (  # noqa: F401
+    command_r_plus_104b,
+    jamba_1_5_large_398b,
+    llama4_maverick_400b_a17b,
+    phi3_medium_14b,
+    phi_3_vision_4_2b,
+    qwen1_5_0_5b,
+    qwen2_moe_a2_7b,
+    qwen3_8b,
+    rwkv6_7b,
+    whisper_small,
+)

@@ -1,0 +1,258 @@
+"""Config system: architecture configs, layer patterns, input shapes.
+
+Every assigned architecture is a ``ArchConfig`` built from a repeating
+``group pattern`` of :class:`LayerSpec`s.  The decoder stack is ``lax.scan``
+over ``n_groups`` repetitions of the pattern, so the HLO is O(len(pattern))
+in depth, not O(n_layers).
+
+Block partitioning for ProFL (the paper's technique) is expressed at group
+granularity: ``block_boundaries`` lists the group index where each block
+starts; block ``t`` covers groups ``[b[t], b[t+1])``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer / sub-config dataclasses
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    """Mixture-of-experts FFN configuration (sort-based dropping router)."""
+
+    n_experts: int
+    top_k: int
+    d_expert: int  # per-expert hidden dim
+    n_shared: int = 0  # always-on shared experts (qwen2-moe style)
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+    def reduced(self) -> "MoECfg":
+        return dataclasses.replace(
+            self,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            d_expert=min(self.d_expert, 256),
+            n_shared=min(self.n_shared, 1),
+        )
+
+
+@dataclass(frozen=True)
+class SSMCfg:
+    """Mamba-style selective SSM dims (used by the jamba hybrid)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> d_model // 16
+    chunk: int = 256  # time chunk for the chunked selective scan
+
+
+@dataclass(frozen=True)
+class RWKVCfg:
+    """RWKV6 (Finch) token-mixing dims."""
+
+    head_dim: int = 64
+    decay_lora: int = 64  # low-rank dim of the data-dependent decay MLP
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside the repeating group pattern."""
+
+    mixer: str  # 'attn' | 'mamba' | 'rwkv'
+    ffn: str  # 'dense' | 'moe' | 'rwkv_cm' | 'none'
+
+
+@dataclass(frozen=True)
+class EncoderCfg:
+    """Encoder tower for enc-dec models (whisper). Frontend is a stub that
+    feeds precomputed frame embeddings of shape [B, n_frames, d_model]."""
+
+    n_layers: int
+    n_frames: int  # e.g. 1500 for whisper-small (30 s @ 50 Hz post-conv)
+
+
+@dataclass(frozen=True)
+class FrontendCfg:
+    """Stubbed modality frontend: precomputed embeddings + learned projector."""
+
+    kind: str  # 'vision' | 'audio'
+    n_tokens: int  # patches / frames prepended to the text sequence
+    embed_dim: int  # raw embedding dim coming out of the (stubbed) encoder
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    source: str  # citation (hf model card / arXiv)
+
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec("attn", "dense"),)
+
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    sliding_window: int = 0  # 0 = full attention (config-selectable variant)
+    parallel_block: bool = False  # cohere-style parallel attn+ffn residual
+    logit_soft_cap: float = 0.0
+
+    # norms / activations
+    norm: str = "rmsnorm"  # 'rmsnorm' | 'layernorm'
+    norm_eps: float = 1e-6
+    act: str = "swiglu"  # 'swiglu' | 'gelu'
+    attn_bias: bool = False  # bias on attention out proj (whisper)
+    mlp_bias: bool = False
+
+    tie_embeddings: bool = False
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    rwkv: Optional[RWKVCfg] = None
+    encoder: Optional[EncoderCfg] = None
+    frontend: Optional[FrontendCfg] = None
+
+    learned_pos: int = 0  # >0: learned positional embedding table (whisper)
+    long_decode_window: int = 8192  # sliding window used for long_500k decode
+    #   on archs whose native attention is full (see DESIGN.md)
+
+    # ProFL block partition (group granularity; see blocks.py)
+    n_prog_blocks: int = 4
+
+    # precision
+    param_dtype: str = "float32"
+
+    # preferred TRAINING layout on the production mesh: '2d' (FSDP×TP,
+    # required at >=100B for memory) or 'fsdp' (model axis joins data
+    # parallelism — roofline-driven choice for small/mid models whose
+    # per-layer compute cannot amortize TP collectives; EXPERIMENTS §Perf i9).
+    # Serving shapes always use '2d' (TP is the latency layout).
+    train_layout: str = "2d"
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_layers % len(self.pattern) != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"pattern length {len(self.pattern)}"
+            )
+
+    # ------------------------------------------------------------------
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def reduced(self, d_model: int = 256, vocab: int = 512) -> "ArchConfig":
+        """Smoke-test variant of the same family: <=2 pattern repeats,
+        d_model<=512, <=4 experts, small vocab."""
+        n_groups = min(self.n_groups, 2 if len(self.pattern) <= 4 else 1)
+        d_model = min(d_model, self.d_model)
+        n_heads = max(2, min(4, self.n_heads))
+        n_kv = 1 if self.n_kv_heads < self.n_heads else n_heads
+        head_dim = max(8, d_model // n_heads)
+        kw = dict(
+            name=self.name + "-smoke",
+            n_layers=n_groups * len(self.pattern),
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 2 * d_model),
+            vocab=min(self.vocab, vocab),
+            n_prog_blocks=min(self.n_prog_blocks, max(1, n_groups)),
+            param_dtype="float32",
+        )
+        if self.moe is not None:
+            kw["moe"] = self.moe.reduced()
+        if self.rwkv is not None:
+            kw["rwkv"] = RWKVCfg(head_dim=max(8, d_model // n_heads))
+            kw["n_heads"] = d_model // max(8, d_model // n_heads)
+            kw["n_kv_heads"] = kw["n_heads"]
+            kw["head_dim"] = max(8, d_model // n_heads)
+        if self.encoder is not None:
+            kw["encoder"] = EncoderCfg(n_layers=2, n_frames=16)
+        if self.frontend is not None:
+            kw["frontend"] = dataclasses.replace(
+                self.frontend, n_tokens=4, embed_dim=min(self.frontend.embed_dim, 64)
+            )
+        return self.with_(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> Sequence[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    # importing the modules registers their configs
+    from repro.configs import archs  # noqa: F401

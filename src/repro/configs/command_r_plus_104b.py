@@ -1,0 +1,29 @@
+"""command-r-plus-104b [dense] — Cohere Command-R family.
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000; GQA, no-bias,
+parallel attention/FFN residual block, tied embeddings, LayerNorm.
+[hf:CohereForAI/c4ai-command-r-v01]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="command-r-plus-104b",
+        family="dense",
+        source="hf:CohereForAI/c4ai-command-r-v01",
+        n_layers=64,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_ff=33792,
+        vocab=256_000,
+        parallel_block=True,
+        norm="layernorm",
+        norm_eps=1e-5,
+        act="swiglu",
+        rope_theta=75_000.0,
+        tie_embeddings=True,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+    )
+)

@@ -1,0 +1,41 @@
+"""jamba-1.5-large-398b [hybrid] — AI21 Jamba 1.5 Large.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536; Mamba:attention 1:7
+interleave, MoE 16 experts top-2 every other layer; no explicit positional
+encoding (the Mamba layers carry position). [arXiv:2403.19887]
+
+Group pattern (8 layers, 9 groups): attention leads the group, followed by 7
+Mamba layers; MoE FFN on every other layer.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoECfg, SSMCfg, register
+
+_P = (
+    LayerSpec("attn", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+)
+
+CONFIG = register(
+    ArchConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        source="arXiv:2403.19887",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab=65_536,
+        pattern=_P,
+        moe=MoECfg(n_experts=16, top_k=2, d_expert=24576),
+        ssm=SSMCfg(d_state=16, d_conv=4, expand=2),
+        use_rope=False,
+        n_prog_blocks=3,  # 9 groups -> 3 blocks of 3 groups (24 layers each)
+        param_dtype="bfloat16",
+    )
+)

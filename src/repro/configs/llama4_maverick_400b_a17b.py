@@ -1,0 +1,31 @@
+"""llama4-maverick-400b-a17b [moe] — Llama 4 Maverick.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048; MoE 128 experts
+top-1 interleaved every other layer (dense/MoE alternation, Maverick-style)
+with 1 shared expert; early-fusion multimodal (vision frontend stubbed per
+the assignment — this config is the language backbone).
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+"""
+from repro.configs.base import ArchConfig, FrontendCfg, LayerSpec, MoECfg, register
+
+CONFIG = register(
+    ArchConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=202_048,
+        pattern=(LayerSpec("attn", "dense"), LayerSpec("attn", "moe")),
+        moe=MoECfg(n_experts=128, top_k=1, d_expert=8192, n_shared=1),
+        rope_theta=500_000.0,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        # early fusion: the image-patch prepend path is exercised via the
+        # phi-3-vision config; this entry lowers the language backbone with
+        # the assigned text shapes (assignment: frontend is a stub).
+    )
+)

@@ -1,0 +1,23 @@
+"""The paper's own models (ResNet18/34, VGG11_bn/16_bn) as CNNConfig
+instances, plus the reduced variants used by the CPU-scale faithful
+reproduction experiments."""
+from repro.models.cnn import CNNConfig
+
+RESNET18 = CNNConfig("resnet18", n_classes=10, width_mult=1.0, in_size=32)
+RESNET34 = CNNConfig("resnet34", n_classes=10, width_mult=1.0, in_size=32)
+VGG11_BN = CNNConfig("vgg11", n_classes=10, width_mult=1.0, in_size=32)
+VGG16_BN = CNNConfig("vgg16", n_classes=10, width_mult=1.0, in_size=32)
+
+# CPU-scale variants for the FL simulation benchmarks (same family/partition,
+# reduced width + image size so hundreds of FedAvg rounds run on CPU)
+RESNET18_SMALL = CNNConfig("resnet18", n_classes=10, width_mult=0.25, in_size=16)
+RESNET34_SMALL = CNNConfig("resnet34", n_classes=10, width_mult=0.25, in_size=16)
+VGG11_SMALL = CNNConfig("vgg11", n_classes=10, width_mult=0.25, in_size=16)
+VGG16_SMALL = CNNConfig("vgg16", n_classes=10, width_mult=0.25, in_size=16)
+
+PAPER_CNNS = {
+    "resnet18": RESNET18,
+    "resnet34": RESNET34,
+    "vgg11_bn": VGG11_BN,
+    "vgg16_bn": VGG16_BN,
+}

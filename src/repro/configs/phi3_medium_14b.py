@@ -1,0 +1,24 @@
+"""phi3-medium-14b [dense] — Phi-3-medium.
+
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352; RoPE + SwiGLU +
+GQA. [arXiv:2404.14219]
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        source="arXiv:2404.14219",
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=10,
+        d_ff=17920,
+        vocab=100_352,
+        rope_theta=10_000.0,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        train_layout="fsdp",
+    )
+)

@@ -1,0 +1,29 @@
+"""phi-3-vision-4.2b [vlm] — Phi-3-vision (128k instruct).
+
+32L d_model=3072 32H (MHA kv=32) d_ff=8192 vocab=32064; phi3-mini backbone +
+CLIP ViT-L/14 vision encoder.  The vision tower is a STUB per the
+assignment: ``input_specs`` feeds precomputed patch embeddings
+[B, 576, 1024]; the learned projector (1024 -> d_model) is part of this
+model and is trained with ProFL block 1.
+[hf:microsoft/Phi-3-vision-128k-instruct]
+"""
+from repro.configs.base import ArchConfig, FrontendCfg, register
+
+CONFIG = register(
+    ArchConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        source="hf:microsoft/Phi-3-vision-128k-instruct",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab=32_064,
+        frontend=FrontendCfg(kind="vision", n_tokens=576, embed_dim=1024),
+        rope_theta=10_000.0,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        train_layout="fsdp",
+    )
+)

@@ -1,0 +1,26 @@
+"""qwen1.5-0.5b [dense] — Qwen1.5-0.5B.
+
+24L d_model=1024 16H (MHA, kv=16) d_ff=2816 vocab=151936; QKV bias, tied
+embeddings. [hf:Qwen/Qwen1.5-0.5B]
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="qwen1.5-0.5b",
+        family="dense",
+        source="hf:Qwen/Qwen1.5-0.5B",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=2816,
+        vocab=151_936,
+        qkv_bias=True,
+        tie_embeddings=True,
+        rope_theta=1_000_000.0,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        train_layout="fsdp",
+    )
+)

@@ -1,0 +1,28 @@
+"""qwen2-moe-a2.7b [moe] — Qwen1.5-MoE-A2.7B.
+
+24L d_model=2048 16H (GQA kv=16, i.e. MHA) d_expert=1408 vocab=151936;
+60 routed experts top-4 + 4 shared experts, QKV bias.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoECfg, register
+
+CONFIG = register(
+    ArchConfig(
+        name="qwen2-moe-a2.7b",
+        family="moe",
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab=151_936,
+        pattern=(LayerSpec("attn", "moe"),),
+        moe=MoECfg(n_experts=60, top_k=4, d_expert=1408, n_shared=4),
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        train_layout="fsdp",
+    )
+)

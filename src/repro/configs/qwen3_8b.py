@@ -1,0 +1,26 @@
+"""qwen3-8b [dense] — Qwen3-8B.
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936; qk_norm (RMSNorm on
+per-head q/k), head_dim=128, no QKV bias. [hf:Qwen/Qwen3-8B]
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="qwen3-8b",
+        family="dense",
+        source="hf:Qwen/Qwen3-8B",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=12288,
+        vocab=151_936,
+        head_dim=128,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        train_layout="fsdp",
+    )
+)

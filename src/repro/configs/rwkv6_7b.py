@@ -1,0 +1,31 @@
+"""rwkv6-7b [ssm] — RWKV-6 "Finch" 7B.
+
+32L d_model=4096 (attention-free, 64 heads of 64) d_ff=14336 vocab=65536;
+data-dependent per-channel decay, token-shift, channel-mix FFN, per-head
+groupnorm.  O(1)-in-seq decode state makes this the native long_500k arch.
+[arXiv:2404.05892]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, RWKVCfg, register
+
+CONFIG = register(
+    ArchConfig(
+        name="rwkv6-7b",
+        family="ssm",
+        source="arXiv:2404.05892",
+        n_layers=32,
+        d_model=4096,
+        n_heads=64,  # d_model / rwkv head_dim
+        n_kv_heads=64,
+        head_dim=64,
+        d_ff=14336,
+        vocab=65_536,
+        pattern=(LayerSpec("rwkv", "rwkv_cm"),),
+        rwkv=RWKVCfg(head_dim=64, decay_lora=64),
+        norm="layernorm",
+        norm_eps=1e-5,
+        use_rope=False,
+        n_prog_blocks=4,
+        param_dtype="bfloat16",
+        train_layout="fsdp",
+    )
+)

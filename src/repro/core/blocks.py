@@ -1,0 +1,113 @@
+"""Block partitioning (paper §3.1): divide the model into T blocks along
+depth, at group granularity for transformer stacks (a block is a contiguous
+range of scan groups) and at the paper's stage boundaries for the CNNs.
+
+Ownership:
+* transformer block 1 owns the embedding (+ projector / encoder tower),
+  matching the paper where the stem belongs to the first block;
+* the final norm + LM head are the θ_L component of the *output module* and
+  are trained at every step (paper §3.2: θ_op = [conv proxies..., θ_L]).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def group_boundaries(n_groups: int, n_blocks: int) -> List[int]:
+    """Split ``n_groups`` into ``n_blocks`` contiguous ranges; earlier blocks
+    get the remainder (paper splits by architecture stages; for uniform
+    transformer stacks an even split is the natural analogue)."""
+    n_blocks = min(n_blocks, n_groups)
+    base, rem = divmod(n_groups, n_blocks)
+    out = [0]
+    for b in range(n_blocks):
+        out.append(out[-1] + base + (1 if b < rem else 0))
+    return out
+
+
+def boundaries(cfg: ArchConfig) -> List[int]:
+    return group_boundaries(cfg.n_groups, cfg.n_prog_blocks)
+
+
+def n_blocks(cfg: ArchConfig) -> int:
+    return len(boundaries(cfg)) - 1
+
+
+def slice_groups(layer_params: list, g0: int, g1: int) -> list:
+    """Slice every slot's stacked leaves to groups [g0, g1)."""
+    return [jax.tree.map(lambda a: a[g0:g1], slot) for slot in layer_params]
+
+
+def merge_groups(full_layers: list, block_layers: list, g0: int) -> list:
+    """Write a block's (updated) groups back into the full stack."""
+
+    def put(full, part):
+        return full.at[g0 : g0 + part.shape[0]].set(part.astype(full.dtype))
+
+    return [
+        jax.tree.map(put, full_slot, part_slot)
+        for full_slot, part_slot in zip(full_layers, block_layers)
+    ]
+
+
+def split_model(cfg: ArchConfig, params: dict, t: int) -> Tuple[dict, dict]:
+    """Partition full-model params into (frozen_prefix, trainable_block) for
+    growing/shrinking step ``t`` (0-indexed block id).
+
+    frozen:  embed/projector/encoder (if t>0) + layer groups [0, b[t])
+    active:  layer groups [b[t], b[t+1])  (+ embed etc. when t == 0)
+    The head/final_norm are NOT here — they live in the output module.
+    """
+    bs = boundaries(cfg)
+    g0, g1 = bs[t], bs[t + 1]
+    stem = {k: params[k] for k in ("embed", "projector", "encoder") if k in params}
+    frozen = {"layers": slice_groups(params["layers"], 0, g0)}
+    active = {"layers": slice_groups(params["layers"], g0, g1)}
+    if t == 0:
+        active.update(stem)
+    else:
+        frozen.update(stem)
+    return frozen, active
+
+
+def block_param_count(cfg: ArchConfig, params: dict, t: int) -> int:
+    _, active = split_model(cfg, params, t)
+    return sum(x.size for x in jax.tree.leaves(active))
+
+
+def merge_block_into(cfg: ArchConfig, params: dict, active: dict, t: int) -> dict:
+    """Write trained block-t params back into the full model tree."""
+    bs = boundaries(cfg)
+    out = dict(params)
+    out["layers"] = merge_groups(params["layers"], active["layers"], bs[t])
+    for k in ("embed", "projector", "encoder"):
+        if k in active:
+            out[k] = active[k]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper models): blocks are explicit lists already
+# ---------------------------------------------------------------------------
+
+
+def cnn_split(params: dict, t: int) -> Tuple[dict, dict]:
+    """(frozen blocks [0,t), active block t). Head lives in the output
+    module (paper: θ_L)."""
+    return (
+        {"blocks": params["blocks"][:t]},
+        {"blocks": [params["blocks"][t]]},
+    )
+
+
+def cnn_merge(params: dict, active: dict, t: int) -> dict:
+    out = dict(params)
+    blocks = list(params["blocks"])
+    blocks[t] = active["blocks"][0]
+    out["blocks"] = blocks
+    return out

@@ -1,0 +1,70 @@
+"""The "Map" operation (paper §3.2 / Fig. 3): after a block converges during
+progressive model shrinking, integrate its learned function into its proxy
+layer via knowledge distillation — the proxy is trained to match the block's
+output features on (client-local) data, so no public dataset is needed.
+
+The distillation itself runs federated (clients compute the MSE on their own
+data against the frozen teacher block); the server aggregates proxy params
+with the same FedAvg as ordinary rounds.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import output_module as OM
+from repro.core import progressive as P
+from repro.models import cnn as C
+from repro.models import transformer as T
+
+sg = jax.lax.stop_gradient
+
+
+def cnn_map_loss(cfg: C.CNNConfig, t: int, ratio: float = 1.0) -> Callable:
+    """MSE between proxy_t(features_in) and block_t(features_in).
+
+    features_in = output of blocks [0, t) (frozen prefix); the teacher block
+    runs with batch-stat BN and stop_gradient."""
+
+    def loss_fn(proxy, frozen_prefix, teacher_block, bn_state, xb):
+        x = xb
+        for bi in range(t):
+            x, _ = P.apply_cnn_block(
+                cfg, bi, sg(frozen_prefix["blocks"][bi]),
+                bn_state["blocks"][bi], x, True, ratio,
+            )
+        x = sg(x)
+        y_teacher, _ = P.apply_cnn_block(
+            cfg, t, sg(teacher_block["blocks"][0]), bn_state["blocks"][t], x, True,
+            ratio,
+        )
+        y_student = OM.apply_cnn_proxy(cfg, t, proxy, x)
+        return jnp.mean(jnp.square(y_student - sg(y_teacher)))
+
+    return loss_fn
+
+
+def tf_map_loss(cfg: ArchConfig, t: int) -> Callable:
+    """Transformer analogue: proxy_t mimics block_t's residual update."""
+
+    def loss_fn(proxy, frozen, teacher_active, batch):
+        stem = teacher_active if t == 0 else frozen
+        x, positions, _ = T.embed_inputs(cfg, sg(stem), batch)
+        enc = None
+        if cfg.encoder is not None:
+            enc = T.encode(cfg, sg(stem), batch["frames"])
+        if frozen["layers"] and frozen["layers"][0]:
+            x, _ = T.run_layers(cfg, sg(frozen["layers"]), x, positions, enc, remat=False)
+        x = sg(x)
+        y_teacher, _ = T.run_layers(
+            cfg, sg(teacher_active["layers"]), x, positions, enc, remat=False
+        )
+        y_student = OM.apply_tf_proxy(cfg, proxy, x)
+        return jnp.mean(jnp.square(
+            y_student.astype(jnp.float32) - sg(y_teacher).astype(jnp.float32)
+        ))
+
+    return loss_fn

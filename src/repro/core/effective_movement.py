@@ -1,0 +1,103 @@
+"""Effective movement (paper §3.3) + block-freezing determination.
+
+Per evaluation step k, for the active block's flattened scalars:
+
+    U_k       = p_k - p_{k-1}
+    net_H     = Σ_{h<H} U_{k-h}          (windowed net movement per scalar)
+    EM_k      = Σ_s |net_H,s|  /  Σ_s Σ_{h<H} |U_{k-h,s}|   ∈ [0, 1]
+
+EM ≈ 1 while scalars move consistently toward the optimum; EM → 0 when they
+oscillate around it.  The server fits a least-squares line to the EM series
+and freezes the block once the |slope| stays below φ for W consecutive
+evaluations (with EM itself below an absolute level, so the high flat EM of
+early training does not trigger).
+
+Implementation: tumbling windows of H updates with an O(1)-memory net-
+movement accumulator, maintained by the fused Pallas pass
+(kernels/effective_movement.py) — one HBM sweep per round per block.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def flatten_params(tree) -> jax.Array:
+    leaves = [jnp.ravel(x) for x in jax.tree.leaves(tree)]
+    return jnp.concatenate(leaves) if leaves else jnp.zeros((0,))
+
+
+@dataclass
+class EMConfig:
+    window_h: int = 5  # H: updates per EM window
+    slope_phi: float = 0.004  # φ: |slope| threshold
+    patience_w: int = 3  # W: consecutive below-threshold evals to freeze
+    fit_points: int = 6  # EM points used in the least-squares fit
+    em_level: float = 0.5  # EM must also be below this absolute level
+    min_rounds: int = 10  # don't freeze before this many rounds
+
+
+@dataclass
+class EMState:
+    prev: jax.Array  # p_{k-1} flattened
+    net: jax.Array  # running Σ U within the current window (f32)
+    path: float = 0.0  # running Σ|U| within the current window
+    k: int = 0  # updates seen in the current window
+    history: List[float] = field(default_factory=list)  # EM per window
+    rounds: int = 0
+    below: int = 0  # consecutive below-threshold evaluations
+
+
+def em_init(params) -> EMState:
+    p = flatten_params(params)
+    return EMState(prev=p, net=jnp.zeros_like(p, jnp.float32))
+
+
+def em_update(cfg: EMConfig, st: EMState, params) -> Optional[float]:
+    """Feed one aggregated update; returns the EM value when a window
+    completes, else None."""
+    p_new = flatten_params(params)
+    net, path_inc, net_abs = ops.effective_movement_update(p_new, st.prev, st.net)
+    st.prev = p_new
+    st.net = net
+    st.path += float(path_inc)
+    st.k += 1
+    st.rounds += 1
+    if st.k < cfg.window_h:
+        return None
+    em = float(net_abs) / max(st.path, 1e-12)
+    st.history.append(em)
+    st.net = jnp.zeros_like(st.net)
+    st.path = 0.0
+    st.k = 0
+    return em
+
+
+def slope(history: List[float], n: int) -> float:
+    """Least-squares slope over the last n EM points (paper: linear
+    least-squares regression [36])."""
+    ys = np.asarray(history[-n:], dtype=np.float64)
+    if len(ys) < 2:
+        return float("inf")
+    xs = np.arange(len(ys), dtype=np.float64)
+    xm, ym = xs.mean(), ys.mean()
+    denom = ((xs - xm) ** 2).sum()
+    return float(((xs - xm) * (ys - ym)).sum() / max(denom, 1e-12))
+
+
+def should_freeze(cfg: EMConfig, st: EMState) -> bool:
+    """Called after each em_update that produced a window value."""
+    if st.rounds < cfg.min_rounds or len(st.history) < 2:
+        return False
+    s = slope(st.history, cfg.fit_points)
+    if abs(s) < cfg.slope_phi and st.history[-1] < cfg.em_level:
+        st.below += 1
+    else:
+        st.below = 0
+    return st.below >= cfg.patience_w

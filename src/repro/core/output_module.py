@@ -1,0 +1,142 @@
+"""Output modules (paper §3.2): per-step heads that let a depth-truncated
+sub-model train end-to-end while PRESERVING each block's position in the
+feature hierarchy.
+
+Paper (CNNs): the blocks behind the active one are each replaced by ONE conv
+layer that mimics that block's spatial downsampling and channel growth; the
+proxies + a single fc form θ_op.  After a block converges during shrinking,
+its knowledge is distilled into its proxy ("Map").
+
+Transformer adaptation (DESIGN.md §2): a block's proxy is one residual
+norm+MLP layer at d_ff = d_model (a cheap stand-in keeping depth position);
+θ_L is the final norm + LM head.  Same shrinking/growing mechanics.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import blocks as B
+from repro.models import cnn as C
+from repro.models import layers as L
+
+
+# ===========================================================================
+# CNN proxies
+# ===========================================================================
+
+
+def init_cnn_proxy(cfg: C.CNNConfig, rng, t: int, ratio: float = 1.0) -> dict:
+    """Proxy conv for prog-block ``t``: 3x3 conv with the block's total
+    stride and channel growth + BN (+relu in apply)."""
+    chans = [3] + C.block_out_channels(cfg, ratio)
+    cin, cout = chans[t], chans[t + 1]
+    return {
+        "conv": jax.random.normal(rng, (3, 3, cin, cout), jnp.float32)
+        * math.sqrt(2.0 / (9 * cin)),
+        "bn": {"scale": jnp.ones((cout,)), "bias": jnp.zeros((cout,))},
+    }
+
+
+def cnn_proxy_stride(cfg: C.CNNConfig, t: int) -> int:
+    sizes = [cfg.in_size] + C.block_spatial_sizes(cfg)
+    return max(1, sizes[t] // sizes[t + 1])
+
+
+def apply_cnn_proxy(cfg: C.CNNConfig, t: int, p: dict, x: jax.Array) -> jax.Array:
+    s = cnn_proxy_stride(cfg, t)
+    x = jax.lax.conv_general_dilated(
+        x, p["conv"], (s, s), "SAME", dimension_numbers=C.DN
+    )
+    # proxy BN uses batch stats only (it is a transient training scaffold)
+    mu = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    x = (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["bn"]["scale"] + p["bn"]["bias"]
+    return jax.nn.relu(x)
+
+
+def init_cnn_output_module(
+    cfg: C.CNNConfig, rng, t: int, head_params: dict, ratio: float = 1.0
+) -> dict:
+    """θ_op for step t: proxies for blocks t+1..T-1 + θ_L (the classifier).
+    For the last step it is exactly the real classifier."""
+    T = cfg.n_prog_blocks
+    proxies = [
+        init_cnn_proxy(cfg, jax.random.fold_in(rng, b), b, ratio)
+        for b in range(t + 1, T)
+    ]
+    return {"proxies": proxies, "head": head_params}
+
+
+def apply_cnn_output_module(
+    cfg: C.CNNConfig, t: int, op: dict, feats: jax.Array
+) -> jax.Array:
+    T = cfg.n_prog_blocks
+    x = feats
+    for i, b in enumerate(range(t + 1, T)):
+        x = apply_cnn_proxy(cfg, b, op["proxies"][i], x)
+    return C.head_logits({"head": op["head"]}, x)
+
+
+# ===========================================================================
+# Transformer proxies
+# ===========================================================================
+
+
+def init_tf_proxy(cfg: ArchConfig, rng) -> dict:
+    """One residual norm+MLP proxy layer (d_ff = d_model)."""
+    pcfg = cfg.with_(act="swiglu", d_ff=cfg.d_model)
+    return {
+        "norm": L.init_norm(cfg, cfg.d_model, jnp.dtype(cfg.param_dtype)),
+        "mlp": L.init_mlp(pcfg, rng, d_ff=cfg.d_model),
+    }
+
+
+def apply_tf_proxy(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    pcfg = cfg.with_(act="swiglu")
+    return x + L.apply_mlp(pcfg, p["mlp"], L.apply_norm(cfg, p["norm"], x))
+
+
+def init_tf_output_module(cfg: ArchConfig, rng, t: int, params: dict) -> dict:
+    """θ_op for transformer step t: proxies for blocks t+1..T-1 + final norm
+    + head (tied-embedding archs share the embed matrix — the head entry is
+    then absent and logits use the frozen/active embed)."""
+    T = B.n_blocks(cfg)
+    op = {
+        "proxies": [
+            init_tf_proxy(cfg, jax.random.fold_in(rng, 555_000 + b))
+            for b in range(t + 1, T)
+        ],
+        "final_norm": params["final_norm"],
+    }
+    if not cfg.tie_embeddings:
+        op["head"] = params["head"]
+    return op
+
+
+def apply_tf_output_module_hidden(
+    cfg: ArchConfig, op: dict, x: jax.Array
+) -> jax.Array:
+    """Proxies + final norm (everything before the LM head matmul)."""
+    for p in op["proxies"]:
+        x = apply_tf_proxy(cfg, p, x)
+    return L.apply_norm(cfg, op["final_norm"], x)
+
+
+def tf_output_head_w(cfg: ArchConfig, op: dict, embed_tok=None) -> jax.Array:
+    return embed_tok.T if cfg.tie_embeddings else op["head"]["w"]
+
+
+def apply_tf_output_module(
+    cfg: ArchConfig, op: dict, x: jax.Array, embed_tok: Optional[jax.Array] = None
+) -> jax.Array:
+    x = apply_tf_output_module_hidden(cfg, op, x)
+    w = tf_output_head_w(cfg, op, embed_tok)
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_soft_cap > 0:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits

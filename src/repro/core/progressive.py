@@ -1,0 +1,217 @@
+"""Progressive training paradigm (paper §3.1–3.2): sub-model assembly for
+both stages, and train-step factories.
+
+A step-``t`` sub-model is  [frozen prefix 0..t-1 | active block t | θ_op]:
+
+* **shrinking** (t = T-1 → 1): the prefix is frozen at its *initial* values;
+  after block t converges its params become θ_t^ini and the block is
+  distilled into proxy_t (core/distill.py), which then serves inside θ_op of
+  step t-1 — and later inside θ_op of growing step t-1.
+* **growing** (t = 0 → T-1): the prefix is frozen at its *converged* values;
+  block t is initialized from θ_t^ini; θ_op reuses the shrinking proxies.
+
+The frozen prefix runs under ``stop_gradient`` with remat disabled — XLA
+DCEs its saved residuals, so no backward pass and no stored activations:
+this is exactly the paper's memory saving, visible in the compiled
+``memory_analysis()`` (EXPERIMENTS.md §Dry-run).
+
+Both the transformer path (at-scale, pjit) and the CNN path (the paper's
+faithful FL simulation) are built here from the same blocks/output-module
+machinery.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import blocks as B
+from repro.core import output_module as OM
+from repro.models import cnn as C
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.train.optimizer import Optimizer
+from repro.train.train_step import MOE_AUX_COEF, softmax_xent
+
+sg = jax.lax.stop_gradient
+
+
+# ===========================================================================
+# Transformer sub-model
+# ===========================================================================
+
+
+def submodel_init(cfg: ArchConfig, params: dict, rng, t: int) -> Tuple[dict, dict]:
+    """(frozen, trainable) trees for step t. trainable = {'active', 'op'}."""
+    frozen, active = B.split_model(cfg, params, t)
+    op = OM.init_tf_output_module(cfg, rng, t, params)
+    return frozen, {"active": active, "op": op}
+
+
+def submodel_forward(
+    cfg: ArchConfig,
+    frozen: dict,
+    trainable: dict,
+    batch: dict,
+    t: int,
+    *,
+    remat_active: bool = True,
+    window_override: Optional[int] = None,
+    return_hidden: bool = False,
+):
+    """Forward of the step-t sub-model. Returns (logits_or_hidden, moe_aux,
+    n_prefix); with ``return_hidden`` the output-module proxies + final norm
+    are applied but the LM-head matmul is left to the (blockwise) loss."""
+    fro = jax.tree.map(sg, frozen)
+    active, op = trainable["active"], trainable["op"]
+    stem = active if t == 0 else fro  # embed/projector/encoder owner
+
+    x, positions, n_prefix = T.embed_inputs(cfg, stem, batch)
+    enc = None
+    if cfg.encoder is not None:
+        enc = T.encode(cfg, stem, batch["frames"])
+
+    if fro["layers"] and fro["layers"][0]:
+        n_frozen_groups = jax.tree.leaves(fro["layers"][0])[0].shape[0]
+    else:
+        n_frozen_groups = 0
+    if n_frozen_groups:
+        # frozen prefix: no remat — stop_gradient means XLA keeps nothing
+        x, _ = T.run_layers(
+            cfg, fro["layers"], x, positions, enc,
+            remat=False, window_override=window_override,
+        )
+        x = sg(x)
+    x, aux = T.run_layers(
+        cfg, active["layers"], x, positions, enc,
+        remat=remat_active, window_override=window_override,
+    )
+    if return_hidden:
+        return OM.apply_tf_output_module_hidden(cfg, op, x), aux, n_prefix
+    embed_tok = stem["embed"]["tok"] if cfg.tie_embeddings else None
+    logits = OM.apply_tf_output_module(cfg, op, x, embed_tok)
+    return logits, aux, n_prefix
+
+
+def make_progressive_loss(
+    cfg: ArchConfig, t: int, *, window_override: Optional[int] = None
+) -> Callable:
+    from repro.train.train_step import blockwise_lm_xent
+
+    def loss_fn(trainable, frozen, batch):
+        hidden, aux, npre = submodel_forward(
+            cfg, frozen, trainable, batch, t,
+            window_override=window_override, return_hidden=True,
+        )
+        stem = trainable["active"] if t == 0 else frozen
+        w = OM.tf_output_head_w(
+            cfg, trainable["op"],
+            sg(stem["embed"]["tok"]) if cfg.tie_embeddings and t != 0
+            else (stem["embed"]["tok"] if cfg.tie_embeddings else None),
+        )
+        xent = blockwise_lm_xent(cfg, w, hidden, batch["tokens"], npre)
+        return xent + MOE_AUX_COEF * aux, {"xent": xent, "moe_aux": aux}
+
+    return loss_fn
+
+
+def make_progressive_train_step(
+    cfg: ArchConfig,
+    opt: Optimizer,
+    t: int,
+    *,
+    window_override: Optional[int] = None,
+) -> Callable:
+    """Step-t train step: state = {'params': trainable, 'opt', 'step'};
+    the frozen prefix rides along in the batch-side args (it is NOT part of
+    the optimizer state — no moments, no updates: the memory claim)."""
+    loss_fn = make_progressive_loss(cfg, t, window_override=window_override)
+
+    def train_step(state: dict, frozen: dict, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], frozen, batch
+        )
+        new_params, new_opt = opt.update(
+            grads, state["opt"], state["params"], state["step"]
+        )
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            dict(metrics, loss=loss),
+        )
+
+    return train_step
+
+
+# ===========================================================================
+# CNN sub-model (the paper's faithful path)
+# ===========================================================================
+
+
+def apply_cnn_block(cfg: C.CNNConfig, t: int, block_params, block_state, x, train,
+                    ratio: float = 1.0):
+    plan = C.build_plan(cfg, ratio)[t]
+    new_bs = []
+    for u, p, s in zip(plan, block_params, block_state):
+        x, ns = C._apply_unit(u, p, s, x, train)
+        new_bs.append(ns)
+    return x, new_bs
+
+
+def cnn_submodel_forward(
+    cfg: C.CNNConfig,
+    frozen: dict,  # {'blocks': [...t blocks...]}
+    trainable: dict,  # {'active': {'blocks': [block_t]}, 'op': output module}
+    bn_state: dict,  # full bn state tree {'blocks': [...]}
+    x: jax.Array,
+    t: int,
+    *,
+    train: bool = True,
+    ratio: float = 1.0,
+):
+    """Returns (logits, new_bn_state)."""
+    fro = jax.tree.map(sg, frozen)
+    new_state = {"blocks": list(bn_state["blocks"])}
+    for bi in range(t):
+        x, nbs = apply_cnn_block(
+            cfg, bi, fro["blocks"][bi], bn_state["blocks"][bi], x, train, ratio
+        )
+        new_state["blocks"][bi] = nbs
+    x = sg(x)
+    x, nbs = apply_cnn_block(
+        cfg, t, trainable["active"]["blocks"][0], bn_state["blocks"][t], x, train,
+        ratio,
+    )
+    new_state["blocks"][t] = nbs
+    logits = OM.apply_cnn_output_module(cfg, t, trainable["op"], x)
+    return logits, new_state
+
+
+def cnn_submodel_loss(cfg: C.CNNConfig, t: int, ratio: float = 1.0) -> Callable:
+    def loss_fn(trainable, frozen, bn_state, xb, yb):
+        logits, new_state = cnn_submodel_forward(
+            cfg, frozen, trainable, bn_state, xb, t, train=True, ratio=ratio
+        )
+        return softmax_xent(logits, yb), new_state
+
+    return loss_fn
+
+
+# ===========================================================================
+# Schedule
+# ===========================================================================
+
+
+def schedule(n_blocks: int, use_shrinking: bool = True):
+    """Yields (stage, t) over the whole ProFL run.
+
+    Shrinking trains blocks T-1 .. 1 (block 0 needs no proxy/init — growing
+    starts there), then growing trains 0 .. T-1.  With ``use_shrinking=False``
+    (the paper's low-communication variant, §4.6) only the growing stage
+    runs, with randomly initialized output modules."""
+    if use_shrinking:
+        for t in range(n_blocks - 1, 0, -1):
+            yield ("shrink", t)
+    for t in range(n_blocks):
+        yield ("grow", t)

@@ -1,0 +1,316 @@
+"""The paper's four baselines (§4.1), sharing the ProFL client machinery:
+
+* AllSmall    — global model width-scaled to the minimum client memory.
+* ExclusiveFL — only clients that can train the full model participate
+                (returns NA when none can, as in the paper's ResNet34/VGG16).
+* HeteroFL    — static width scaling per client; channel-sliced sub-models;
+                masked weighted aggregation.
+* DepthFL     — depth scaling per client with a classifier per block and
+                accompanied objectives; ensemble inference.  (The optional
+                mutual self-distillation term of DepthFL is omitted — noted
+                in DESIGN.md; the paper's comparison point stands.)
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import progressive as P
+from repro.fl import client as CL
+from repro.fl import data as DATA
+from repro.fl import memory_model as MM
+from repro.fl.server import FLConfig
+from repro.models import cnn as C
+from repro.train.train_step import softmax_xent
+
+RATIOS = (1.0, 0.5, 0.25, 0.125, 0.0625)
+
+_LOSS_CACHE: dict = {}
+
+
+def _full_loss(cfg: C.CNNConfig, ratio: float):
+    key = ("full", cfg, ratio)
+    if key not in _LOSS_CACHE:
+
+        def loss_fn(trainable, frozen, bn_state, xb, yb):
+            logits, new_bn = C.forward_cnn(
+                cfg, trainable, bn_state, xb, train=True, ratio=ratio
+            )
+            return softmax_xent(logits, yb), new_bn
+
+        _LOSS_CACHE[key] = loss_fn
+    return _LOSS_CACHE[key]
+
+
+class _Runner:
+    """Shared cohort plumbing for baseline loops."""
+
+    def __init__(self, cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets):
+        self.cfg, self.fl = cfg, fl
+        self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
+        self.parts, self.budgets = parts, budgets
+        self.rng = np.random.default_rng(fl.seed)
+        self._key = jax.random.PRNGKey(fl.seed + 1)
+
+    def next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def cohort(self, sel):
+        xs, ys, w = [], [], []
+        for cid in sel:
+            xb, yb = DATA.client_batch(
+                self.xtr, self.ytr, self.parts[cid], self.fl.n_local_fixed, self.rng
+            )
+            xs.append(xb)
+            ys.append(yb)
+            w.append(len(self.parts[cid]))
+        return (
+            jnp.asarray(np.stack(xs)),
+            jnp.asarray(np.stack(ys)),
+            jnp.asarray(np.array(w, np.float32)),
+        )
+
+
+# ===========================================================================
+# AllSmall
+# ===========================================================================
+
+
+def run_allsmall(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
+    r = next((x for x in RATIOS if MM.full_train_memory_mb(cfg, ratio=x)
+              <= budgets.min()), RATIOS[-1])
+    R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+    params, bn = C.init_cnn(cfg, R.next_key(), r * fl.ratio)
+    loss_fn = _full_loss(cfg, r * fl.ratio)
+    accs = []
+    for _ in range(rounds):
+        sel = R.rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
+        xs, ys, w = R.cohort(sel)
+        rngs = jax.random.split(R.next_key(), len(sel))
+        params, bn, _ = CL.cohort_round(
+            loss_fn, params, {}, bn, xs, ys, rngs, w,
+            lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
+        )
+        accs.append(_acc_full(cfg, params, bn, xte, yte, r * fl.ratio))
+    return {"acc": float(np.mean(accs[-10:])), "pr": 1.0, "ratio": r,
+            "curve": accs}
+
+
+# ===========================================================================
+# ExclusiveFL
+# ===========================================================================
+
+
+def run_exclusivefl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
+    elig = MM.eligible(budgets, MM.full_train_memory_mb(cfg))
+    pr = len(elig) / fl.n_clients
+    if len(elig) == 0:
+        return {"acc": None, "pr": 0.0}  # NA — paper Tables 1–2
+    R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+    params, bn = C.init_cnn(cfg, R.next_key(), fl.ratio)
+    loss_fn = _full_loss(cfg, fl.ratio)
+    accs = []
+    for _ in range(rounds):
+        sel = R.rng.choice(elig, min(fl.clients_per_round, len(elig)),
+                           replace=False)
+        xs, ys, w = R.cohort(sel)
+        rngs = jax.random.split(R.next_key(), len(sel))
+        params, bn, _ = CL.cohort_round(
+            loss_fn, params, {}, bn, xs, ys, rngs, w,
+            lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
+        )
+        accs.append(_acc_full(cfg, params, bn, xte, yte, fl.ratio))
+    return {"acc": float(np.mean(accs[-10:])), "pr": pr, "curve": accs}
+
+
+# ===========================================================================
+# HeteroFL
+# ===========================================================================
+
+
+def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
+    levels = np.array([
+        MM.width_ratio_for_budget(cfg, b, RATIOS[:-1]) or RATIOS[-1]
+        for b in budgets
+    ])
+    R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+    params, bn = C.init_cnn(cfg, R.next_key(), fl.ratio)  # global (full width)
+    templates = {
+        r: C.init_cnn(cfg, jax.random.PRNGKey(0), r * fl.ratio)
+        for r in sorted(set(levels.tolist()))
+    }
+    accs = []
+    for _ in range(rounds):
+        sel = R.rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
+        num = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), params)
+        den = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), params)
+        bn_new = None
+        for r in sorted(set(levels[sel].tolist())):
+            group = sel[levels[sel] == r]
+            sub_t, sub_bn_t = templates[r]
+            sub = C.slice_cnn_params(params, sub_t)
+            sub_bn = C.slice_cnn_params(bn, sub_bn_t)
+            xs, ys, w = R.cohort(group)
+            rngs = jax.random.split(R.next_key(), len(group))
+            loss_fn = _full_loss(cfg, r * fl.ratio)
+            sub, sub_bn, _ = CL.cohort_round(
+                loss_fn, sub, {}, sub_bn, xs, ys, rngs, w,
+                lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
+            )
+            wsum = float(np.sum([len(parts[c]) for c in group]))
+            padded, mask = C.scatter_cnn_params(params, sub)
+            num = jax.tree.map(lambda n, p: n + wsum * p.astype(jnp.float32),
+                               num, padded)
+            den = jax.tree.map(lambda d, m: d + wsum * m, den, mask)
+            if r == max(levels[sel]):  # widest group defines bn stats
+                bn_pad, bn_mask = C.scatter_cnn_params(bn, sub_bn)
+                bn_new = jax.tree.map(
+                    lambda old, newp, m: jnp.where(m > 0, newp, old),
+                    bn, bn_pad, bn_mask,
+                )
+        params = jax.tree.map(
+            lambda old, n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-9), old)
+            .astype(old.dtype),
+            params, num, den,
+        )
+        if bn_new is not None:
+            bn = bn_new
+        accs.append(_acc_full(cfg, params, bn, xte, yte, fl.ratio))
+    return {"acc": float(np.mean(accs[-10:])), "pr": 1.0,
+            "levels": levels.tolist(), "curve": accs}
+
+
+# ===========================================================================
+# DepthFL
+# ===========================================================================
+
+
+def _init_depth_heads(cfg, rng, ratio):
+    chans = C.block_out_channels(cfg, ratio)
+    return [
+        {
+            "w": jax.random.normal(jax.random.fold_in(rng, b), (c, cfg.n_classes))
+            / np.sqrt(c),
+            "b": jnp.zeros((cfg.n_classes,)),
+        }
+        for b, c in enumerate(chans)
+    ]
+
+
+def _depth_loss(cfg: C.CNNConfig, depth: int, ratio: float):
+    key = ("depth", cfg, depth, ratio)
+    if key not in _LOSS_CACHE:
+
+        def loss_fn(trainable, frozen, bn_state, xb, yb):
+            x = xb
+            loss = 0.0
+            new_bn = {"blocks": list(bn_state["blocks"])}
+            for bi in range(depth):
+                x, nbs = P.apply_cnn_block(
+                    cfg, bi, trainable["blocks"][bi], bn_state["blocks"][bi],
+                    x, True, ratio,
+                )
+                new_bn["blocks"][bi] = nbs
+                h = trainable["heads"][bi]
+                logits = jnp.mean(x, axis=(1, 2)) @ h["w"] + h["b"]
+                loss = loss + softmax_xent(logits, yb)
+            return loss / depth, new_bn
+
+        _LOSS_CACHE[key] = loss_fn
+    return _LOSS_CACHE[key]
+
+
+def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
+    depths = np.array([MM.depth_for_budget(cfg, b) for b in budgets])
+    pr = float(np.mean(depths > 0))
+    R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
+    params, bn = C.init_cnn(cfg, R.next_key(), fl.ratio)
+    heads = _init_depth_heads(cfg, R.next_key(), fl.ratio)
+    max_trained = int(depths.max()) if pr > 0 else 0
+    accs = []
+    for _ in range(rounds):
+        cand = np.where(depths > 0)[0]
+        if len(cand) == 0:
+            break
+        sel = R.rng.choice(cand, min(fl.clients_per_round, len(cand)),
+                           replace=False)
+        num_b = [jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), blk)
+                 for blk in params["blocks"]]
+        num_h = [jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), h)
+                 for h in heads]
+        den = np.zeros(cfg.n_prog_blocks)
+        bn_cur = bn
+        for d in sorted(set(depths[sel].tolist())):
+            group = sel[depths[sel] == d]
+            trainable = {
+                "blocks": [params["blocks"][i] for i in range(d)],
+                "heads": [heads[i] for i in range(d)],
+            }
+            xs, ys, w = R.cohort(group)
+            rngs = jax.random.split(R.next_key(), len(group))
+            out, bn_cur, _ = CL.cohort_round(
+                _depth_loss(cfg, d, fl.ratio), trainable, {}, bn_cur,
+                xs, ys, rngs, w,
+                lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
+            )
+            wsum = float(np.sum([len(parts[c]) for c in group]))
+            for i in range(d):
+                num_b[i] = jax.tree.map(
+                    lambda n, p: n + wsum * p, num_b[i], out["blocks"][i]
+                )
+                num_h[i] = jax.tree.map(
+                    lambda n, p: n + wsum * p, num_h[i], out["heads"][i]
+                )
+                den[i] += wsum
+        new_blocks = []
+        for i in range(cfg.n_prog_blocks):
+            if den[i] > 0:
+                new_blocks.append(
+                    jax.tree.map(lambda n: n / den[i], num_b[i])
+                )
+                heads[i] = jax.tree.map(lambda n: n / den[i], num_h[i])
+            else:
+                new_blocks.append(params["blocks"][i])
+        params = dict(params, blocks=new_blocks)
+        bn = bn_cur
+        accs.append(
+            _acc_depth_ensemble(cfg, params, heads, bn, xte, yte,
+                                max_trained, fl.ratio)
+        )
+    acc = float(np.mean(accs[-10:])) if accs else None
+    return {"acc": acc, "pr": pr, "depths": depths.tolist(), "curve": accs}
+
+
+# ===========================================================================
+# eval helpers
+# ===========================================================================
+
+
+def _acc_full(cfg, params, bn, xte, yte, ratio):
+    logits, _ = C.forward_cnn(
+        cfg, params, bn, jnp.asarray(xte), train=True, ratio=ratio
+    )
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte)))
+
+
+def _acc_depth_ensemble(cfg, params, heads, bn, xte, yte, max_trained, ratio):
+    """DepthFL inference: average the logits of every trained classifier."""
+    x = jnp.asarray(xte)
+    logits_sum = 0.0
+    n = 0
+    for bi in range(cfg.n_prog_blocks):
+        x, _ = P.apply_cnn_block(cfg, bi, params["blocks"][bi],
+                                 bn["blocks"][bi], x, True, ratio)
+        h = heads[bi]
+        logits_sum = logits_sum + jax.nn.log_softmax(
+            jnp.mean(x, axis=(1, 2)) @ h["w"] + h["b"]
+        )
+        n += 1
+        if bi + 1 >= max(max_trained, 1):
+            break
+    return float(jnp.mean(jnp.argmax(logits_sum / n, -1) == jnp.asarray(yte)))

@@ -1,0 +1,73 @@
+"""Client-side local training, vmapped across the selected cohort.
+
+Every selected client in a round trains the SAME sub-model structure
+(paper §4.2: "synchronous training of the same parameters ... resolves
+parameter mismatch"), so local SGD vmaps over (data, rng) with the global
+trainable tree broadcast.  ``loss_fn`` is any callable
+``(trainable, frozen, bn_state, xb, yb) -> (loss, new_bn_state)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_client_update(
+    loss_fn: Callable, *, lr: float, local_steps: int, batch_size: int
+) -> Callable:
+    """Returns client_update(trainable, frozen, bn_state, xb, yb, rng)
+    -> (new_trainable, new_bn_state, mean_loss) for ONE client."""
+
+    def client_update(trainable, frozen, bn_state, xs, ys, rng):
+        def step(carry, rng_i):
+            tr, bn = carry
+            idx = jax.random.randint(rng_i, (batch_size,), 0, xs.shape[0])
+            (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                tr, frozen, bn, xs[idx], ys[idx]
+            )
+            tr = jax.tree.map(lambda p, g: p - lr * g, tr, grads)
+            return (tr, new_bn), loss
+
+        (tr, bn), losses = jax.lax.scan(
+            step, (trainable, bn_state), jax.random.split(rng, local_steps)
+        )
+        return tr, bn, jnp.mean(losses)
+
+    return client_update
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "local_steps", "batch_size"))
+def cohort_round(
+    loss_fn,
+    trainable,
+    frozen,
+    bn_state,
+    xs,  # [K, n_local, ...]
+    ys,  # [K, n_local]
+    rngs,  # [K, 2]
+    weights,  # [K] aggregation weights (|D_n| / |D|, renormalized)
+    *,
+    lr: float,
+    local_steps: int,
+    batch_size: int,
+):
+    """One FL round: vmapped local training + weighted FedAvg (Eq. 1).
+    Returns (aggregated_trainable, aggregated_bn_state, mean_loss)."""
+    upd = make_client_update(
+        loss_fn, lr=lr, local_steps=local_steps, batch_size=batch_size
+    )
+    trs, bns, losses = jax.vmap(upd, in_axes=(None, None, None, 0, 0, 0))(
+        trainable, frozen, bn_state, xs, ys, rngs
+    )
+    w = weights / jnp.sum(weights)
+    agg = lambda leaf: jnp.einsum("k,k...->...", w, leaf.astype(jnp.float32)).astype(
+        leaf.dtype
+    )
+    return (
+        jax.tree.map(agg, trs),
+        jax.tree.map(agg, bns),
+        jnp.sum(w * losses),
+    )

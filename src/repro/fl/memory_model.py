@@ -1,0 +1,173 @@
+"""Analytic per-client training-memory estimator (paper §4.1 / Fig. 6).
+
+Client eligibility follows the paper's setup: budgets are drawn uniformly
+from 100–900 MB and a client joins a round iff its budget covers the
+*training* footprint of the current sub-model — which we estimate at the
+PAPER'S scale (full-width model, 32×32 inputs, local batch 128) even when
+the simulation trains a width-reduced model, so participation rates match
+the paper's regime (DESIGN.md §2).
+
+Footprint model (f32):
+    params_term = (params_active + params_op) × 3        (param+grad+SGD buf)
+                + params_frozen × 1                       (weights only)
+    act_term    = Σ_{units on the backward path} stored activations × B
+                  (conv input + BN input + ReLU mask ≈ 3 tensors/unit)
+    transient   = 2 × max unit output on the frozen prefix × B
+peak ≈ params_term + act_term + transient.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import output_module as OM
+from repro.models import cnn as C
+
+BYTES = 4
+# Calibrated so the full-model participation-rate ordering matches the
+# paper's Tables 1–2 regime (r34/v16: 0%, r18: ~8%, v11 highest):
+PAPER_BATCH = 144
+
+
+def _unit_out_elems(u: C.Unit, side: int) -> int:
+    out_side = side // u.stride
+    if u.pool:
+        out_side //= 2
+    return out_side * out_side * u.cout
+
+
+def _unit_act_elems(u: C.Unit, side: int) -> int:
+    """Stored-activation elements for backward through this unit."""
+    inp = side * side * u.cin
+    out = _unit_out_elems(u, side)
+    if u.kind == "basic":
+        mid = (side // u.stride) ** 2 * u.cout
+        extra = mid if u.down else 0
+        return inp + 2 * mid + out + extra
+    return inp + 2 * out
+
+
+def _unit_params(u: C.Unit) -> int:
+    if u.kind in ("stem", "vggconv"):
+        return 9 * u.cin * u.cout + 2 * u.cout
+    p = 9 * u.cin * u.cout + 9 * u.cout * u.cout + 4 * u.cout
+    if u.down:
+        p += u.cin * u.cout + 2 * u.cout
+    return p
+
+
+def _walk(cfg: C.CNNConfig, ratio: float = 1.0):
+    """Yields (block_idx, unit, in_side) across the plan."""
+    side = cfg.in_size
+    for bi, blk in enumerate(C.build_plan(cfg, ratio)):
+        for u in blk:
+            yield bi, u, side
+            side = side // u.stride // (2 if u.pool else 1)
+
+
+def paper_scale(cfg: C.CNNConfig) -> C.CNNConfig:
+    """Eligibility is ALWAYS judged at the paper's scale (full width, 32×32,
+    batch 144) even when the simulation trains a reduced model — otherwise a
+    width-0.25 sim makes every client eligible and the heterogeneity
+    disappears (DESIGN.md §2)."""
+    if cfg.width_mult == 1.0 and cfg.in_size == 32:
+        return cfg
+    return C.CNNConfig(cfg.kind, n_classes=cfg.n_classes, width_mult=1.0,
+                       in_size=32)
+
+
+def submodel_train_memory_mb(
+    cfg: C.CNNConfig,
+    t: int,  # active block (0-indexed); t == -1 -> head ("op only")
+    *,
+    batch: int = PAPER_BATCH,
+    ratio: float = 1.0,
+    full_model: bool = False,
+) -> float:
+    """Peak training memory (MB) of ProFL step t (or the full model),
+    evaluated at paper scale regardless of the simulated width."""
+    cfg = paper_scale(cfg)
+    params_active = params_frozen = 0
+    act = 0
+    transient = 0
+    feat_elems = C.feature_dim(cfg, ratio)
+    for bi, u, side in _walk(cfg, ratio):
+        pe = _unit_params(u)
+        on_bwd = full_model or (bi == t)
+        if on_bwd:
+            params_active += pe
+            act += _unit_act_elems(u, side) * batch
+        else:
+            params_frozen += pe
+            if not full_model and (t < 0 or bi < t):
+                transient = max(transient, 2 * _unit_out_elems(u, side) * batch)
+    # output module: proxies for blocks t+1.. + head
+    if not full_model and 0 <= t < cfg.n_prog_blocks - 1:
+        chans = [3] + C.block_out_channels(cfg, ratio)
+        sizes = C.block_spatial_sizes(cfg)
+        for b in range(t + 1, cfg.n_prog_blocks):
+            params_active += 9 * chans[b] * chans[b + 1] + 2 * chans[b + 1]
+            act += 3 * sizes[b] ** 2 * chans[b + 1] * batch
+    params_active += feat_elems * cfg.n_classes + cfg.n_classes  # head
+    act += feat_elems * batch * 2
+    total = (3 * params_active + params_frozen) * BYTES + (act + transient) * BYTES
+    return total / 1e6
+
+
+def full_train_memory_mb(cfg: C.CNNConfig, *, batch: int = PAPER_BATCH,
+                         ratio: float = 1.0) -> float:
+    return submodel_train_memory_mb(cfg, -1, batch=batch, ratio=ratio,
+                                    full_model=True)
+
+
+def head_only_memory_mb(cfg: C.CNNConfig, *, batch: int = PAPER_BATCH) -> float:
+    """Clients below every block train only the output layer (paper §4.1)."""
+    return submodel_train_memory_mb(cfg, -1, batch=batch, full_model=False)
+
+
+def assign_budgets_mb(rng: np.random.Generator, n_clients: int,
+                      lo: float = 100.0, hi: float = 900.0) -> np.ndarray:
+    return rng.uniform(lo, hi, size=n_clients)
+
+
+def eligible(budgets_mb: np.ndarray, need_mb: float) -> np.ndarray:
+    return np.where(budgets_mb >= need_mb)[0]
+
+
+def width_ratio_for_budget(
+    cfg: C.CNNConfig, budget_mb: float,
+    ratios=(1.0, 0.5, 0.25, 0.125),
+    *, batch: int = PAPER_BATCH,
+) -> Optional[float]:
+    """Largest HeteroFL width ratio whose FULL-model training fits."""
+    for r in ratios:
+        if full_train_memory_mb(cfg, batch=batch, ratio=r) <= budget_mb:
+            return r
+    return None
+
+
+def depth_for_budget(
+    cfg: C.CNNConfig, budget_mb: float, *, batch: int = PAPER_BATCH
+) -> int:
+    """DepthFL: number of leading blocks (with their classifier) whose
+    training fits. 0 = cannot train even one block."""
+    feat = 0
+    for d in range(cfg.n_prog_blocks, 0, -1):
+        mem = _depthfl_memory_mb(cfg, d, batch=batch)
+        if mem <= budget_mb:
+            return d
+    return 0
+
+
+def _depthfl_memory_mb(cfg: C.CNNConfig, depth: int, *, batch: int) -> float:
+    cfg = paper_scale(cfg)
+    params = act = 0
+    for bi, u, side in _walk(cfg):
+        if bi < depth:
+            params += _unit_params(u)
+            act += _unit_act_elems(u, side) * batch
+    chans = C.block_out_channels(cfg)
+    for b in range(depth):  # a classifier per trained block
+        params += chans[b] * cfg.n_classes + cfg.n_classes
+    return (3 * params * BYTES + act * BYTES) / 1e6

@@ -1,0 +1,235 @@
+"""ProFL server: round orchestration, memory-aware client selection, block
+freezing, the shrinking→growing schedule, and federated proxy distillation.
+
+This is the paper's full Fig. 1 workflow over the CNN models (the faithful
+path); the transformer at-scale path reuses core/progressive.py inside the
+pjit launcher instead of this simulator.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as B
+from repro.core import distill as D
+from repro.core import effective_movement as EM
+from repro.core import output_module as OM
+from repro.core import progressive as P
+from repro.fl import client as CL
+from repro.fl import data as DATA
+from repro.fl import memory_model as MM
+from repro.models import cnn as C
+
+
+@dataclass
+class FLConfig:
+    n_clients: int = 100
+    clients_per_round: int = 20
+    local_steps: int = 10
+    batch_size: int = 32
+    lr: float = 0.05
+    n_local_fixed: int = 64  # fixed-size local dataset view (vmap)
+    max_rounds_per_step: int = 60
+    distill_rounds: int = 8
+    distill_lr: float = 0.01
+    use_shrinking: bool = True
+    em: EM.EMConfig = field(default_factory=lambda: EM.EMConfig(
+        window_h=3, slope_phi=0.01, patience_w=2, fit_points=4,
+        em_level=0.75, min_rounds=9,
+    ))
+    eval_every: int = 5
+    seed: int = 0
+    ratio: float = 1.0  # width of the simulated model (reduced on CPU)
+
+
+class ProFLServer:
+    def __init__(
+        self,
+        cfg: C.CNNConfig,
+        fl: FLConfig,
+        xtr: np.ndarray,
+        ytr: np.ndarray,
+        xte: np.ndarray,
+        yte: np.ndarray,
+        parts: List[np.ndarray],  # per-client index sets
+        budgets_mb: np.ndarray,
+    ):
+        self.cfg, self.fl = cfg, fl
+        self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
+        self.parts, self.budgets = parts, budgets_mb
+        self.rng = np.random.default_rng(fl.seed)
+        key = jax.random.PRNGKey(fl.seed)
+        self.params, self.bn_state = C.init_cnn(cfg, key, fl.ratio)
+        self.init_params = copy.deepcopy(self.params)  # shrinking prefix
+        self.head = self.params["head"]
+        self.proxies: Dict[int, dict] = {}  # block id -> proxy params
+        self.init_bank: Dict[int, dict] = {}  # θ_t^ini from shrinking
+        self.history: List[dict] = []
+        self.total_uplink_params = 0
+        self._key = key
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _select(self, need_mb: float):
+        elig = MM.eligible(self.budgets, need_mb)
+        pr = len(elig) / self.fl.n_clients
+        if len(elig) == 0:
+            return None, 0.0
+        k = min(self.fl.clients_per_round, len(elig))
+        sel = self.rng.choice(elig, k, replace=False)
+        return sel, pr
+
+    def _cohort_data(self, sel):
+        xs, ys, w = [], [], []
+        for cid in sel:
+            xb, yb = DATA.client_batch(
+                self.xtr, self.ytr, self.parts[cid], self.fl.n_local_fixed, self.rng
+            )
+            xs.append(xb)
+            ys.append(yb)
+            w.append(len(self.parts[cid]))
+        return (
+            jnp.asarray(np.stack(xs)),
+            jnp.asarray(np.stack(ys)),
+            jnp.asarray(np.array(w, np.float32)),
+        )
+
+    # ------------------------------------------------------------------
+    def _output_module(self, t: int, rng) -> dict:
+        T_ = self.cfg.n_prog_blocks
+        proxies = []
+        for b in range(t + 1, T_):
+            if b in self.proxies:
+                proxies.append(copy.deepcopy(self.proxies[b]))
+            else:
+                proxies.append(OM.init_cnn_proxy(self.cfg, rng, b, self.fl.ratio))
+        return {"proxies": proxies, "head": copy.deepcopy(self.head)}
+
+    def _train_step_t(self, stage: str, t: int) -> dict:
+        """Train sub-model step t until the block freezes. Returns info."""
+        cfg, fl = self.cfg, self.fl
+        base = self.init_params if stage == "shrink" else self.params
+        frozen, active = B.cnn_split(base, t)
+        if stage == "grow" and t in self.init_bank:
+            active = copy.deepcopy(self.init_bank[t])  # θ_t^ini initialization
+        trainable = {"active": active, "op": self._output_module(t, self._next_key())}
+        loss_fn = _make_cnn_loss(cfg, t, fl.ratio)
+        need_mb = MM.submodel_train_memory_mb(cfg, t)
+        em_state = EM.em_init(trainable)
+        info = {"stage": stage, "t": t, "rounds": 0, "pr": 0.0}
+        uplink = sum(x.size for x in jax.tree.leaves(trainable))
+
+        for rnd in range(fl.max_rounds_per_step):
+            sel, pr = self._select(need_mb)
+            info["pr"] = pr
+            if sel is None:
+                break
+            xs, ys, w = self._cohort_data(sel)
+            rngs = jax.random.split(self._next_key(), len(sel))
+            trainable, self.bn_state, loss = CL.cohort_round(
+                loss_fn, trainable, frozen, self.bn_state, xs, ys, rngs, w,
+                lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
+            )
+            self.total_uplink_params += uplink * len(sel)
+            info["rounds"] = rnd + 1
+            em_val = EM.em_update(fl.em, em_state, trainable)
+            rec = {
+                "stage": stage, "t": t, "round": rnd, "loss": float(loss),
+                "em": em_val, "pr": pr,
+            }
+            if (rnd + 1) % fl.eval_every == 0:
+                rec["sub_acc"] = self.eval_submodel(frozen, trainable, t)
+            self.history.append(rec)
+            if em_val is not None and EM.should_freeze(fl.em, em_state):
+                break
+
+        # freeze: persist the trained block + θ_L
+        self.head = trainable["op"]["head"]
+        if stage == "shrink":
+            self.init_bank[t] = copy.deepcopy(trainable["active"])
+            self.init_params = B.cnn_merge(self.init_params, trainable["active"], t)
+            self._distill_proxy(t, trainable["active"])
+        else:
+            self.params = B.cnn_merge(self.params, trainable["active"], t)
+            for i, b in enumerate(range(t + 1, cfg.n_prog_blocks)):
+                self.proxies[b] = trainable["op"]["proxies"][i]
+        self.params["head"] = self.head
+        return info
+
+    # ------------------------------------------------------------------
+    def _distill_proxy(self, t: int, teacher_active: dict):
+        """Map: federated KD of block t into proxy_t (paper Fig. 3)."""
+        cfg, fl = self.cfg, self.fl
+        frozen_prefix, _ = B.cnn_split(self.init_params, t)
+        proxy = OM.init_cnn_proxy(cfg, self._next_key(), t, fl.ratio)
+        map_loss = D.cnn_map_loss(cfg, t, fl.ratio)
+
+        def loss_fn(proxy, frozen, bn_state, xb, yb):
+            loss = map_loss(
+                proxy, frozen["prefix"], frozen["teacher"], bn_state, xb
+            )
+            return loss, bn_state
+
+        frozen = {"prefix": frozen_prefix, "teacher": teacher_active}
+        need_mb = MM.submodel_train_memory_mb(cfg, t)
+        for _ in range(fl.distill_rounds):
+            sel, _ = self._select(need_mb)
+            if sel is None:
+                break
+            xs, ys, w = self._cohort_data(sel)
+            rngs = jax.random.split(self._next_key(), len(sel))
+            proxy, _, _ = CL.cohort_round(
+                loss_fn, proxy, frozen, self.bn_state, xs, ys, rngs, w,
+                lr=fl.distill_lr, local_steps=fl.local_steps,
+                batch_size=fl.batch_size,
+            )
+        self.proxies[t] = proxy
+
+    # ------------------------------------------------------------------
+    def run(self) -> dict:
+        steps = list(P.schedule(self.cfg.n_prog_blocks, self.fl.use_shrinking))
+        step_infos = [self._train_step_t(stage, t) for stage, t in steps]
+        return {
+            "steps": step_infos,
+            "final_acc": self.eval_full(),
+            "history": self.history,
+            "uplink_params": self.total_uplink_params,
+        }
+
+    # ------------------------------------------------------------------
+    def eval_full(self) -> float:
+        logits, _ = C.forward_cnn(
+            self.cfg, self.params, self.bn_state,
+            jnp.asarray(self.xte), train=True, ratio=self.fl.ratio,
+        )
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(self.yte)))
+
+    def eval_submodel(self, frozen, trainable, t) -> float:
+        logits, _ = P.cnn_submodel_forward(
+            self.cfg, frozen, trainable, self.bn_state,
+            jnp.asarray(self.xte), t, train=True, ratio=self.fl.ratio,
+        )
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(self.yte)))
+
+
+# ---------------------------------------------------------------------------
+# module-level loss factory with caching so cohort_round's jit cache hits
+# across rounds of the same step
+# ---------------------------------------------------------------------------
+
+_LOSS_CACHE: dict = {}
+
+
+def _make_cnn_loss(cfg: C.CNNConfig, t: int, ratio: float):
+    key = (cfg, t, ratio)
+    if key not in _LOSS_CACHE:
+        _LOSS_CACHE[key] = P.cnn_submodel_loss(cfg, t, ratio)
+    return _LOSS_CACHE[key]

@@ -1,0 +1,52 @@
+"""Weighted FedAvg aggregation (paper Eq. 1) as a Pallas TPU kernel.
+
+The server aggregates K client copies of the active block + output module:
+``out = Σ_k w_k · params_k``.  Naively that is K reads of the full vector with
+a growing f32 accumulator held in HBM.  The kernel tiles the parameter axis:
+each grid step stages a [K, bt] panel into VMEM and contracts the K axis with
+an f32 accumulator entirely on-chip — one HBM pass over the stacked params,
+one write of the result.
+
+Oracle: kernels/ref.py::fedavg.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fedavg_kernel(p_ref, w_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)  # [K, bt]
+    w = w_ref[...].astype(jnp.float32)  # [K]
+    o_ref[...] = jnp.einsum("k,kn->n", w, p).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def fedavg(
+    params: jax.Array,  # [K, n] stacked client vectors
+    weights: jax.Array,  # [K]
+    *,
+    bt: int = 65536,
+    interpret: bool = True,
+) -> jax.Array:
+    K, n = params.shape
+    bt = min(bt, n)
+    pad = (-n) % bt
+    if pad:
+        params = jnp.pad(params, ((0, 0), (0, pad)))
+    nt = (n + pad) // bt
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((K, bt), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), params.dtype),
+        interpret=interpret,
+    )(params, weights)
+    return out[:n]

@@ -1,0 +1,154 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+Block-wise online-softmax attention (Rabe & Staats / FlashAttention) adapted
+to the TPU memory hierarchy:
+
+* grid = (B, H, nQ, nKV) — the innermost grid dim walks KV blocks so the
+  running (m, l, acc) scratch lives in VMEM across KV steps;
+* BlockSpecs stage [bq, hd] query tiles and [bk, hd] key/value tiles
+  HBM→VMEM; hd is the lane dim (128-aligned for the MXU), bq/bk the sublane;
+* GQA is handled in the index_map (kv head = q head // group) — no
+  materialized head repetition;
+* causal + sliding-window masks are applied from block coordinates; fully
+  masked KV blocks still iterate but short-circuit the FLOPs via pl.when.
+
+Validated in interpret mode on CPU against kernels/ref.py::attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(
+    q_ref,  # [1, 1, bq, hd]
+    k_ref,  # [1, 1, bk, hd]
+    v_ref,  # [1, 1, bk, hd]
+    o_ref,  # [1, 1, bq, hd]
+    m_ref,  # scratch [bq, 1] running max
+    l_ref,  # scratch [bq, 1] running denom
+    acc_ref,  # scratch [bq, hd] running numerator
+    *,
+    bq: int,
+    bk: int,
+    n_kv: int,
+    causal: bool,
+    window: int,
+    sm_scale: float,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+    # block-level reachability: any (row, col) with row >= col (causal) and
+    # col > row - window can exist in this tile pair?
+    live = True
+    if causal:
+        live = q_lo + bq - 1 >= k_lo  # some row can see some col
+    if window > 0:
+        live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [bq, bk]
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask &= rows >= cols
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of old accumulators
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros, not NaN
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
+)
+def flash_attention_fwd(
+    q: jax.Array,  # [B, H, S, hd]
+    k: jax.Array,  # [B, K, S, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Kh, Skv = k.shape[1], k.shape[2]
+    g = H // Kh
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    if Sq % bq or Skv % bk:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks ({bq},{bk})")
+    n_q, n_kv = Sq // bq, Skv // bk
+    grid = (B, H, n_q, n_kv)
+
+    kern = functools.partial(
+        _fwd_kernel,
+        bq=bq,
+        bk=bk,
+        n_kv=n_kv,
+        causal=causal,
+        window=window,
+        sm_scale=1.0 / (hd**0.5),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),  # m
+            _vmem((bq, 1), jnp.float32),  # l
+            _vmem((bq, hd), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

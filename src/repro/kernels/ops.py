@@ -1,0 +1,176 @@
+"""Public kernel API used by the model layers.
+
+``attention`` dispatches between:
+  * ``pallas``  — the Pallas TPU kernel (flash_attention.py). Forward-only;
+                  on this CPU container it runs in interpret mode.
+  * ``chunked`` — a differentiable pure-JAX flash-attention (two-level
+                  lax.scan over q/kv chunks with online softmax). This is the
+                  default for training/prefill: bounded O(bq·bk) temporaries
+                  instead of the O(S²) logits tensor, and XLA can remat it.
+  * ``naive``   — the ref.py oracle (small shapes / tests).
+
+``effective_movement_update`` / ``fedavg`` dispatch kernel vs ref the same
+way.  On TPU the pallas paths are selected automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import effective_movement as _em
+from repro.kernels import fedavg as _fedavg
+
+Impl = Literal["auto", "pallas", "chunked", "naive"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,  # [B, H, Sq, hd]
+    k: jax.Array,  # [B, K, Skv, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    impl: Impl = "auto",
+    bq: int = 512,
+    bk: int = 512,
+) -> jax.Array:
+    if impl == "auto":
+        if q.shape[2] <= 256:
+            impl = "naive"
+        elif _on_tpu() and q_offset == 0:
+            impl = "pallas"
+        else:
+            impl = "chunked"
+    if impl == "pallas":
+        return _fa.flash_attention_fwd(
+            q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+            interpret=not _on_tpu(),
+        )
+    if impl == "chunked":
+        return _chunked_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk
+        )
+    return _ref.attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def _chunked_attention(
+    q, k, v, *, causal: bool, window: int, q_offset: int, bq: int, bk: int
+):
+    """Differentiable flash attention: outer scan over q chunks, inner scan
+    over kv chunks with running (m, l, acc). Accumulation in f32.
+
+    Sharding: q/k/v are constrained ONCE here — batch over dp, q heads over
+    'model', kv heads replicated, SEQ UNSHARDED — so every chunk slice
+    inside the scans is device-local.  Without this, the Megatron-SP
+    seq-sharding of the residual stream propagates into the scan and GSPMD
+    inserts a collective-permute/all-gather per (q, kv) chunk pair — ~2300
+    collectives per step at 36L/8×8 chunks (EXPERIMENTS.md §Perf i8)."""
+    from repro.launch import sharding as _sh
+
+    q = _sh.constrain_heads(q)
+    k = _sh.constrain_heads(k)
+    v = _sh.constrain_heads(v)
+    B, H, Sq, hd = q.shape
+    Kh, Skv = k.shape[1], k.shape[2]
+    g = H // Kh
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    # pad seq lens up to multiples
+    pq, pk = (-Sq) % bq, (-Skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = (Sq + pq) // bq, (Skv + pk) // bk
+    scale = 1.0 / (hd**0.5)
+
+    qc = q.reshape(B, H, nq, bq, hd).transpose(2, 0, 1, 3, 4)  # [nq,B,H,bq,hd]
+    kc = k.reshape(B, Kh, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Kh, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, args):
+        iq, qb = args  # qb: [B,H,bq,hd]
+        qb32 = qb.astype(jnp.float32) * scale
+        qr = qb32.reshape(B, Kh, g, bq, hd)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ik, kb, vb = args2  # [B,Kh,bk,hd]
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs", qr, kb.astype(jnp.float32)
+            )  # [B,Kh,g,bq,bk]
+            rows = q_offset + iq * bq + jnp.arange(bq)[:, None]
+            cols = ik * bk + jnp.arange(bk)[None, :]
+            mask = cols < Skv  # mask kv padding
+            if causal:
+                mask &= rows >= cols
+            if window > 0:
+                mask &= cols > rows - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kh, g, bq, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Kh, g, bq, 1), jnp.float32)
+        a0 = jnp.zeros((B, Kh, g, bq, hd), jnp.float32)
+        # flash-backward memory behavior: recompute the [bq, bk] softmax
+        # block in the backward pass instead of saving it per (q, kv) pair
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False),
+            (m0, l0, a0), (jnp.arange(nk), kc, vc),
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        ob = (acc / l).reshape(B, H, bq, hd).astype(q.dtype)
+        return None, ob
+
+    _, oc = jax.lax.scan(
+        jax.checkpoint(q_step, prevent_cse=False), None, (jnp.arange(nq), qc)
+    )  # [nq,B,H,bq,hd]
+    out = oc.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq + pq, hd)
+    return out[:, :, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Effective movement / FedAvg
+# ---------------------------------------------------------------------------
+
+
+def effective_movement_update(p_new, p_old, net, *, impl: Impl = "auto"):
+    if impl == "auto":
+        impl = "pallas" if (_on_tpu() or p_new.size >= 4096) else "naive"
+    if impl == "pallas":
+        return _em.effective_movement_update(
+            p_new, p_old, net, interpret=not _on_tpu()
+        )
+    return _ref.effective_movement_update(p_new, p_old, net)
+
+
+def fedavg(params, weights, *, impl: Impl = "auto"):
+    if impl == "auto":
+        impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
+    if impl == "pallas":
+        return _fedavg.fedavg(params, weights, interpret=not _on_tpu())
+    return _ref.fedavg(params, weights)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention (naive, materializes the [S, S] logits)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,  # [B, H, Sq, hd]
+    k: jax.Array,  # [B, K, Skv, hd]
+    v: jax.Array,  # [B, K, Skv, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = full; else sliding window (positions > row-window)
+    q_offset: int = 0,  # global position of q row 0 (decode: pos of the token)
+) -> jax.Array:
+    """Reference GQA attention. Returns [B, H, Sq, hd]."""
+    B, H, Sq, hd = q.shape
+    Kh = k.shape[1]
+    g = H // Kh
+    qr = q.reshape(B, Kh, g, Sq, hd)
+    logits = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qr.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(hd))
+    rows = jnp.arange(Sq)[:, None] + q_offset
+    cols = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= rows >= cols
+    if window > 0:
+        mask &= cols > rows - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Effective movement (paper §3.3) — fused accumulation pass
+# ---------------------------------------------------------------------------
+
+
+def effective_movement_update(
+    p_new: jax.Array,  # [n] current scalars of a block (flattened)
+    p_old: jax.Array,  # [n] scalars at the previous evaluation
+    net: jax.Array,  # [n] running net movement  Σ_h U_{k-h}
+):
+    """One evaluation-step update of the EM accumulators.
+
+    Returns (net_new, path_increment, net_abs_sum):
+      net_new   = net + (p_new - p_old)
+      path_inc  = Σ_s |p_new - p_old|            (adds to the path-length denom)
+      net_abs   = Σ_s |net_new|                  (numerator  D^H_{B,k})
+    """
+    u = p_new.astype(jnp.float32) - p_old.astype(jnp.float32)
+    net_new = net.astype(jnp.float32) + u
+    path_inc = jnp.sum(jnp.abs(u))
+    net_abs = jnp.sum(jnp.abs(net_new))
+    return net_new, path_inc, net_abs
+
+
+# ---------------------------------------------------------------------------
+# Weighted FedAvg aggregation (paper Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def fedavg(params: jax.Array, weights: jax.Array) -> jax.Array:
+    """params: [K, n] stacked client vectors; weights: [K] (sum to 1).
+    Returns [n] = Σ_k w_k · params_k, accumulated in f32."""
+    out = jnp.einsum(
+        "k,kn->n", weights.astype(jnp.float32), params.astype(jnp.float32)
+    )
+    return out.astype(params.dtype)

@@ -1,0 +1,403 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination with ShapeDtypeStruct stand-ins — no allocation.
+
+For each combo this prints/records:
+  * compiled.memory_analysis()  — proves the step fits per-device HBM;
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline;
+  * collective byte counts parsed from the optimized HLO text.
+
+Shapes → lowered step:
+  train_4k     -> full-model train_step (baseline) and, with
+                  --progressive T, the ProFL step-t train step (the paper's
+                  memory claim, §Dry-run comparison);
+  prefill_32k  -> prefill (flash attention + cache emission);
+  decode_32k   -> serve_step: ONE token, KV cache of 32768;
+  long_500k    -> serve_step with a 524288-token context: native for
+                  rwkv6/jamba, sliding-window (8192) for full-attention
+                  archs, SKIP for whisper (DESIGN.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, get_config, list_configs  # noqa: E402
+from repro.core import progressive as PROG  # noqa: E402
+from repro.launch import sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.train import serve  # noqa: E402
+from repro.train.optimizer import AdamWCfg, adamw  # noqa: E402
+from repro.train.train_step import init_train_state, make_train_step  # noqa: E402
+
+SKIPS = {("whisper-small", "long_500k"): "enc-dec decoder is bound to a "
+         "1500-frame encoder; 524k-token transcripts have no analogue "
+         "(DESIGN.md §Arch-applicability)"}
+
+
+# ===========================================================================
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, no allocation)
+# ===========================================================================
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Model inputs for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.param_dtype)
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.frontend is not None:
+            batch["frontend_embeds"] = sds(
+                (B, cfg.frontend.n_tokens, cfg.frontend.embed_dim), dt
+            )
+        if cfg.encoder is not None:
+            batch["frames"] = sds((B, cfg.encoder.n_frames, cfg.d_model), dt)
+        return batch
+    # decode: ONE token + cache of S
+    w = decode_window(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: serve.init_cache(cfg, B, S, window=w)
+    )
+    return {
+        "cache": cache,
+        "tokens": sds((B,), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """long_500k uses the sliding-window variant on full-attention archs;
+    native (0 = full cache / O(1) state) otherwise."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        return cfg.long_decode_window
+    return None
+
+
+def batch_shardings(env, batch):
+    def spec(path, leaf):
+        name = sharding._path_str(path)
+        if name == "tokens" and leaf.ndim >= 2:
+            return sharding._sanitize(env, P(env.dp_axes, None), leaf.shape)
+        if name == "tokens":
+            return sharding._sanitize(env, P(env.dp_axes), leaf.shape)
+        if name in ("frontend_embeds", "frames"):
+            return sharding._sanitize(env, P(env.dp_axes, None, None), leaf.shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(env.mesh, spec(p, x)), batch
+    )
+
+
+def cache_shardings_env(cfg, env, cache):
+    def spec(path, leaf):
+        name = sharding._path_str(path)
+        shape = leaf.shape
+        if re.search(r"/(k|v|cross_k|cross_v)$", name) and leaf.ndim == 5:
+            # [G, B, Kh, C, hd]: batch over dp (or cache seq when B==1),
+            # head_dim over model (always divisible).
+            if shape[1] % sharding._axis_size(env, env.dp_axes) == 0:
+                return sharding._sanitize(
+                    env, P(None, env.dp_axes, None, None, "model"), shape)
+            return sharding._sanitize(
+                env, P(None, None, None, env.dp_axes, "model"), shape)
+        if "mamba/h" in name:
+            return sharding._sanitize(env, P(None, env.dp_axes, "model", None), shape)
+        if "mamba/conv" in name:
+            return sharding._sanitize(env, P(None, env.dp_axes, None, "model"), shape)
+        if "rwkv/S" in name:  # [G, B, H, hd, hd]
+            if shape[1] % sharding._axis_size(env, env.dp_axes) == 0:
+                return sharding._sanitize(
+                    env, P(None, env.dp_axes, "model", None, None), shape)
+            return sharding._sanitize(
+                env, P(None, None, env.dp_axes, "model", None), shape)
+        base = [None] * leaf.ndim
+        if leaf.ndim >= 2 and shape[1] % sharding._axis_size(env, env.dp_axes) == 0:
+            base[1] = env.dp_axes
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(env.mesh, spec(p, x)), cache
+    )
+
+
+# ===========================================================================
+# lowering
+# ===========================================================================
+
+
+_DTB = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+        "u8": 1, "f64": 8, "s64": 8, "pred": 1, "f8e4m3fn": 1,
+        "f8e5m2": 1, "s16": 2, "u16": 2}
+_SHAPE_PAT = re.compile(
+    r"(f32|bf16|f16|f64|s8|u8|s16|u16|s32|u32|s64|pred|f8e4m3fn|f8e5m2)"
+    r"\[([\d,]*)\]")
+_COLL_PAT = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:f|bf|s|u|pred)[\w]*\[[\d,]*\][^\s]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+
+def _split_computations(hlo: str) -> dict:
+    """{computation_name: text} from optimized HLO."""
+    comps = {}
+    cur, buf = None, []
+    for line in hlo.splitlines():
+        # header: [ENTRY] %name (args...) -> type {   — args may nest parens
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+        if m and "->" in line and line.rstrip().endswith("{"):
+            if cur:
+                comps[cur] = "\n".join(buf)
+            cur, buf = m.group(1), [line]
+        else:
+            buf.append(line)
+    if cur:
+        comps[cur] = "\n".join(buf)
+    return comps
+
+
+def _while_multipliers(hlo: str) -> dict:
+    """{computation_name: effective_repeat_count} for while (lax.scan)
+    bodies, with NESTED loops multiplying through their parents.  The trip
+    count is recovered from the largest constant in the loop condition (the
+    scan pattern).  XLA:CPU cost analysis counts loop bodies ONCE —
+    collectives inside the layer scan must be scaled by these."""
+    comps = _split_computations(hlo)
+    trips, parent = {}, {}
+    for cname, ctext in comps.items():
+        for m in re.finditer(
+            r"while\([^)]*\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)",
+            ctext,
+        ):
+            cond, body = m.group(1), m.group(2)
+            consts = [int(c) for c in re.findall(r"constant\((\d+)\)",
+                                                 comps.get(cond, ""))]
+            if consts:
+                trips[body] = max(max(consts), 1)
+                parent[body] = cname
+
+    def mult(name, depth=0):
+        if depth > 8 or name not in trips:
+            return 1
+        return trips[name] * mult(parent.get(name, ""), depth + 1)
+
+    return {name: mult(name) for name in comps}
+
+
+def _collective_bytes(hlo: str) -> dict:
+    """Sum output-shape bytes of collective ops in optimized HLO text,
+    multiplying ops inside while (scan) bodies by the loop trip count."""
+    sizes = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+             "all-to-all": 0, "collective-permute": 0}
+    mults = _while_multipliers(hlo)
+    comps = _split_computations(hlo)
+
+    for cname, ctext in comps.items():
+        k = mults.get(cname, 1)
+        for m in _COLL_PAT.finditer(ctext):
+            shapes_str = m.group(1) or m.group(2)
+            op = m.group(3)
+            total = 0
+            for sm in _SHAPE_PAT.finditer(shapes_str):
+                dt, dims = sm.group(1), sm.group(2)
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                total += n * _DTB.get(dt, 4)
+            sizes[op] += total * k
+    return sizes
+
+
+def lower_combo(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh,
+    *,
+    progressive_t: Optional[int] = None,
+    layout: str = "2d",
+):
+    """Lower + compile one (arch, shape, mesh) combo.
+    Returns result dict with cost/memory/collective stats."""
+    env_ctx = sharding.axis_env(mesh, layout=layout)
+    with env_ctx as env:
+        params_struct = jax.eval_shape(
+            lambda: T.init_model(cfg, jax.random.PRNGKey(0))
+        )
+        p_sh = sharding.param_shardings(env, params_struct)
+
+        if shape.kind == "train":
+            opt = adamw(AdamWCfg())
+            if progressive_t is None:
+                step_fn = make_train_step(cfg, opt)
+                state_struct = jax.eval_shape(
+                    lambda: init_train_state(cfg, params_struct, opt)
+                )
+                state_sh = _state_shardings(env, state_struct)
+                batch = input_specs(cfg, shape)
+                b_sh = batch_shardings(env, batch)
+                jf = jax.jit(step_fn, in_shardings=(state_sh, b_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+                lowered = jf.lower(state_struct, batch)
+            else:
+                t = progressive_t
+                frozen_s, trainable_s = _prog_structs(cfg, params_struct, t)
+                step_fn = PROG.make_progressive_train_step(cfg, opt, t)
+                state_struct = jax.eval_shape(
+                    lambda: {"params": trainable_s,
+                             "opt": opt.init(trainable_s),
+                             "step": jnp.zeros((), jnp.int32)}
+                )
+                state_sh = _state_shardings(env, state_struct)
+                f_sh = sharding.param_shardings(env, frozen_s)
+                batch = input_specs(cfg, shape)
+                b_sh = batch_shardings(env, batch)
+                jf = jax.jit(step_fn, in_shardings=(state_sh, f_sh, b_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+                lowered = jf.lower(state_struct, frozen_s, batch)
+        elif shape.kind == "prefill":
+            batch = input_specs(cfg, shape)
+            b_sh = batch_shardings(env, batch)
+
+            def prefill_fn(params, batch):
+                return serve.prefill(cfg, params, batch)
+
+            jf = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+            lowered = jf.lower(params_struct, batch)
+        else:  # decode
+            spec = input_specs(cfg, shape)
+            w = decode_window(cfg, shape)
+            c_sh = cache_shardings_env(cfg, env, spec["cache"])
+            tok_sh = NamedSharding(env.mesh, sharding._sanitize(
+                env, P(env.dp_axes), spec["tokens"].shape))
+            pos_sh = NamedSharding(env.mesh, P())
+
+            def decode_fn(params, cache, tokens, pos):
+                return serve.decode_step(cfg, params, cache, tokens, pos,
+                                         window=w)
+
+            jf = jax.jit(decode_fn,
+                         in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+            lowered = jf.lower(params_struct, spec["cache"], spec["tokens"],
+                               spec["pos"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = _collective_bytes(compiled.as_text())
+        n_dev = mesh.devices.size
+        return {
+            "arch": cfg.name,
+            "shape": shape.name,
+            "mesh": "x".join(map(str, mesh.devices.shape)),
+            "progressive_t": progressive_t,
+            "compile_s": round(compile_s, 1),
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "collective_bytes": coll,
+            "per_device": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_bytes": (mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes),
+            },
+            "n_devices": n_dev,
+        }
+
+
+def _prog_structs(cfg, params_struct, t):
+    return jax.eval_shape(
+        lambda ps: PROG.submodel_init(cfg, ps, jax.random.PRNGKey(1), t),
+        params_struct,
+    )
+
+
+def _state_shardings(env, state_struct):
+    return {
+        "params": sharding.param_shardings(env, state_struct["params"]),
+        "opt": sharding.param_shardings(env, state_struct["opt"]),
+        "step": NamedSharding(env.mesh, P()),
+    }
+
+
+# ===========================================================================
+# CLI
+# ===========================================================================
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--progressive", type=int, default=None,
+                    help="lower the ProFL step-t train step instead of full")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    results = []
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            shape = INPUT_SHAPES[s]
+            if (a, s) in SKIPS:
+                results.append({"arch": a, "shape": s, "skip": SKIPS[(a, s)]})
+                print(f"SKIP  {a} × {s}: {SKIPS[(a, s)]}")
+                continue
+            try:
+                # per-arch roofline-driven training layout; serving stays 2d
+                layout = cfg.train_layout if shape.kind == "train" else "2d"
+                r = lower_combo(cfg, shape, mesh,
+                                progressive_t=args.progressive,
+                                layout=layout)
+                r["layout"] = layout
+                results.append(r)
+                pd = r["per_device"]
+                print(f"OK    {a} × {s} [{r['mesh']}] "
+                      f"flops={r['flops']:.3e} "
+                      f"args={pd['argument_bytes']/2**30:.2f}GiB "
+                      f"temp={pd['temp_bytes']/2**30:.2f}GiB "
+                      f"compile={r['compile_s']}s")
+            except Exception as e:
+                traceback.print_exc()
+                results.append({"arch": a, "shape": s, "error": str(e)[:500]})
+                print(f"FAIL  {a} × {s}: {type(e).__name__}: {str(e)[:200]}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results)} combos, {n_fail} failures")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,254 @@
+"""Sharding environment: mesh axes + activation/param partition rules.
+
+The model code calls the ``constrain_*`` helpers at the points where GSPMD
+needs guidance (post-projection activations, MoE dispatch buffers).  When no
+mesh env is active (CPU smoke tests, single-device examples) they are
+identities, so the same model code runs everywhere.
+
+Axis convention
+---------------
+* ``data`` (+ ``pod`` when multi-pod): batch / FSDP axis.
+* ``model``: tensor-parallel axis (attention heads, d_ff, experts, vocab).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+@dataclass(frozen=True)
+class AxisEnv:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]  # ('pod', 'data') or ('data',) (+'model' in fsdp layout)
+    tp_axis: Optional[str]  # 'model' (None in pure-FSDP layout)
+    fsdp: bool = True  # shard params over the dp axes too
+
+    @property
+    def fsdp_axis(self):
+        if not self.fsdp:
+            return None
+        # pure-FSDP layout: shard params over the whole dp tuple
+        return self.dp_axes if self.tp_axis is None else self.dp_axes[-1]
+
+
+def current_env() -> Optional[AxisEnv]:
+    return getattr(_tls, "env", None)
+
+
+@contextlib.contextmanager
+def axis_env(mesh: Mesh, *, fsdp: bool = True, layout: str = "2d"):
+    """layout='2d': data×model (FSDP × Megatron-TP).  layout='fsdp': the
+    'model' axis joins data parallelism (pure FSDP) — the right call for
+    small models whose per-layer compute cannot amortize TP collective
+    traffic (EXPERIMENTS.md §Perf i9)."""
+    names = mesh.axis_names
+    if layout == "fsdp":
+        dp = tuple(a for a in ("pod", "data", "model") if a in names)
+        env = AxisEnv(mesh=mesh, dp_axes=dp, tp_axis=None, fsdp=fsdp)
+    else:
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        env = AxisEnv(mesh=mesh, dp_axes=dp, tp_axis="model", fsdp=fsdp)
+    prev = getattr(_tls, "env", None)
+    _tls.env = env
+    try:
+        with jax.sharding.set_mesh(mesh):
+            yield env
+    finally:
+        _tls.env = prev
+
+
+def _axis_size(env: AxisEnv, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= env.mesh.shape[a]
+        return n
+    return env.mesh.shape[axis]
+
+
+def _sanitize(env: AxisEnv, spec: P, shape) -> P:
+    """Drop spec axes whose mesh size does not divide the dim (e.g. 40 heads
+    or vocab 51865 over a 16-way model axis) — GSPMD propagation fills the
+    gap from the (always-divisible) weight-matrix shardings."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        n = _axis_size(env, axis)
+        out.append(axis if (n > 1 and dim > 0 and dim % n == 0) else None)
+    return P(*out)
+
+
+def _constrain(x, spec: P):
+    env = current_env()
+    if env is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _sanitize(env, spec, x.shape))
+
+
+# -- activation constraints -------------------------------------------------
+
+
+def constrain_tokens(x):
+    """[B, S, ...] activations: batch over dp axes, rest replicated."""
+    env = current_env()
+    if env is None:
+        return x
+    return _constrain(x, P(env.dp_axes, *([None] * (x.ndim - 1))))
+
+
+def constrain_hidden(x):
+    """[B, S, D] residual stream at layer boundaries: batch over dp and the
+    SEQUENCE dim over 'model' (Megatron-style sequence parallelism).  The
+    scan over layers saves one carry per group — sequence-sharding it cuts
+    the dominant stored-activation term by the TP degree; GSPMD inserts the
+    per-layer all-gather/reduce-scatter pair.  Falls back to replicated dims
+    whenever sizes do not divide (decode S=1, batch 1, ...)."""
+    env = current_env()
+    if env is None or x.ndim != 3:
+        return constrain_tokens(x)
+    return _constrain(x, P(env.dp_axes, env.tp_axis, None))
+
+
+def constrain_heads(x):
+    """[B, H, S, hd]: batch over dp, heads over model."""
+    env = current_env()
+    if env is None:
+        return x
+    return _constrain(x, P(env.dp_axes, env.tp_axis, None, None))
+
+
+def constrain_ff(x):
+    """[B, S, F] MLP hidden: batch over dp, F over model."""
+    env = current_env()
+    if env is None:
+        return x
+    return _constrain(x, P(env.dp_axes, None, env.tp_axis))
+
+
+def constrain_time_state(x):
+    """[B, C, F, ...] recurrent-chunk tensors (mamba a/b/h, rwkv r/k/v/w):
+    batch over dp, the channel/head dim (axis 2) over model."""
+    env = current_env()
+    if env is None:
+        return x
+    spec = [env.dp_axes, None, env.tp_axis] + [None] * (x.ndim - 3)
+    return _constrain(x, P(*spec))
+
+
+def constrain_expert_buf(x):
+    """[E, C, D] MoE dispatch buffer: experts over model."""
+    env = current_env()
+    if env is None:
+        return x
+    return _constrain(x, P(env.tp_axis, *([None] * (x.ndim - 1))))
+
+
+def constrain_vocab_logits(x):
+    """[B, S, V]: batch over dp, vocab over model."""
+    env = current_env()
+    if env is None:
+        return x
+    return _constrain(x, P(env.dp_axes, None, env.tp_axis))
+
+
+# ---------------------------------------------------------------------------
+# Param partition rules (path-pattern -> PartitionSpec factory)
+#
+# Leaf paths look like: layers/0/attn/wq, embed/tok, head/w, ...
+# All stacked layer params carry a leading [G] dim -> spec gets a leading None.
+# ---------------------------------------------------------------------------
+
+# (regex on leaf path, spec builder taking (env, ndim) -> P). Specs are for
+# the UNSTACKED trailing dims; a leading None is prepended for stacked leaves.
+_RULES = [
+    # attention projections
+    (r"attn.*/wq$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"attn.*/wk$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"attn.*/wv$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"attn.*/wo$", lambda e: P(e.tp_axis, e.fsdp_axis)),
+    (r"attn.*/b[qkv]$", lambda e: P(e.tp_axis)),
+    (r"attn.*/bo$", lambda e: P(None)),
+    (r"attn.*/[qk]_norm$", lambda e: P(None)),
+    # dense mlp
+    (r"(mlp|ffn|shared)/w_gate$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"(mlp|ffn|shared)/w_up$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"(mlp|ffn|shared)/w_down$", lambda e: P(e.tp_axis, e.fsdp_axis)),
+    (r"(mlp|ffn|shared)/b_up$", lambda e: P(e.tp_axis)),
+    (r"(mlp|ffn|shared)/b_down$", lambda e: P(None)),
+    # moe: experts over model, inner dims fsdp
+    (r"moe/router$", lambda e: P(e.fsdp_axis, None)),
+    (r"moe/w_gate$", lambda e: P(e.tp_axis, e.fsdp_axis, None)),
+    (r"moe/w_up$", lambda e: P(e.tp_axis, e.fsdp_axis, None)),
+    (r"moe/w_down$", lambda e: P(e.tp_axis, None, e.fsdp_axis)),
+    # mamba
+    (r"mamba/w_in$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"mamba/w_(x|dt2)$", lambda e: P(e.tp_axis, None)),
+    (r"mamba/w_out$", lambda e: P(e.tp_axis, e.fsdp_axis)),
+    (r"mamba/(a_log|d|conv_w|conv_b|dt_bias)$", lambda e: P(e.tp_axis)),
+    # rwkv
+    (r"rwkv/w_(r|k|v|g)$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"rwkv/w_o$", lambda e: P(e.tp_axis, e.fsdp_axis)),
+    (r"rwkv/(decay_w1|mix_w1)$", lambda e: P(e.fsdp_axis, None)),
+    (r"rwkv/(decay_w2|mix_w2)$", lambda e: P(None)),
+    (r"rwkv/(u|decay_base|ln_scale|ln_bias)$", lambda e: P(e.tp_axis)),
+    (r"rwkv_cm/w_k$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"rwkv_cm/w_v$", lambda e: P(e.tp_axis, e.fsdp_axis)),
+    (r"rwkv_cm/w_r$", lambda e: P(e.fsdp_axis, None)),
+    # embeddings / head: vocab over model, d over fsdp
+    (r"embed/tok$", lambda e: P(e.tp_axis, e.fsdp_axis)),
+    (r"head/w$", lambda e: P(e.fsdp_axis, e.tp_axis)),
+    (r"projector/w$", lambda e: P(e.fsdp_axis, None)),
+    (r"projector/b$", lambda e: P(None)),
+    # norms & everything small: replicated
+    (r".*", lambda e: P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_path(env: AxisEnv, path, leaf) -> P:
+    ps = _path_str(path)
+    for pat, fn in _RULES:
+        if re.search(pat, ps):
+            spec = fn(env)
+            # stacked layer params have one more leading dim than the rule
+            ndim = getattr(leaf, "ndim", 0)
+            if len(spec) < ndim:
+                spec = P(*([None] * (ndim - len(spec)) + list(spec)))
+            elif len(spec) > ndim:  # scalar-ish leaves
+                spec = P(*([s for s in spec][: ndim]))
+            return _sanitize(env, spec, getattr(leaf, "shape", ()))
+    return P()
+
+
+def param_shardings(env: AxisEnv, params):
+    """Pytree of NamedSharding matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(env.mesh, spec_for_path(env, path, leaf)),
+        params,
+    )
+
+
+def param_specs(env: AxisEnv, params):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(env, path, leaf), params
+    )

@@ -1,0 +1,328 @@
+"""The paper's own models: ResNet18/34 and VGG11_bn/VGG16_bn (CIFAR-scale),
+in pure JAX (lax.conv), with the paper's modifications:
+
+* VGG11_bn: MaxPool after every 2 convs; VGG16_bn: MaxPool after every 4;
+  both use a single linear classifier and AdaptiveAvgPool to (1,1).
+* ProFL block partition (paper §4.1): ResNet18/34 -> 4 blocks on the residual
+  stages (stem joins block 1); VGG11 -> 2 blocks (4+4 convs); VGG16 -> 3
+  blocks (4+4+5 convs).  The classifier head is the *real* output module of
+  the last step.
+
+Structure metadata (unit kinds, strides, pools) lives in a static ``plan``
+derived from the config, so the param tree contains ONLY arrays (clean for
+optimizers / FedAvg / ProFL slicing).  BN running stats are a separate tree;
+forward returns ``(features_or_logits, new_bn_state)``.
+
+Width scaling (``ratio``) supports the HeteroFL / AllSmall baselines: every
+channel count is scaled and a sub-model's params are the leading slices of
+the global tensors (HeteroFL's static channel partition).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DN = ("NHWC", "HWIO", "NHWC")
+BN_MOMENTUM = 0.9
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    kind: str  # resnet18 | resnet34 | vgg11 | vgg16
+    n_classes: int = 10
+    width_mult: float = 1.0  # global scale (reduced smoke variants)
+    in_size: int = 32
+
+    @property
+    def n_prog_blocks(self) -> int:
+        return {"resnet18": 4, "resnet34": 4, "vgg11": 2, "vgg16": 3}[self.kind]
+
+
+@dataclass(frozen=True)
+class Unit:
+    kind: str  # 'stem' | 'basic' | 'vggconv'
+    cin: int
+    cout: int
+    stride: int = 1
+    pool: bool = False
+    down: bool = False  # basic unit has a 1x1 downsample path
+
+
+def _ch(c: int, mult: float) -> int:
+    return max(4, int(round(c * mult)))
+
+
+_RESNET_STAGES = {
+    "resnet18": ([2, 2, 2, 2], [64, 128, 256, 512]),
+    "resnet34": ([3, 4, 6, 3], [64, 128, 256, 512]),
+}
+_VGG_PLAN = {
+    "vgg11": ([64, 128, 256, 256, 512, 512, 512, 512], 2, [4, 4]),
+    "vgg16": (
+        [64, 64, 128, 128, 256, 256, 256, 512, 512, 512, 512, 512, 512],
+        4,
+        [4, 4, 5],
+    ),
+}
+
+
+def is_resnet(cfg: CNNConfig) -> bool:
+    return cfg.kind.startswith("resnet")
+
+
+# ---------------------------------------------------------------------------
+# static plan: List[List[Unit]] — one list per prog-block
+# ---------------------------------------------------------------------------
+
+
+def build_plan(cfg: CNNConfig, ratio: float = 1.0) -> List[List[Unit]]:
+    mult = cfg.width_mult * ratio
+    plan: List[List[Unit]] = []
+    if is_resnet(cfg):
+        nblocks, chans = _RESNET_STAGES[cfg.kind]
+        chans = [_ch(c, mult) for c in chans]
+        cin = 3
+        for si, (nb, c) in enumerate(zip(nblocks, chans)):
+            blk: List[Unit] = []
+            if si == 0:
+                blk.append(Unit("stem", 3, c))
+                cin = c
+            for bi in range(nb):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                blk.append(
+                    Unit("basic", cin, c, stride, down=(stride != 1 or cin != c))
+                )
+                cin = c
+            plan.append(blk)
+        return plan
+    chans, pool_every, block_convs = _VGG_PLAN[cfg.kind]
+    chans = [_ch(c, mult) for c in chans]
+    cin, ci = 3, 0
+    for nb in block_convs:
+        blk = []
+        for _ in range(nb):
+            c = chans[ci]
+            blk.append(Unit("vggconv", cin, c, pool=((ci + 1) % pool_every == 0)))
+            cin = c
+            ci += 1
+        plan.append(blk)
+    return plan
+
+
+def feature_dim(cfg: CNNConfig, ratio: float = 1.0) -> int:
+    return build_plan(cfg, ratio)[-1][-1].cout
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * math.sqrt(
+        2.0 / fan_in
+    )
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn_state_init(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def _init_unit(u: Unit, rng):
+    ks = jax.random.split(rng, 3)
+    if u.kind in ("stem", "vggconv"):
+        p = {"conv": _conv_init(ks[0], 3, 3, u.cin, u.cout), "bn": _bn_init(u.cout)}
+        s = {"bn": _bn_state_init(u.cout)}
+        return p, s
+    p = {
+        "conv1": _conv_init(ks[0], 3, 3, u.cin, u.cout),
+        "bn1": _bn_init(u.cout),
+        "conv2": _conv_init(ks[1], 3, 3, u.cout, u.cout),
+        "bn2": _bn_init(u.cout),
+    }
+    s = {"bn1": _bn_state_init(u.cout), "bn2": _bn_state_init(u.cout)}
+    if u.down:
+        p["down"] = _conv_init(ks[2], 1, 1, u.cin, u.cout)
+        p["down_bn"] = _bn_init(u.cout)
+        s["down_bn"] = _bn_state_init(u.cout)
+    return p, s
+
+
+def init_cnn(cfg: CNNConfig, rng, ratio: float = 1.0) -> Tuple[dict, dict]:
+    """Returns (params, bn_state); param tree contains only arrays."""
+    plan = build_plan(cfg, ratio)
+    params: dict = {"blocks": [], "head": {}}
+    state: dict = {"blocks": []}
+    i = 0
+    for blk in plan:
+        bp, bs = [], []
+        for u in blk:
+            p, s = _init_unit(u, jax.random.fold_in(rng, i))
+            bp.append(p)
+            bs.append(s)
+            i += 1
+        params["blocks"].append(bp)
+        state["blocks"].append(bs)
+    cf = plan[-1][-1].cout
+    params["head"] = {
+        "w": jax.random.normal(jax.random.fold_in(rng, 9999), (cf, cfg.n_classes))
+        / math.sqrt(cf),
+        "b": jnp.zeros((cfg.n_classes,)),
+    }
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _bn(x, p, s, train: bool):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {
+            "mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mu,
+            "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mu, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=DN
+    )
+
+
+def _apply_unit(u: Unit, p, s, x, train):
+    new_s = dict(s)
+    if u.kind == "stem":
+        x = _conv(x, p["conv"])
+        x, new_s["bn"] = _bn(x, p["bn"], s["bn"], train)
+        return jax.nn.relu(x), new_s
+    if u.kind == "vggconv":
+        x = _conv(x, p["conv"])
+        x, new_s["bn"] = _bn(x, p["bn"], s["bn"], train)
+        x = jax.nn.relu(x)
+        if u.pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        return x, new_s
+    h = _conv(x, p["conv1"], u.stride)
+    h, new_s["bn1"] = _bn(h, p["bn1"], s["bn1"], train)
+    h = jax.nn.relu(h)
+    h = _conv(h, p["conv2"])
+    h, new_s["bn2"] = _bn(h, p["bn2"], s["bn2"], train)
+    if u.down:
+        x = _conv(x, p["down"], u.stride)
+        x, new_s["down_bn"] = _bn(x, p["down_bn"], s["down_bn"], train)
+    return jax.nn.relu(x + h), new_s
+
+
+def forward_blocks(
+    cfg: CNNConfig,
+    params: dict,
+    bn_state: dict,
+    x: jax.Array,  # [N, H, W, 3]
+    *,
+    n_blocks: int = -1,  # run first n blocks (-1 = all)
+    train: bool = True,
+    ratio: float = 1.0,
+):
+    """Runs prog-blocks [0, n_blocks); returns (features NHWC, new_bn_state)."""
+    plan = build_plan(cfg, ratio)
+    nb = len(params["blocks"]) if n_blocks < 0 else n_blocks
+    new_state = {"blocks": list(bn_state["blocks"])}
+    for bi in range(nb):
+        new_bs = []
+        for u, p, s in zip(plan[bi], params["blocks"][bi], bn_state["blocks"][bi]):
+            x, ns = _apply_unit(u, p, s, x, train)
+            new_bs.append(ns)
+        new_state["blocks"][bi] = new_bs
+    return x, new_state
+
+
+def head_logits(params: dict, feats: jax.Array) -> jax.Array:
+    """AdaptiveAvgPool(1,1) + linear classifier."""
+    pooled = jnp.mean(feats, axis=(1, 2))
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def forward_cnn(cfg: CNNConfig, params, bn_state, x, train=True, ratio: float = 1.0):
+    feats, new_state = forward_blocks(
+        cfg, params, bn_state, x, train=train, ratio=ratio
+    )
+    return head_logits(params, feats), new_state
+
+
+# ---------------------------------------------------------------------------
+# block metadata (for ProFL + Table 5)
+# ---------------------------------------------------------------------------
+
+
+def block_param_counts(params: dict) -> List[int]:
+    """Trainable params per prog-block (head excluded, as in paper Table 5)."""
+    return [sum(x.size for x in jax.tree.leaves(bp)) for bp in params["blocks"]]
+
+
+def block_out_channels(cfg: CNNConfig, ratio: float = 1.0) -> List[int]:
+    return [blk[-1].cout for blk in build_plan(cfg, ratio)]
+
+
+def block_spatial_sizes(cfg: CNNConfig) -> List[int]:
+    """Feature-map side length after each prog-block."""
+    s = cfg.in_size
+    out = []
+    for blk in build_plan(cfg):
+        for u in blk:
+            if u.stride == 2 or u.pool:
+                s //= 2
+        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HeteroFL width slicing: sub-model params are leading slices of the global
+# ---------------------------------------------------------------------------
+
+
+def slice_cnn_params(global_params: dict, sub_template: dict) -> dict:
+    """Extract a width-scaled sub-model's params from the global tensors."""
+    return jax.tree.map(
+        lambda g, s: g[tuple(slice(0, d) for d in s.shape)],
+        global_params,
+        sub_template,
+    )
+
+
+def scatter_cnn_params(global_like: dict, sub_params: dict):
+    """Place sub-model params back into zero-padded global-shaped tensors,
+    plus a mask of which entries were covered (for HeteroFL aggregation)."""
+
+    def put(g, s):
+        out = jnp.zeros_like(g)
+        out = out.at[tuple(slice(0, d) for d in s.shape)].set(s)
+        return out
+
+    def mask(g, s):
+        m = jnp.zeros(g.shape, jnp.float32)
+        return m.at[tuple(slice(0, d) for d in s.shape)].set(1.0)
+
+    return (
+        jax.tree.map(put, global_like, sub_params),
+        jax.tree.map(mask, global_like, sub_params),
+    )

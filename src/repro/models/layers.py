@@ -1,0 +1,216 @@
+"""Core transformer layers in pure JAX (no flax): norms, RoPE, GQA attention
+(+ qk_norm / QKV bias / sliding window), dense MLPs.
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays.  Layer-stack params carry a leading
+  ``[G]`` group dim and are consumed by ``lax.scan`` — the per-layer functions
+  here take the *unstacked* slice.
+* Initializers take explicit ``rng``; compute accumulates in f32 where it
+  matters (norm stats, softmax) and casts back to the param dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, d: int, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = jnp.mean(xf * xf, -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """qk_norm: RMSNorm over the head_dim axis of [..., hd]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, hd]; positions: [S] or broadcastable to x[..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ArchConfig, rng) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, K * hd, dt),
+        "wv": dense_init(ks[2], D, K * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    if cfg.attn_bias:
+        p["bo"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def qkv_project(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """x: [B, S, D] -> q [B,H,S,hd], k/v [B,K,S,hd] (RoPE + qk_norm applied)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, K, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, K, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm_headwise(p["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(cfg: ArchConfig, p: dict, o: jax.Array) -> jax.Array:
+    """o: [B,H,S,hd] -> [B,S,D]."""
+    B, H, S, hd = o.shape
+    y = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd) @ p["wo"]
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    return y
+
+
+def self_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,  # [B, S, D]
+    positions: jax.Array,  # [S]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    q, k, v = qkv_project(cfg, p, x, positions)
+    w = cfg.sliding_window if window is None else window
+    o = ops.attention(q, k, v, causal=causal, window=w, impl=impl)
+    return attn_out(cfg, p, o)
+
+
+def init_cross_attention(cfg: ArchConfig, rng) -> dict:
+    # whisper-style MHA over encoder output (no rope)
+    return init_attention(cfg, rng)
+
+
+def cross_attention(
+    cfg: ArchConfig, p: dict, x: jax.Array, enc: jax.Array, impl: str = "auto"
+) -> jax.Array:
+    """x: [B,S,D] queries; enc: [B,Se,D] encoder keys/values."""
+    B, S, _ = x.shape
+    Se = enc.shape[1]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (enc @ p["wk"]).reshape(B, Se, K, hd).transpose(0, 2, 1, 3)
+    v = (enc @ p["wv"]).reshape(B, Se, K, hd).transpose(0, 2, 1, 3)
+    o = ops.attention(q, k, v, causal=False, window=0, impl=impl)
+    return attn_out(cfg, p, o)
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, rng, d_ff: Optional[int] = None) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "swiglu":
+        p = {
+            "w_gate": dense_init(ks[0], D, F, dt),
+            "w_up": dense_init(ks[1], D, F, dt),
+            "w_down": dense_init(ks[2], F, D, dt),
+        }
+    else:  # gelu
+        p = {
+            "w_up": dense_init(ks[0], D, F, dt),
+            "w_down": dense_init(ks[1], F, D, dt),
+        }
+        if cfg.mlp_bias:
+            p["b_up"] = jnp.zeros((F,), dt)
+            p["b_down"] = jnp.zeros((D,), dt)
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    h = jax.nn.gelu(h)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y

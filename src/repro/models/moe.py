@@ -1,0 +1,177 @@
+"""Mixture-of-experts FFN: sort-based capacity routing, expert-parallel.
+
+TPU adaptation (vs. the GPU einsum-dispatch in GShard-style code): a dense
+one-hot dispatch einsum costs O(T · E·C · D) FLOPs — quadratic in tokens and
+ruinous at E=128.  Instead we sort (token, expert) pairs by expert id,
+compute each pair's position inside its expert via segment arithmetic, drop
+beyond capacity, and scatter tokens into an ``[E, C, D]`` buffer that feeds a
+*batched* expert matmul (MXU-friendly, FLOPs = active-expert FLOPs × capacity
+factor).  Experts are sharded over the ``model`` mesh axis (expert parallel);
+the scatter/gather across the token-sharded → expert-sharded boundary is an
+all-to-all that GSPMD inserts from the sharding constraints.
+
+Returns the standard switch-transformer load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.launch import sharding
+from repro.models import layers
+
+
+def padded_experts(n: int, tp: int = 16) -> int:
+    """Experts padded up to a multiple of the production TP degree so the
+    [E, C, D] dispatch buffer shards over the 'model' axis (e.g. qwen2-moe's
+    60 -> 64; unsharded 60 replicated the buffer per device —
+    EXPERIMENTS.md §Perf i3).  Padded experts are masked in the router and
+    never receive tokens."""
+    if n < tp:
+        return n
+    return -(-n // tp) * tp
+
+
+def init_moe(cfg: ArchConfig, mcfg: MoECfg, rng) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D, F = cfg.d_model, mcfg.d_expert
+    E = padded_experts(mcfg.n_experts)
+    ks = jax.random.split(rng, 5)
+    std = 1.0 / math.sqrt(D)
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * 0.02).astype(
+            jnp.float32  # router kept in f32: tiny + routing is precision-sensitive
+        ),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * std).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * std).astype(dt),
+        "w_down": (
+            jax.random.normal(ks[3], (E, F, D), jnp.float32) / math.sqrt(F)
+        ).astype(dt),
+    }
+    if mcfg.n_shared:
+        p["shared"] = layers.init_mlp(cfg, ks[4], d_ff=mcfg.n_shared * F)
+    return p
+
+
+def capacity(mcfg: MoECfg, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * mcfg.top_k * mcfg.capacity_factor / mcfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly tiles
+
+
+def _dp_groups(T: int) -> int:
+    """Number of shard-local routing groups: the dp degree of the active
+    mesh when it divides the token count, else 1.  Routing/sort/scatter run
+    per group (leading dim sharded over dp) so no global token gather ever
+    materializes; the buf resharding (dp-grouped -> expert-sharded) is the
+    all-to-all of classic expert parallelism, inserted by GSPMD
+    (EXPERIMENTS.md §Perf i3/i5)."""
+    env = sharding.current_env()
+    if env is None:
+        return 1
+    dp = sharding._axis_size(env, env.dp_axes)
+    return dp if T % dp == 0 else 1
+
+
+def apply_moe(cfg: ArchConfig, mcfg: MoECfg, p: dict, x: jax.Array):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    E_real, K = mcfg.n_experts, mcfg.top_k
+    E = padded_experts(E_real)
+    G = _dp_groups(T)
+    Tl = T // G
+    C = capacity(mcfg, Tl)
+
+    env = sharding.current_env()
+    dpx = env.dp_axes if env else None
+    tpx = env.tp_axis if env else None
+
+    xf = x.reshape(G, Tl, D)
+    if env:
+        xf = jax.lax.with_sharding_constraint(
+            xf, sharding._sanitize(env, jax.sharding.PartitionSpec(dpx, None, None),
+                                   xf.shape))
+    # bf16 matmul with f32 accumulation: avoids materializing an f32 copy
+    # of the whole token stream just for the router (§Perf i7)
+    logits = jnp.einsum(
+        "gtd,de->gte", xf, p["router"].astype(xf.dtype),
+        preferred_element_type=jnp.float32,
+    )  # [G, Tl, E] f32
+    if E != E_real:  # padded experts never win the top-k
+        logits = logits - 1e30 * (jnp.arange(E) >= E_real)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)  # [G, Tl, K]
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # load-balance aux (switch): E * Σ_e fraction_e * prob_e
+    density = jnp.mean(
+        jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=(0, 1, 2)
+    )  # [E]
+    prob_mean = jnp.mean(probs, axis=(0, 1))
+    aux = E_real * E * jnp.sum(density * prob_mean) / K
+
+    # ---- shard-local sort-based dispatch: GATHERS ONLY ------------------
+    # (GSPMD shards batched gathers cleanly; scatters with computed indices
+    # forced full replication of the dispatch buffer — §Perf i5)
+    TKl = Tl * K
+    flat_e = eidx.reshape(G, TKl)
+    flat_t = jnp.tile(jnp.repeat(jnp.arange(Tl), K)[None], (G, 1))
+    order = jnp.argsort(flat_e, axis=1)  # stable, per group
+    se = jnp.take_along_axis(flat_e, order, 1)
+    st = jnp.take_along_axis(flat_t, order, 1)
+    inv = jnp.argsort(order, axis=1)  # sorted-row of each (t, k) pair
+    seg = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E + 1), side="left")
+    )(se)  # [G, E+1] segment starts (seg[:, E] == TKl)
+    pos = jnp.arange(TKl)[None] - jnp.take_along_axis(seg, se, 1)
+    keep = pos < C
+
+    dp_spec = lambda nd: jax.sharding.PartitionSpec(dpx, *([None] * (nd - 1)))
+
+    def glocal(a):  # keep a tensor group-sharded over dp
+        if env is None:
+            return a
+        return jax.lax.with_sharding_constraint(
+            a, sharding._sanitize(env, dp_spec(a.ndim), a.shape))
+
+    sorted_x = glocal(jnp.take_along_axis(xf, st[..., None], 1))  # [G,TKl,D]
+    # expert e's capacity slots are the contiguous sorted rows
+    # [seg[e], seg[e] + C): a plain gather builds the dispatch buffer
+    slot_rows = seg[:, :E, None] + jnp.arange(C)[None, None]  # [G, E, C]
+    valid = slot_rows < seg[:, 1:, None]  # within this expert's segment
+    idx = jnp.clip(slot_rows, 0, TKl - 1).reshape(G, E * C)
+    buf = jnp.take_along_axis(sorted_x, idx[..., None], 1).reshape(G, E, C, D)
+    buf = glocal(buf * valid[..., None].astype(x.dtype))
+
+    # ---- batched expert matmul (swiglu); experts sharded over 'model' ---
+    # the (g: dp) -> (e: model) reshard around the matmuls IS the expert-
+    # parallel all-to-all
+    def elocal(a):  # [G, E, C, F]: experts over model
+        if env is None:
+            return a
+        return jax.lax.with_sharding_constraint(
+            a, sharding._sanitize(
+                env, jax.sharding.PartitionSpec(dpx, tpx, None, None), a.shape))
+
+    h = elocal(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"]))
+    u = elocal(jnp.einsum("gecd,edf->gecf", buf, p["w_up"]))
+    h = jax.nn.silu(h) * u
+    y_e = glocal(jnp.einsum("gecf,efd->gecd", h, p["w_down"]))  # [G, E, C, D]
+
+    # ---- combine: two gathers (sorted-row lookup, then un-sort) ----------
+    flat_slot = se * C + jnp.minimum(pos, C - 1)  # [G, TKl]
+    y_sorted = jnp.take_along_axis(
+        y_e.reshape(G, E * C, D), flat_slot[..., None], 1
+    ) * keep[..., None].astype(x.dtype)
+    routed_tok = glocal(jnp.take_along_axis(y_sorted, inv[..., None], 1))
+    y = jnp.sum(
+        routed_tok.reshape(G, Tl, K, D) * gate[..., None].astype(x.dtype), axis=2
+    )
+
+    if "shared" in p:
+        y = y + layers.apply_mlp(cfg, p["shared"], xf)
+    y = sharding.constrain_hidden(y.reshape(B, S, D))
+    return y, aux

@@ -1,0 +1,342 @@
+"""Attention-free token mixers: Mamba (selective SSM, used by the jamba
+hybrid) and RWKV6 "Finch" (data-dependent decay linear attention).
+
+TPU adaptation notes
+--------------------
+* Mamba's CUDA "selective scan" kernel fuses the recurrence into SRAM; the
+  TPU-native equivalent is a *chunked associative scan*: ``lax.scan`` over
+  time chunks with ``lax.associative_scan`` inside each chunk, so the
+  materialized state tensor is O(B · chunk · d_inner · d_state) instead of
+  O(B · S · ...), and the MXU-heavy input/output projections stay ordinary
+  sharded matmuls (d_inner over the ``model`` axis).
+* RWKV6's recurrence has a data-dependent per-channel decay *inside* the
+  state product, so the plain first-order associative form still applies per
+  (key-dim) row: the state is [hd_k, hd_v] per head and the decay multiplies
+  rows.  We use a time-step ``lax.scan`` (state stays O(1) in S — this is
+  exactly why rwkv6 is the natural long_500k architecture).
+
+Both expose: init, full-sequence forward (train/prefill), single-token
+decode step with explicit state, and state initializers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RWKVCfg, SSMCfg
+from repro.launch import sharding
+from repro.models.layers import dense_init
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+
+def mamba_dims(cfg: ArchConfig, scfg: SSMCfg):
+    d_inner = scfg.expand * cfg.d_model
+    dt_rank = scfg.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(cfg: ArchConfig, scfg: SSMCfg, rng) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    d_inner, dt_rank = mamba_dims(cfg, scfg)
+    N = scfg.d_state
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(ks[0], D, 2 * d_inner, dt),
+        "conv_w": (jax.random.normal(ks[1], (d_inner, scfg.d_conv), jnp.float32)
+                   / math.sqrt(scfg.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "w_x": dense_init(ks[2], d_inner, dt_rank + 2 * N, dt),
+        "w_dt2": dense_init(ks[3], dt_rank, d_inner, dt),
+        "dt_bias": jnp.zeros((d_inner,), dt),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (d_inner, N))
+        ).astype(jnp.float32),
+        "d": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(ks[4], d_inner, D, dt),
+    }
+
+
+def _mamba_proj(cfg, scfg, p, x):
+    """Shared pre-recurrence compute. x: [B, S, D] ->
+    (a [B,S,di,N], b [B,S,di,N], Cmat [B,S,N], x_conv [B,S,di], z)."""
+    d_inner, dt_rank = mamba_dims(cfg, scfg)
+    N = scfg.d_state
+    xz = x @ p["w_in"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # keep d_inner on the 'model' axis (NOT the residual stream's seq
+    # sharding) — without this the chunk scan replicates the SSM state
+    return sharding.constrain_ff(x_in), sharding.constrain_ff(z)
+
+
+def _mamba_ssm_terms(cfg, scfg, p, x_conv):
+    N = scfg.d_state
+    _, dt_rank = mamba_dims(cfg, scfg)
+    dbc = x_conv @ p["w_x"]
+    dt_low = dbc[..., :dt_rank]
+    Bm = dbc[..., dt_rank : dt_rank + N].astype(jnp.float32)
+    Cm = dbc[..., dt_rank + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_low @ p["w_dt2"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [B,S,di]
+    A = -jnp.exp(p["a_log"])  # [di, N] f32
+    a = jnp.exp(dt[..., None] * A)  # [B,S,di,N]
+    b = dt[..., None] * Bm[..., None, :] * x_conv.astype(jnp.float32)[..., None]
+    return a, b, Cm
+
+
+def mamba_forward(
+    cfg: ArchConfig, scfg: SSMCfg, p: dict, x: jax.Array, *, return_state: bool = False
+):
+    """Full-sequence selective SSM. x: [B, S, D] -> [B, S, D]
+    (+ decode state when ``return_state``)."""
+    B, S, D = x.shape
+    d_inner, _ = mamba_dims(cfg, scfg)
+    K = scfg.d_conv
+    x_in, z = _mamba_proj(cfg, scfg, p, x)
+
+    # causal depthwise conv over time
+    xp = jnp.pad(x_in, ((0, 0), (K - 1, 0), (0, 0)))
+    x_conv = sum(
+        xp[:, j : j + S] * p["conv_w"][:, j] for j in range(K)
+    ) + p["conv_b"]
+    x_conv = sharding.constrain_ff(jax.nn.silu(x_conv))
+
+    # Chunked associative scan over time.  The (dt, B, C, a, b) SSM terms
+    # are computed PER CHUNK inside a checkpointed scan body: materializing
+    # them for the full sequence costs O(B·S·d_inner·N) f32 — at jamba scale
+    # that was ~4 TiB/device in the compiled step (EXPERIMENTS.md §Perf i1).
+    chunk = min(scfg.chunk, S)
+    pad = (-S) % chunk
+    xc_full = jnp.pad(x_conv, ((0, 0), (0, pad), (0, 0))) if pad else x_conv
+    nch = (S + pad) // chunk
+    xc_chunks = xc_full.reshape(B, nch, chunk, d_inner).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, args):  # xc: [B, chunk, di]
+        ci, xc = args
+        ac, bc, Cc = _mamba_ssm_terms(cfg, scfg, p, xc)  # f32, chunk-local
+        ac = sharding.constrain_time_state(ac)
+        bc = sharding.constrain_time_state(bc)
+        if pad:  # padded tail steps are identity transitions
+            valid = (ci * chunk + jnp.arange(chunk)) < S  # [chunk]
+            v = valid[None, :, None, None]
+            ac = jnp.where(v, ac, 1.0)
+            bc = jnp.where(v, bc, 0.0)
+        Ac, Bc = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = sharding.constrain_time_state(Ac * h[:, None] + Bc)
+        yc = jnp.einsum("bcdn,bcn->bcd", hs, Cc)
+        yc = yc + p["d"].astype(jnp.float32) * xc.astype(jnp.float32)
+        return hs[:, -1], sharding.constrain_time_state(yc)
+
+    h0 = jnp.zeros((B, d_inner, scfg.d_state), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step, prevent_cse=False), h0,
+        (jnp.arange(nch), xc_chunks),
+    )  # ys: [nch, B, chunk, di]
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S + pad, d_inner)[:, :S]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        state = {
+            "h": h_fin,
+            "conv": x_in[:, -(K - 1):] if K > 1 else x_in[:, :0],
+        }
+        return out, state
+    return out
+
+
+def mamba_state_init(cfg: ArchConfig, scfg: SSMCfg, batch: int, dtype) -> dict:
+    d_inner, _ = mamba_dims(cfg, scfg)
+    return {
+        "h": jnp.zeros((batch, d_inner, scfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, scfg.d_conv - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode_step(cfg: ArchConfig, scfg: SSMCfg, p: dict, state: dict, x: jax.Array):
+    """x: [B, 1, D] -> (y [B, 1, D], new_state)."""
+    B = x.shape[0]
+    K = scfg.d_conv
+    x_in, z = _mamba_proj(cfg, scfg, p, x)  # [B,1,di]
+    hist = jnp.concatenate([state["conv"], x_in], axis=1)  # [B, K, di]
+    x_conv = jnp.einsum("bkd,dk->bd", hist, p["conv_w"]) + p["conv_b"]
+    x_conv = jax.nn.silu(x_conv)[:, None]  # [B,1,di]
+    a, b, Cm = _mamba_ssm_terms(cfg, scfg, p, x_conv)
+    h = a[:, 0] * state["h"] + b[:, 0]  # [B, di, N]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]) + p["d"].astype(jnp.float32) * x_conv[:, 0]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], {"h": h, "conv": hist[:, 1:]}
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+
+def init_rwkv(cfg: ArchConfig, rcfg: RWKVCfg, rng) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    M = D  # r/k/v/g width == d_model, heads of rcfg.head_dim
+    ks = jax.random.split(rng, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, D), dt),  # token-shift lerp for r,k,v,g,w
+        "w_r": dense_init(ks[0], D, M, dt),
+        "w_k": dense_init(ks[1], D, M, dt),
+        "w_v": dense_init(ks[2], D, M, dt),
+        "w_g": dense_init(ks[3], D, M, dt),
+        "w_o": dense_init(ks[4], M, D, dt),
+        "decay_base": -6.0 * jnp.ones((M,), jnp.float32),
+        "decay_w1": dense_init(ks[5], D, rcfg.decay_lora, dt),
+        "decay_w2": (jax.random.normal(ks[6], (rcfg.decay_lora, M), jnp.float32)
+                     * 0.01).astype(dt),
+        "u": jnp.zeros((M,), jnp.float32),  # per-channel bonus
+        "ln_scale": jnp.ones((M,), dt),
+        "ln_bias": jnp.zeros((M,), dt),
+    }
+
+
+def _rwkv_pre(cfg, rcfg, p, x, x_prev):
+    """Token-shift + projections. x, x_prev: [B, S, D] (x_prev = shifted x).
+    Returns r,k,v,g [B,S,H,hd], w decay in (0,1) [B,S,H,hd]."""
+    B, S, D = x.shape
+    hd = rcfg.head_dim
+    H = D // hd
+    mu = p["mu"]
+    mix = lambda i: x + mu[i] * (x_prev - x)
+    cs = sharding.constrain_time_state
+    r = cs((mix(0) @ p["w_r"]).reshape(B, S, H, hd))
+    k = cs((mix(1) @ p["w_k"]).reshape(B, S, H, hd))
+    v = cs((mix(2) @ p["w_v"]).reshape(B, S, H, hd))
+    g = sharding.constrain_ff(jax.nn.silu(mix(3) @ p["w_g"]))  # [B,S,M]
+    dec = p["decay_base"] + ((mix(4) @ p["decay_w1"]) @ p["decay_w2"]).astype(
+        jnp.float32
+    )
+    w = cs(jnp.exp(-jnp.exp(dec)).reshape(B, S, H, hd))  # data-dependent decay
+    return r, k, v, g, w
+
+
+def _rwkv_groupnorm(p, y, eps=1e-5):
+    """Per-head layernorm of y: [B, S, H, hd]."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.var(yf, -1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, hd = y.shape
+    yn = yn.reshape(B, S, H * hd)
+    return yn * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+
+
+def rwkv_forward(
+    cfg: ArchConfig, rcfg: RWKVCfg, p: dict, x: jax.Array, *, return_state: bool = False
+):
+    """Full-sequence RWKV6 time mix. x: [B, S, D] -> [B, S, D]
+    (+ decode state when ``return_state``)."""
+    B, S, D = x.shape
+    hd = rcfg.head_dim
+    H = D // hd
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv_pre(cfg, rcfg, p, x, x_prev)
+    u = p["u"].reshape(H, hd)
+
+    def step(Sst, rkvw):
+        rt, kt, vt, wt = rkvw  # [B,H,hd]
+        kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+        # y = r · (S + u⊙(k⊗v))
+        yt = jnp.einsum(
+            "bhi,bhij->bhj", rt.astype(jnp.float32), Sst + u[..., None] * kv
+        )
+        Snew = wt.astype(jnp.float32)[..., None] * Sst + kv
+        return Snew, yt
+
+    # Two-level time scan: the outer (chunk) level is checkpointed so the
+    # backward pass stores only chunk-boundary states instead of one
+    # [B, H, hd, hd] state per TIME STEP (EXPERIMENTS.md §Perf i2).
+    chunk = 64
+    pad = (-S) % chunk
+    nch = (S + pad) // chunk
+
+    def to_chunks(a, pad_value=0.0):  # [B,S,H,hd] -> [nch, chunk, B, H, hd]
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=pad_value)
+        return a.reshape(B, nch, chunk, H, hd).transpose(1, 2, 0, 3, 4)
+
+    def chunk_step(Sst, rkvw_c):
+        Sn, ys_c = jax.lax.scan(step, Sst, rkvw_c)  # ys_c: [chunk, B, H, hd]
+        return Sn, ys_c
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    # pad k/v with zeros (no state writes) and w with ones (identity decay)
+    # so the carried state at step S is exact for return_state/prefill
+    xs = (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(w, 1.0))
+    Sfin, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step, prevent_cse=False), S0, xs
+    )  # ys: [nch, chunk, B, H, hd]
+    y = ys.transpose(2, 0, 1, 3, 4).reshape(B, S + pad, H, hd)[:, :S]
+    y = _rwkv_groupnorm(p, y).astype(x.dtype) * g
+    out = y @ p["w_o"]
+    if return_state:
+        return out, {"S": Sfin, "x_prev": x[:, -1:]}
+    return out
+
+
+def rwkv_state_init(cfg: ArchConfig, rcfg: RWKVCfg, batch: int, dtype) -> dict:
+    hd = rcfg.head_dim
+    H = cfg.d_model // hd
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+
+
+def rwkv_decode_step(cfg: ArchConfig, rcfg: RWKVCfg, p: dict, state: dict, x: jax.Array):
+    """x: [B, 1, D] -> (y [B, 1, D], new_state)."""
+    B, _, D = x.shape
+    hd = rcfg.head_dim
+    H = D // hd
+    r, k, v, g, w = _rwkv_pre(cfg, rcfg, p, x, state["x_prev"])
+    u = p["u"].reshape(H, hd)
+    rt, kt, vt, wt = r[:, 0], k[:, 0], v[:, 0], w[:, 0]
+    kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+    yt = jnp.einsum("bhi,bhij->bhj", rt.astype(jnp.float32), state["S"] + u[..., None] * kv)
+    Snew = wt.astype(jnp.float32)[..., None] * state["S"] + kv
+    y = _rwkv_groupnorm(p, yt[:, None]).astype(x.dtype) * g
+    return y @ p["w_o"], {"S": Snew, "x_prev": x}
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (the FFN of rwkv blocks)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_cm(cfg: ArchConfig, rng) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, D), dt),
+        "w_k": dense_init(ks[0], D, F, dt),
+        "w_v": dense_init(ks[1], F, D, dt),
+        "w_r": dense_init(ks[2], D, D, dt),
+    }
+
+
+def rwkv_cm_forward(cfg: ArchConfig, p: dict, x: jax.Array, x_prev=None) -> jax.Array:
+    """Channel mix: sigmoid(r) ⊙ (relu(k)² Wv). x: [B,S,D]."""
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = x + p["mu"][0] * (x_prev - x)
+    xr = x + p["mu"][1] * (x_prev - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])

@@ -1,0 +1,402 @@
+"""Decoder stacks assembled from the repeating group pattern, plus the
+whisper encoder tower and the stubbed modality frontends.
+
+Layout: ``params['layers']`` is a LIST with one entry per pattern slot; every
+leaf in a slot carries a leading ``[G]`` (= n_groups) dim.  The stack is
+``lax.scan``ned over G, so HLO size is O(len(pattern)), and ProFL block
+slicing is a leading-dim slice (see core/blocks.py).
+
+Three execution modes per slot kind:
+  * full-sequence forward  (training / the shrinking+growing sub-models)
+  * prefill                (full sequence + emit per-layer decode state)
+  * decode step            (one token + state)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.launch import sharding
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+
+def _init_slot(cfg: ArchConfig, spec: LayerSpec, rng, cross: bool) -> dict:
+    ks = jax.random.split(rng, 6)
+    p: dict = {"norm1": L.init_norm(cfg, cfg.d_model, jnp.dtype(cfg.param_dtype))}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(cfg, ks[0])
+    elif spec.mixer == "mamba":
+        p["mamba"] = S.init_mamba(cfg, cfg.ssm, ks[0])
+    elif spec.mixer == "rwkv":
+        p["rwkv"] = S.init_rwkv(cfg, cfg.rwkv, ks[0])
+    else:
+        raise ValueError(spec.mixer)
+    if cross and spec.mixer == "attn":
+        p["norm_cross"] = L.init_norm(cfg, cfg.d_model, jnp.dtype(cfg.param_dtype))
+        p["cross"] = L.init_cross_attention(cfg, ks[1])
+    if spec.ffn != "none" and not (cfg.parallel_block and spec.mixer == "attn"):
+        p["norm2"] = L.init_norm(cfg, cfg.d_model, jnp.dtype(cfg.param_dtype))
+    if spec.ffn == "dense":
+        p["ffn"] = L.init_mlp(cfg, ks[2])
+    elif spec.ffn == "moe":
+        p["moe"] = M.init_moe(cfg, cfg.moe, ks[2])
+    elif spec.ffn == "rwkv_cm":
+        p["rwkv_cm"] = S.init_rwkv_cm(cfg, ks[2])
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_decoder_layers(cfg: ArchConfig, rng, n_groups: Optional[int] = None) -> list:
+    """List of per-slot stacked params ([G, ...] leaves)."""
+    G = cfg.n_groups if n_groups is None else n_groups
+    cross = cfg.encoder is not None
+    out = []
+    for si, spec in enumerate(cfg.pattern):
+        slots = []
+        for g in range(G):
+            slots.append(
+                _init_slot(cfg, spec, jax.random.fold_in(rng, si * 10_000 + g), cross)
+            )
+        out.append(_stack(slots))
+    return out
+
+
+def init_encoder(cfg: ArchConfig, rng) -> dict:
+    """Whisper-style encoder: stub frame embeddings + pos embed + attn/gelu
+    layers (bidirectional).  The conv frontend is stubbed per the assignment:
+    inputs are precomputed frame embeddings [B, n_frames, d_model]."""
+    ecfg = cfg.encoder
+    dt = jnp.dtype(cfg.param_dtype)
+    enc_layer_cfg = cfg.with_(parallel_block=False)
+    slots = []
+    for g in range(ecfg.n_layers):
+        slots.append(
+            _init_slot(
+                enc_layer_cfg,
+                LayerSpec("attn", "dense"),
+                jax.random.fold_in(rng, 777_000 + g),
+                cross=False,
+            )
+        )
+    return {
+        "pos": (0.02 * jax.random.normal(rng, (ecfg.n_frames, cfg.d_model))).astype(dt),
+        "layers": [_stack(slots)],
+        "final_norm": L.init_norm(cfg, cfg.d_model, dt),
+    }
+
+
+def init_model(cfg: ArchConfig, rng) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    params = {
+        "embed": {"tok": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dt)},
+        "layers": init_decoder_layers(cfg, ks[1]),
+        "final_norm": L.init_norm(cfg, cfg.d_model, dt),
+    }
+    if cfg.learned_pos:
+        params["embed"]["pos"] = (
+            0.02 * jax.random.normal(ks[5], (cfg.learned_pos, cfg.d_model))
+        ).astype(dt)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(ks[2], cfg.d_model, cfg.vocab, dt)}
+    if cfg.encoder is not None:
+        params["encoder"] = init_encoder(cfg, ks[3])
+    if cfg.frontend is not None:
+        params["projector"] = {
+            "w": L.dense_init(ks[4], cfg.frontend.embed_dim, cfg.d_model, dt),
+            "b": jnp.zeros((cfg.d_model,), dt),
+        }
+    return params
+
+
+# ===========================================================================
+# per-layer application (full sequence)
+# ===========================================================================
+
+
+def apply_layer(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    enc: Optional[jax.Array],
+    *,
+    window_override: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One layer, full-sequence. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block and spec.mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a = L.self_attention(cfg, p["attn"], h, positions, window=window_override)
+        f = L.apply_mlp(cfg, p["ffn"], h)
+        return sharding.constrain_hidden(x + a + f), aux
+
+    if spec.mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        x = x + L.self_attention(cfg, p["attn"], h, positions, window=window_override)
+        if enc is not None and "cross" in p:
+            hc = L.apply_norm(cfg, p["norm_cross"], x)
+            x = x + L.cross_attention(cfg, p["cross"], hc, enc)
+    elif spec.mixer == "mamba":
+        x = x + S.mamba_forward(cfg, cfg.ssm, p["mamba"], L.apply_norm(cfg, p["norm1"], x))
+    elif spec.mixer == "rwkv":
+        x = x + S.rwkv_forward(cfg, cfg.rwkv, p["rwkv"], L.apply_norm(cfg, p["norm1"], x))
+
+    if spec.ffn == "dense":
+        x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["norm2"], x))
+    elif spec.ffn == "moe":
+        y, aux = M.apply_moe(cfg, cfg.moe, p["moe"], L.apply_norm(cfg, p["norm2"], x))
+        x = x + y
+    elif spec.ffn == "rwkv_cm":
+        x = x + S.rwkv_cm_forward(cfg, p["rwkv_cm"], L.apply_norm(cfg, p["norm2"], x))
+    return sharding.constrain_hidden(x), aux
+
+
+def run_layers(
+    cfg: ArchConfig,
+    layer_params: list,  # per-slot stacked, leading [G']
+    x: jax.Array,
+    positions: jax.Array,
+    enc: Optional[jax.Array] = None,
+    *,
+    remat: bool = True,
+    window_override: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scan the group pattern over the (possibly sliced) stack.
+    Returns (x, total_moe_aux)."""
+
+    def one_layer(spec):
+        def f(p, x):
+            return apply_layer(
+                cfg, spec, p, x, positions, enc, window_override=window_override
+            )
+        return f
+
+    # nested remat: per-LAYER checkpoints inside multi-layer groups keep the
+    # recomputed-backward transient at max-over-layers instead of
+    # sum-over-layers (jamba's 8-layer group held 4 MoE layers' residuals
+    # simultaneously — §Perf i6)
+    nested = remat and len(cfg.pattern) > 1
+
+    def group_body(carry, slot_params):
+        x, aux = carry
+        for spec, p in zip(cfg.pattern, slot_params):
+            f = one_layer(spec)
+            if nested:
+                # prevent_cse=True (default): this is straight-line code, not
+                # a scan body — with CSE allowed, XLA merges the recompute
+                # with the forward and the remat is a no-op (§Perf i6b)
+                f = jax.checkpoint(f)
+            x, a = f(p, x)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), tuple(layer_params))
+    return x, aux
+
+
+# ===========================================================================
+# embedding / head / encoder / frontends
+# ===========================================================================
+
+
+def embed_inputs(cfg: ArchConfig, params: dict, batch: dict):
+    """batch: {'tokens': [B,S] int32, optional 'frontend_embeds': [B,P,Ef]}.
+    Returns (x [B, S', D], positions [S'], n_prefix) where n_prefix is the
+    number of prepended frontend tokens (loss is computed on token part)."""
+    tokens = batch["tokens"]
+    x = params["embed"]["tok"][tokens]  # gather
+    if cfg.learned_pos:
+        x = x + params["embed"]["pos"][: tokens.shape[1]].astype(x.dtype)
+    n_prefix = 0
+    if cfg.frontend is not None:
+        fe = batch["frontend_embeds"]
+        proj = fe @ params["projector"]["w"] + params["projector"]["b"]
+        x = jnp.concatenate([proj.astype(x.dtype), x], axis=1)
+        n_prefix = cfg.frontend.n_tokens
+    positions = jnp.arange(x.shape[1])
+    return sharding.constrain_hidden(x), positions, n_prefix
+
+
+def logits_from_hidden(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_soft_cap > 0:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return sharding.constrain_vocab_logits(logits)
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stubbed frame embeddings [B, F, D]."""
+    enc_p = params["encoder"]
+    x = frames + enc_p["pos"].astype(frames.dtype)
+    x = sharding.constrain_hidden(x)
+
+    def body(carry, slot_params):
+        x, _ = carry
+        h = L.apply_norm(cfg, slot_params["norm1"], x)
+        # bidirectional, no rope
+        pos = jnp.arange(x.shape[1])
+        cfg_enc = cfg.with_(use_rope=False)
+        x = x + L.self_attention(cfg_enc, slot_params["attn"], h, pos, causal=False)
+        x = x + L.apply_mlp(cfg, slot_params["ffn"], L.apply_norm(cfg, slot_params["norm2"], x))
+        return (sharding.constrain_hidden(x), jnp.zeros((), jnp.float32)), None
+
+    (x, _), _ = jax.lax.scan(
+        jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)), enc_p["layers"][0]
+    )
+    return L.apply_norm(cfg, enc_p["final_norm"], x)
+
+
+def forward_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    remat: bool = True,
+    window_override: Optional[int] = None,
+):
+    """Full stack minus the LM head. Returns (hidden [B,S',D], aux, n_prefix)."""
+    x, positions, n_prefix = embed_inputs(cfg, params, batch)
+    enc = None
+    if cfg.encoder is not None:
+        enc = encode(cfg, params, batch["frames"])
+    x, aux = run_layers(
+        cfg, params["layers"], x, positions, enc,
+        remat=remat, window_override=window_override,
+    )
+    return x, aux, n_prefix
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    remat: bool = True,
+    window_override: Optional[int] = None,
+):
+    """Full-model forward. Returns (logits [B, S', V], moe_aux, n_prefix)."""
+    x, aux, n_prefix = forward_hidden(
+        cfg, params, batch, remat=remat, window_override=window_override
+    )
+    return logits_from_hidden(cfg, params, x), aux, n_prefix
+
+
+# ===========================================================================
+# decode path (single token, explicit state) — see train/serve.py for the
+# cache construction; here is the per-layer step.
+# ===========================================================================
+
+
+def _decode_attn(
+    cfg: ArchConfig, p: dict, x: jax.Array, cache: dict, pos: jax.Array, window: int
+):
+    """x: [B,1,D]; cache: {'k','v': [B,Kh,W,hd]}; pos: scalar global position.
+    Writes the new token at pos % W and attends over valid entries."""
+    B = x.shape[0]
+    H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    W = cache["k"].shape[2]
+    q, k, v = L.qkv_project(cfg, p, x, jnp.full((1,), pos))  # rope at abs pos
+    slot = jax.lax.rem(pos, W) if window > 0 else jnp.minimum(pos, W - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+
+    j = jnp.arange(W)
+    if window > 0:
+        stored_pos = pos - jax.lax.rem(slot - j + W, W)
+        valid = stored_pos >= 0
+    else:
+        stored_pos = j
+        valid = j <= pos
+    qr = q.reshape(B, Kh, H // Kh, 1, hd)
+    s = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qr.astype(jnp.float32), ck.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(hd))
+    s = jnp.where(valid[None, None, None, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", pattn, cv.astype(jnp.float32))
+    o = o.reshape(B, H, 1, hd).astype(x.dtype)
+    return L.attn_out(cfg, p, o), {"k": ck, "v": cv}
+
+
+def decode_layer_step(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    window: int,
+):
+    """One decoder layer, one token. Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    if cfg.parallel_block and spec.mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a, kv = _decode_attn(cfg, p["attn"], h, cache, pos, window)
+        f = L.apply_mlp(cfg, p["ffn"], h)
+        new_cache.update(kv)
+        return x + a + f, new_cache
+
+    if spec.mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a, kv = _decode_attn(cfg, p["attn"], h, cache, pos, window)
+        new_cache.update(kv)
+        x = x + a
+        if "cross" in p:
+            hc = L.apply_norm(cfg, p["norm_cross"], x)
+            # cross k/v precomputed at prefill
+            B = x.shape[0]
+            H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            qc = hc @ p["cross"]["wq"]
+            if cfg.qkv_bias:
+                qc = qc + p["cross"]["bq"]
+            qc = qc.reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+            qr = qc.reshape(B, Kh, H // Kh, 1, hd)
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs",
+                qr.astype(jnp.float32),
+                cache["cross_k"].astype(jnp.float32),
+            ) / jnp.sqrt(jnp.float32(hd))
+            pr = jax.nn.softmax(s, -1)
+            o = jnp.einsum("bkgqs,bksd->bkgqd", pr, cache["cross_v"].astype(jnp.float32))
+            o = o.reshape(B, H, 1, hd).astype(x.dtype)
+            x = x + L.attn_out(cfg, p["cross"], o)
+    elif spec.mixer == "mamba":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, st = S.mamba_decode_step(cfg, cfg.ssm, p["mamba"], cache["mamba"], h)
+        new_cache["mamba"] = st
+        x = x + y
+    elif spec.mixer == "rwkv":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, st = S.rwkv_decode_step(cfg, cfg.rwkv, p["rwkv"], cache["rwkv"], h)
+        new_cache["rwkv"] = st
+        x = x + y
+
+    if spec.ffn == "dense":
+        x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["norm2"], x))
+    elif spec.ffn == "moe":
+        y, _ = M.apply_moe(cfg, cfg.moe, p["moe"], L.apply_norm(cfg, p["norm2"], x))
+        x = x + y
+    elif spec.ffn == "rwkv_cm":
+        h = L.apply_norm(cfg, p["norm2"], x)
+        y = S.rwkv_cm_forward(cfg, p["rwkv_cm"], h, cache["cm_x_prev"])
+        new_cache["cm_x_prev"] = h
+        x = x + y
+    return x, new_cache

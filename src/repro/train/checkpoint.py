@@ -1,0 +1,50 @@
+"""Numpy .npz checkpointing of arbitrary pytrees (no orbax in container).
+
+Leaves are flattened with their tree paths as keys, so a checkpoint can be
+restored into any structurally-identical tree and partially loaded (e.g. the
+ProFL shrinking stage saves per-block init params that the growing stage
+loads block-by-block).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def load(path: str, like: Optional[PyTree] = None) -> PyTree:
+    """Restore; if ``like`` is given, reshape into its structure (and cast to
+    its dtypes). Otherwise returns the flat {path: array} dict."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    if like is None:
+        return flat
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        out.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,141 @@
+"""Optimizers with frozen-leaf masking (no flax/optax dependency).
+
+The ProFL memory claim hinges on frozen blocks carrying NO optimizer state:
+``init(params, mask)`` allocates moments only for trainable leaves (frozen
+leaves get a zero-size placeholder so the pytree structure stays static),
+and ``update`` returns zero updates for them.  This is what turns "freeze
+the prefix" into actual HBM savings in the compiled step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree, Optional[PyTree]], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _mask_tree(params: PyTree, mask: Optional[PyTree]) -> PyTree:
+    if mask is None:
+        return jax.tree.map(lambda _: True, params)
+    return mask
+
+
+_EMPTY = None  # placeholder for frozen-leaf state
+
+
+def _zeros_if(flag: bool, leaf):
+    return jnp.zeros_like(leaf, dtype=jnp.float32) if flag else jnp.zeros((0,), jnp.float32)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params, mask=None):
+        m = _mask_tree(params, mask)
+        if momentum == 0.0:
+            return jax.tree.map(lambda p: jnp.zeros((0,), jnp.float32), params)
+        return jax.tree.map(_zeros_if, m, params)
+
+    def update(grads, state, params, step):
+        m = None
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * p.astype(jnp.float32)
+            if momentum and s.size:
+                s = momentum * s + gf
+                d = s
+            else:
+                d = gf
+            trainable = (s.size > 0) or momentum == 0.0
+            newp = p - (lr * d).astype(p.dtype) if trainable else p
+            return newp, s
+
+        out = jax.tree.map(upd, grads, state, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def masked_sgd(lr: float) -> Optimizer:
+    """Plain SGD that respects a trainable mask captured in the state tree.
+    State per leaf: f32 scalar 1.0 (trainable) / 0.0 (frozen)."""
+
+    def init(params, mask=None):
+        m = _mask_tree(params, mask)
+        return jax.tree.map(lambda flag: jnp.float32(1.0 if flag else 0.0), m)
+
+    def update(grads, state, params, step):
+        new_params = jax.tree.map(
+            lambda g, s, p: p - (lr * s * g.astype(jnp.float32)).astype(p.dtype),
+            grads, state, params,
+        )
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+@dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    grad_clip: float = 1.0
+
+
+def adamw(cfg: AdamWCfg) -> Optimizer:
+    """AdamW with linear warmup + masked state: frozen leaves hold zero-size
+    moments and receive no update (and no HBM)."""
+
+    def init(params, mask=None):
+        m = _mask_tree(params, mask)
+        return {
+            "mu": jax.tree.map(_zeros_if, m, params),
+            "nu": jax.tree.map(_zeros_if, m, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup, 1))
+        # global grad clip over trainable leaves
+        sq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g, mu in zip(jax.tree.leaves(grads), jax.tree.leaves(state["mu"]))
+            if mu.size
+        )
+        gnorm = jnp.sqrt(jnp.maximum(sq, 1e-12))
+        scale = jnp.minimum(1.0, cfg.grad_clip / gnorm) if cfg.grad_clip else 1.0
+
+        bc1 = 1.0 - cfg.b1 ** (step + 1)
+        bc2 = 1.0 - cfg.b2 ** (step + 1)
+
+        def upd(g, mu, nu, p):
+            if mu.size == 0:  # frozen
+                return p, mu, nu
+            gf = g.astype(jnp.float32) * scale
+            mu = cfg.b1 * mu + (1 - cfg.b1) * gf
+            nu = cfg.b2 * nu + (1 - cfg.b2) * gf * gf
+            d = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+            d = d + cfg.weight_decay * p.astype(jnp.float32)
+            return (p - (lr * d).astype(p.dtype)), mu, nu
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        is3 = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+        return new_params, {"mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init, update)

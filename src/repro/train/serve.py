@@ -1,0 +1,246 @@
+"""Serving path: KV/SSM cache construction, prefill, single-token decode.
+
+Semantics
+---------
+* ``init_cache(cfg, B, cache_len)`` builds the per-slot decode state with
+  capacity ``C``: attention slots get rotating-window or linear KV buffers
+  ``[G, B, Kh, C, hd]``; mamba/rwkv slots get O(1) recurrent states.
+* ``prefill`` runs the full sequence, returns ``(logits, cache, pos)``.
+* ``decode_step`` consumes ONE token at global position ``pos`` (scalar),
+  writes its k/v into the cache (slot ``pos % W`` for windowed attention)
+  and returns next-token logits — this is the ``serve_step`` lowered by the
+  decode_32k / long_500k dry-run shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.kernels import ops
+from repro.launch import sharding
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+def _attn_window(cfg: ArchConfig, cache_len: int, window: Optional[int]) -> int:
+    """Effective attention window for a given cache capacity. 0 = linear
+    (non-rotating) cache."""
+    if window is not None:
+        return window
+    return cfg.sliding_window
+
+
+# ===========================================================================
+# cache init
+# ===========================================================================
+
+
+def init_cache(
+    cfg: ArchConfig,
+    batch: int,
+    cache_len: int,
+    *,
+    window: Optional[int] = None,
+    dtype=None,
+) -> list:
+    """Per-slot stacked decode state ([G, ...] leaves)."""
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    G = cfg.n_groups
+    w = _attn_window(cfg, cache_len, window)
+    C = min(cache_len, w) if w > 0 else cache_len
+    Kh, hd = cfg.n_kv_heads, cfg.head_dim
+    out = []
+    for spec in cfg.pattern:
+        c: dict = {}
+        if spec.mixer == "attn":
+            c["k"] = jnp.zeros((G, batch, Kh, C, hd), dt)
+            c["v"] = jnp.zeros((G, batch, Kh, C, hd), dt)
+            if cfg.encoder is not None:
+                F = cfg.encoder.n_frames
+                c["cross_k"] = jnp.zeros((G, batch, Kh, F, hd), dt)
+                c["cross_v"] = jnp.zeros((G, batch, Kh, F, hd), dt)
+        elif spec.mixer == "mamba":
+            st = S.mamba_state_init(cfg, cfg.ssm, batch, dt)
+            c["mamba"] = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, *x.shape)), st)
+        elif spec.mixer == "rwkv":
+            st = S.rwkv_state_init(cfg, cfg.rwkv, batch, dt)
+            c["rwkv"] = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, *x.shape)), st)
+        if spec.ffn == "rwkv_cm":
+            c["cm_x_prev"] = jnp.zeros((G, batch, 1, cfg.d_model), dt)
+        out.append(c)
+    return out
+
+
+def cache_shardings(cfg: ArchConfig, env, cache) -> list:
+    """KV heads over 'model' (GQA kv=8 == mesh model dim fits), batch over
+    dp; recurrent states: inner channel dim over 'model'."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def spec(path, leaf):
+        name = sharding._path_str(path)
+        nd = leaf.ndim
+        if name.endswith("/k") or name.endswith("/v") or "cross_" in name:
+            return P(None, env.dp_axes, "model", None, None)
+        if "mamba/h" in name:
+            return P(None, env.dp_axes, "model", None)
+        if "mamba/conv" in name:
+            return P(None, env.dp_axes, None, "model")
+        if "rwkv/S" in name:
+            return P(None, env.dp_axes, "model", None, None)
+        return P(None, env.dp_axes, *([None] * (nd - 2)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(env.mesh, spec(p, x)), cache
+    )
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+
+def _store_kv(k, v, C: int, w: int):
+    """k/v [B,Kh,S,hd] -> cache [B,Kh,C,hd] (rotated when windowed)."""
+    B, Kh, Sq, hd = k.shape
+    if w > 0 and Sq > C:
+        k, v = k[:, :, -C:], v[:, :, -C:]
+        pos0 = Sq - C
+        slots = (pos0 + jnp.arange(C)) % C
+        ck = jnp.zeros((B, Kh, C, hd), k.dtype).at[:, :, slots].set(k)
+        cv = jnp.zeros((B, Kh, C, hd), v.dtype).at[:, :, slots].set(v)
+        return ck, cv
+    if Sq < C:
+        pad = C - Sq
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return k, v
+
+
+def _prefill_layer(cfg, spec: LayerSpec, p, x, positions, enc, C: int, w: int):
+    """Mirror of transformer.apply_layer that also emits the decode state."""
+    cache: dict = {}
+    if cfg.parallel_block and spec.mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = L.qkv_project(cfg, p["attn"], h, positions)
+        o = ops.attention(q, k, v, causal=True, window=w)
+        a = L.attn_out(cfg, p["attn"], o)
+        f = L.apply_mlp(cfg, p["ffn"], h)
+        cache["k"], cache["v"] = _store_kv(k, v, C, w)
+        return sharding.constrain_hidden(x + a + f), cache
+
+    if spec.mixer == "attn":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        q, k, v = L.qkv_project(cfg, p["attn"], h, positions)
+        o = ops.attention(q, k, v, causal=True, window=w)
+        x = x + L.attn_out(cfg, p["attn"], o)
+        cache["k"], cache["v"] = _store_kv(k, v, C, w)
+        if enc is not None and "cross" in p:
+            hc = L.apply_norm(cfg, p["norm_cross"], x)
+            x = x + L.cross_attention(cfg, p["cross"], hc, enc)
+            B, F = enc.shape[0], enc.shape[1]
+            Kh, hd = cfg.n_kv_heads, cfg.head_dim
+            ck = enc @ p["cross"]["wk"]
+            cv = enc @ p["cross"]["wv"]
+            if cfg.qkv_bias:
+                ck, cv = ck + p["cross"]["bk"], cv + p["cross"]["bv"]
+            cache["cross_k"] = ck.reshape(B, F, Kh, hd).transpose(0, 2, 1, 3)
+            cache["cross_v"] = cv.reshape(B, F, Kh, hd).transpose(0, 2, 1, 3)
+    elif spec.mixer == "mamba":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, st = S.mamba_forward(cfg, cfg.ssm, p["mamba"], h, return_state=True)
+        x = x + y
+        cache["mamba"] = st
+    elif spec.mixer == "rwkv":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, st = S.rwkv_forward(cfg, cfg.rwkv, p["rwkv"], h, return_state=True)
+        x = x + y
+        cache["rwkv"] = st
+
+    if spec.ffn == "dense":
+        x = x + L.apply_mlp(cfg, p["ffn"], L.apply_norm(cfg, p["norm2"], x))
+    elif spec.ffn == "moe":
+        y, _ = M.apply_moe(cfg, cfg.moe, p["moe"], L.apply_norm(cfg, p["norm2"], x))
+        x = x + y
+    elif spec.ffn == "rwkv_cm":
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + S.rwkv_cm_forward(cfg, p["rwkv_cm"], h)
+        cache["cm_x_prev"] = h[:, -1:]
+    return sharding.constrain_hidden(x), cache
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    cache_len: Optional[int] = None,
+    window: Optional[int] = None,
+):
+    """Full-sequence forward emitting the decode cache.
+    Returns (last-token logits [B, V], cache, next position scalar)."""
+    x, positions, n_prefix = T.embed_inputs(cfg, params, batch)
+    Sq = x.shape[1]
+    C_total = cache_len or Sq
+    w = _attn_window(cfg, C_total, window)
+    C = min(C_total, w) if w > 0 else C_total
+    enc = None
+    if cfg.encoder is not None:
+        enc = T.encode(cfg, params, batch["frames"])
+
+    def body(x, slot_params):
+        caches = []
+        for spec, p in zip(cfg.pattern, slot_params):
+            x, c = _prefill_layer(cfg, spec, p, x, positions, enc, C, w)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, stacked = jax.lax.scan(body, x, tuple(params["layers"]))
+    cache = list(stacked)
+    logits = T.logits_from_hidden(cfg, params, x[:, -1:])
+    return logits[:, 0], cache, jnp.int32(Sq)
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    tokens: jax.Array,  # [B] int32 — the token being decoded
+    pos: jax.Array,  # scalar int32 global position of this token
+    *,
+    window: Optional[int] = None,
+):
+    """One-token serve step. Returns (logits [B, V], new_cache)."""
+    C = 0
+    for c in cache:
+        if "k" in c:
+            C = c["k"].shape[3]
+            break
+    w = _attn_window(cfg, C, window)
+    x = params["embed"]["tok"][tokens][:, None]  # [B,1,D]
+    if cfg.learned_pos:
+        x = x + params["embed"]["pos"][pos][None, None].astype(x.dtype)
+    x = sharding.constrain_hidden(x)
+
+    def body(x, xs):
+        slot_params, slot_cache = xs
+        new_caches = []
+        for spec, p, c in zip(cfg.pattern, slot_params, slot_cache):
+            x, nc = T.decode_layer_step(cfg, spec, p, x, c, pos, w)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_stacked = jax.lax.scan(
+        body, x, (tuple(params["layers"]), tuple(cache))
+    )
+    logits = T.logits_from_hidden(cfg, params, x)
+    return logits[:, 0], list(new_stacked)

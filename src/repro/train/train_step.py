@@ -1,0 +1,122 @@
+"""Loss + train-step builders (full model; the progressive per-block step is
+assembled in core/progressive.py from the same primitives)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.train.optimizer import Optimizer
+
+MOE_AUX_COEF = 0.01
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [..., V] (any dtype), labels [...] int. Mean f32 xent."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def blockwise_lm_xent(
+    cfg: ArchConfig,
+    head_w: jax.Array,  # [D, V]
+    x: jax.Array,  # [B, S', D] final-norm'ed hidden
+    tokens: jax.Array,  # [B, S]
+    n_prefix: int,
+    *,
+    chunk: int = 2048,
+) -> jax.Array:
+    """Next-token xent with the [B, S, V] logits computed CHUNK-AT-A-TIME
+    over the sequence inside a checkpointed scan — the full f32 logits tensor
+    (the dominant train-step temp at 100k+ vocab) never materializes
+    (EXPERIMENTS.md §Perf i4)."""
+    x_tok = x[:, n_prefix:][:, :-1]
+    labels = tokens[:, 1:]
+    B, S, Dm = x_tok.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x_tok = jnp.pad(x_tok, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    n = (S + pad) // chunk
+    xc = x_tok.reshape(B, n, chunk, Dm).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, args):
+        ci, xb, lb = args
+        logits = xb @ head_w.astype(xb.dtype)  # [B, chunk, V]
+        if cfg.logit_soft_cap > 0:
+            logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, lb[..., None], axis=-1)[..., 0]
+        valid = (ci * chunk + jnp.arange(chunk))[None, :] < S
+        return acc + jnp.sum(jnp.where(valid, lse - ll, 0.0)), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        jnp.zeros((), jnp.float32), (jnp.arange(n), xc, lc),
+    )
+    return total / (B * S)
+
+
+def head_weights(cfg: ArchConfig, params: dict) -> jax.Array:
+    return params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]["w"]
+
+
+def make_loss_fn(
+    cfg: ArchConfig,
+    *,
+    remat: bool = True,
+    window_override: Optional[int] = None,
+) -> Callable:
+    """Next-token LM loss over the token part of the sequence (frontend
+    prefix tokens excluded)."""
+    from repro.models.layers import apply_norm
+
+    def loss_fn(params, batch):
+        x, aux, npre = T.forward_hidden(
+            cfg, params, batch, remat=remat, window_override=window_override
+        )
+        x = apply_norm(cfg, params["final_norm"], x)
+        loss = blockwise_lm_xent(cfg, head_weights(cfg, params), x,
+                                 batch["tokens"], npre)
+        return loss + MOE_AUX_COEF * aux, {"xent": loss, "moe_aux": aux}
+
+    return loss_fn
+
+
+def init_train_state(cfg: ArchConfig, params, opt: Optimizer, mask=None) -> dict:
+    return {"params": params, "opt": opt.init(params, mask), "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt: Optimizer,
+    *,
+    remat: bool = True,
+    window_override: Optional[int] = None,
+) -> Callable[[dict, dict], tuple]:
+    loss_fn = make_loss_fn(cfg, remat=remat, window_override=window_override)
+
+    def train_step(state: dict, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        new_params, new_opt = opt.update(
+            grads, state["opt"], state["params"], state["step"]
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step

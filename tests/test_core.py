@@ -1,0 +1,239 @@
+"""Unit tests for the ProFL core: block partitioning, effective movement /
+freezing determination, output modules, progressive sub-model training."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import blocks as B
+from repro.core import distill as DI
+from repro.core import effective_movement as EM
+from repro.core import output_module as OM
+from repro.core import progressive as P
+from repro.models import cnn as C
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWCfg, adamw
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def test_group_boundaries_cover_exactly():
+    for g, b in [(64, 4), (9, 3), (24, 4), (7, 4), (3, 4)]:
+        bs = B.group_boundaries(g, b)
+        assert bs[0] == 0 and bs[-1] == g
+        assert all(b2 > b1 for b1, b2 in zip(bs, bs[1:]))
+
+
+def test_split_merge_roundtrip():
+    cfg = get_config("qwen3-8b").reduced().with_(n_prog_blocks=2)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    for t in range(B.n_blocks(cfg)):
+        frozen, active = B.split_model(cfg, params, t)
+        # perturb active then merge back
+        active2 = jax.tree.map(lambda x: x + 1.0, active)
+        merged = B.merge_block_into(cfg, params, active2, t)
+        frozen3, active3 = B.split_model(cfg, merged, t)
+        for a, b in zip(jax.tree.leaves(active3), jax.tree.leaves(active2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # block params partition the stack (plus stem in block 0)
+    total = sum(x.size for x in jax.tree.leaves(params["layers"]))
+    per_block = []
+    for t in range(B.n_blocks(cfg)):
+        _, act = B.split_model(cfg, params, t)
+        per_block.append(sum(x.size for x in jax.tree.leaves(act["layers"])))
+    assert sum(per_block) == total
+
+
+def test_cnn_split_merge():
+    cfg = C.CNNConfig("resnet18", width_mult=0.25, in_size=16)
+    params, _ = C.init_cnn(cfg, jax.random.PRNGKey(0))
+    frozen, active = B.cnn_split(params, 2)
+    assert len(frozen["blocks"]) == 2 and len(active["blocks"]) == 1
+    act2 = jax.tree.map(lambda x: x * 2.0, active)
+    merged = B.cnn_merge(params, act2, 2)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(merged["blocks"][2])[0]),
+        np.asarray(jax.tree.leaves(act2["blocks"][0])[0]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# effective movement
+# ---------------------------------------------------------------------------
+
+
+def test_em_consistent_movement_is_one():
+    """Scalars moving in a constant direction -> EM == 1."""
+    cfg = EM.EMConfig(window_h=4)
+    p = {"w": jnp.zeros((100,))}
+    st = EM.em_init(p)
+    vals = []
+    for k in range(8):
+        p = jax.tree.map(lambda x: x + 0.1, p)
+        v = EM.em_update(cfg, st, p)
+        if v is not None:
+            vals.append(v)
+    assert len(vals) == 2
+    for v in vals:
+        assert abs(v - 1.0) < 1e-5
+
+
+def test_em_oscillation_is_near_zero():
+    cfg = EM.EMConfig(window_h=4)
+    st = EM.em_init({"w": jnp.zeros((100,))})
+    vals = []
+    for k in range(8):
+        p = {"w": jnp.full((100,), 0.1 if k % 2 == 0 else 0.0)}
+        v = EM.em_update(cfg, st, p)
+        if v is not None:
+            vals.append(v)
+    for v in vals:
+        assert v < 0.3
+
+
+def test_freezing_fires_on_converged_series():
+    cfg = EM.EMConfig(window_h=1, slope_phi=0.01, patience_w=3, fit_points=4,
+                      em_level=0.5, min_rounds=2)
+    st = EM.em_init({"w": jnp.zeros((10,))})
+    st.history = [0.9, 0.7, 0.45, 0.2, 0.1]
+    st.rounds = 10
+    frozen = False
+    for em in [0.09, 0.085, 0.083, 0.082, 0.081, 0.081]:
+        st.history.append(em)
+        if EM.should_freeze(cfg, st):
+            frozen = True
+            break
+    assert frozen
+
+
+def test_freezing_does_not_fire_while_improving():
+    cfg = EM.EMConfig(window_h=1, slope_phi=0.01, patience_w=3, fit_points=4,
+                      em_level=0.5, min_rounds=2)
+    st = EM.em_init({"w": jnp.zeros((10,))})
+    st.rounds = 100
+    for em in np.linspace(0.95, 0.3, 12):  # still dropping fast
+        st.history.append(float(em))
+        assert not EM.should_freeze(cfg, st)
+
+
+# ---------------------------------------------------------------------------
+# output modules
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_output_module_shapes():
+    cfg = C.CNNConfig("resnet18", width_mult=0.25, in_size=16)
+    params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 3))
+    for t in range(cfg.n_prog_blocks):
+        feats, _ = C.forward_blocks(cfg, params, bn, x, n_blocks=t + 1)
+        op = OM.init_cnn_output_module(
+            cfg, jax.random.PRNGKey(2), t, params["head"]
+        )
+        logits = OM.apply_cnn_output_module(cfg, t, op, feats)
+        assert logits.shape == (4, cfg.n_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_tf_output_module_head_count():
+    cfg = get_config("qwen3-8b").reduced().with_(n_prog_blocks=2)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    op0 = OM.init_tf_output_module(cfg, jax.random.PRNGKey(1), 0, params)
+    op_last = OM.init_tf_output_module(
+        cfg, jax.random.PRNGKey(1), B.n_blocks(cfg) - 1, params
+    )
+    assert len(op0["proxies"]) == B.n_blocks(cfg) - 1
+    assert len(op_last["proxies"]) == 0  # last step uses the real head only
+
+
+# ---------------------------------------------------------------------------
+# progressive training
+# ---------------------------------------------------------------------------
+
+
+def test_progressive_grads_do_not_touch_frozen():
+    cfg = get_config("qwen1.5-0.5b").reduced().with_(n_prog_blocks=2)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    t = 1
+    frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)}
+    loss_fn = P.make_progressive_loss(cfg, t)
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        trainable, frozen, batch
+    )
+    assert bool(jnp.isfinite(loss))
+    gnorms = [float(jnp.max(jnp.abs(g))) for g in jax.tree.leaves(grads)]
+    assert max(gnorms) > 0
+
+
+def test_progressive_step_trains_only_active():
+    cfg = get_config("qwen1.5-0.5b").reduced().with_(n_prog_blocks=2)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    t = 1
+    frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
+    frozen0 = copy.deepcopy(frozen)
+    opt = adamw(AdamWCfg(lr=1e-3, warmup=1))
+    step = P.make_progressive_train_step(cfg, opt, t)
+    state = {"params": trainable, "opt": opt.init(trainable),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)}
+    state, metrics = jax.jit(step)(state, frozen, batch)
+    # trainable moved
+    moved = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(state["params"]), jax.tree.leaves(trainable))]
+    assert max(moved) > 0
+    # frozen is untouched by construction (never in the optimizer)
+    for a, b in zip(jax.tree.leaves(frozen), jax.tree.leaves(frozen0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_progressive_loss_decreases_cnn():
+    """A few ProFL steps on the active block reduce the sub-model loss."""
+    cfg = C.CNNConfig("vgg11", width_mult=0.25, in_size=16)
+    params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))
+    frozen, active = B.cnn_split(params, 1)
+    op = OM.init_cnn_output_module(cfg, jax.random.PRNGKey(1), 1, params["head"])
+    trainable = {"active": active, "op": op}
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(3), (32,), 0, 10)
+    loss_fn = P.cnn_submodel_loss(cfg, 1)
+
+    @jax.jit
+    def step(tr, bn):
+        (l, new_bn), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            tr, frozen, bn, x, y)
+        tr = jax.tree.map(lambda p, gg: p - 0.05 * gg, tr, g)
+        return tr, new_bn, l
+
+    losses = []
+    for _ in range(15):
+        trainable, bn, l = step(trainable, bn)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_distill_map_reduces_mse():
+    cfg = C.CNNConfig("resnet18", width_mult=0.25, in_size=16)
+    params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))
+    t = 1
+    frozen, teacher = B.cnn_split(params, t)
+    proxy = OM.init_cnn_proxy(cfg, jax.random.PRNGKey(1), t)
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 16, 16, 3))
+    loss_fn = DI.cnn_map_loss(cfg, t)
+
+    @jax.jit
+    def step(proxy):
+        l, g = jax.value_and_grad(loss_fn)(proxy, frozen, teacher, bn, x)
+        return jax.tree.map(lambda p, gg: p - 0.1 * gg, proxy, g), l
+
+    l0 = None
+    for i in range(20):
+        proxy, l = step(proxy)
+        l0 = l0 if l0 is not None else float(l)
+    assert float(l) < l0

@@ -1,0 +1,164 @@
+"""FL runtime tests: partitioners, memory model, client training, a tiny
+end-to-end ProFL run, and the four baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.effective_movement import EMConfig
+from repro.fl import baselines as BL
+from repro.fl import client as CL
+from repro.fl import data as D
+from repro.fl import memory_model as MM
+from repro.fl.server import FLConfig, ProFLServer
+from repro.models.cnn import CNNConfig
+from repro.train.train_step import softmax_xent
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    rng = jax.random.PRNGKey(0)
+    xtr, ytr, xte, yte = D.make_synthetic(rng, n_train=600, n_test=200, size=16)
+    parts = D.partition_iid(jax.random.PRNGKey(1), len(xtr), 40)
+    budgets = MM.assign_budgets_mb(np.random.default_rng(0), 40)
+    return xtr, ytr, xte, yte, parts, budgets
+
+
+def _fl(**kw):
+    base = dict(
+        n_clients=40, clients_per_round=6, local_steps=3, batch_size=16,
+        n_local_fixed=24, max_rounds_per_step=4, distill_rounds=1,
+        eval_every=100,
+        em=EMConfig(window_h=2, slope_phi=0.05, patience_w=2, fit_points=3,
+                    em_level=0.95, min_rounds=2),
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_partition_iid_covers_all():
+    parts = D.partition_iid(jax.random.PRNGKey(0), 100, 7)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 100 and len(np.unique(allidx)) == 100
+
+
+def test_partition_dirichlet_covers_and_skews():
+    labels = np.random.default_rng(0).integers(0, 10, size=2000)
+    parts = D.partition_dirichlet(jax.random.PRNGKey(0), labels, 20, alpha=1.0)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx) == 2000
+    # non-IID: per-client label distributions differ from global
+    fracs = []
+    for p in parts:
+        h = np.bincount(labels[p], minlength=10) / len(p)
+        fracs.append(h)
+    assert np.std(np.asarray(fracs), axis=0).mean() > 0.01
+
+
+def test_synthetic_is_learnable_but_not_trivial():
+    rng = jax.random.PRNGKey(3)
+    xtr, ytr, xte, yte = D.make_synthetic(rng, n_train=500, n_test=200, size=16)
+    assert xtr.shape == (500, 16, 16, 3)
+    # nearest-class-mean gets above chance but below perfect
+    means = np.stack([xtr[ytr == c].mean(0) for c in range(10)])
+    d = ((xte[:, None] - means[None]) ** 2).sum((2, 3, 4))
+    acc = (d.argmin(1) == yte).mean()
+    assert 0.2 < acc <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# memory model (paper Fig. 6 structure)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["resnet18", "resnet34", "vgg11", "vgg16"])
+def test_block_memory_below_full_and_decreasing_participation(kind):
+    cfg = CNNConfig(kind)
+    full = MM.full_train_memory_mb(cfg)
+    subs = [MM.submodel_train_memory_mb(cfg, t) for t in range(cfg.n_prog_blocks)]
+    assert all(s < full for s in subs), (subs, full)
+    # the paper's claim: later blocks need less memory than block 1
+    assert subs[-1] < subs[0]
+    # peak ProFL memory reduction vs full training (paper: up to 57.4%)
+    assert 1 - max(subs) / full > 0.20
+
+
+def test_exclusive_participation_regime():
+    """Paper Tables 1-2 regime: nobody can full-train ResNet34/VGG16."""
+    budgets = MM.assign_budgets_mb(np.random.default_rng(0), 100)
+    assert len(MM.eligible(budgets, MM.full_train_memory_mb(CNNConfig("resnet34")))) == 0
+    assert len(MM.eligible(budgets, MM.full_train_memory_mb(CNNConfig("vgg16")))) == 0
+    r18 = len(MM.eligible(budgets, MM.full_train_memory_mb(CNNConfig("resnet18"))))
+    assert 0 < r18 < 30
+
+
+# ---------------------------------------------------------------------------
+# client training
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_round_reduces_loss(tiny_world):
+    xtr, ytr, xte, yte, parts, budgets = tiny_world
+    cfg = CNNConfig("vgg11", width_mult=0.25, in_size=16)
+    fl = _fl()
+    from repro.models import cnn as C
+
+    params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))
+
+    def loss_fn(trainable, frozen, bn_state, xb, yb):
+        logits, new_bn = C.forward_cnn(cfg, trainable, bn_state, xb, train=True)
+        return softmax_xent(logits, yb), new_bn
+
+    rng = np.random.default_rng(0)
+    losses = []
+    for r in range(4):
+        xs, ys, w = [], [], []
+        for cid in range(8):
+            xb, yb = D.client_batch(xtr, ytr, parts[cid], 24, rng)
+            xs.append(xb), ys.append(yb), w.append(len(parts[cid]))
+        params, bn, loss = CL.cohort_round(
+            loss_fn, params, {}, bn,
+            jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+            jax.random.split(jax.random.PRNGKey(r), 8),
+            jnp.asarray(np.array(w, np.float32)),
+            lr=0.05, local_steps=4, batch_size=16,
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end ProFL + baselines (tiny)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_profl_end_to_end(tiny_world):
+    xtr, ytr, xte, yte, parts, budgets = tiny_world
+    cfg = CNNConfig("vgg11", width_mult=0.125, in_size=16)
+    srv = ProFLServer(cfg, _fl(), xtr, ytr, xte, yte, parts, budgets)
+    res = srv.run()
+    assert res["final_acc"] > 0.2  # well above 10% chance
+    stages = [(s["stage"], s["t"]) for s in res["steps"]]
+    assert stages == [("shrink", 1), ("grow", 0), ("grow", 1)]
+    assert all(s["pr"] > 0 for s in res["steps"])
+
+
+@pytest.mark.slow
+def test_baselines_run(tiny_world):
+    xtr, ytr, xte, yte, parts, budgets = tiny_world
+    cfg = CNNConfig("vgg11", width_mult=0.125, in_size=16)
+    fl = _fl()
+    r_small = BL.run_allsmall(cfg, fl, xtr, ytr, xte, yte, parts, budgets, 3)
+    assert r_small["acc"] is not None and r_small["pr"] == 1.0
+    r_ex = BL.run_exclusivefl(cfg, fl, xtr, ytr, xte, yte, parts, budgets, 3)
+    assert r_ex["pr"] >= 0.0  # may be NA
+    r_het = BL.run_heterofl(cfg, fl, xtr, ytr, xte, yte, parts, budgets, 2)
+    assert r_het["acc"] is not None
+    r_dep = BL.run_depthfl(cfg, fl, xtr, ytr, xte, yte, parts, budgets, 2)
+    assert r_dep["pr"] > 0

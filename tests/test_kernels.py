@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) and the
+chunked-jnp path, asserted allclose against the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _qkv(rng, B, H, K, Sq, Skv, hd, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, K, Skv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, K, Skv, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+ATTN_SHAPES = [
+    # (B, H, K, Sq, Skv, hd, bq, bk)
+    (1, 1, 1, 128, 128, 64, 64, 64),
+    (2, 4, 2, 256, 256, 64, 64, 128),
+    (1, 8, 8, 128, 128, 128, 128, 64),
+    (2, 6, 2, 192, 192, 32, 64, 64),  # non-pow2 heads, GQA g=3
+]
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_causal(impl, shape, dtype):
+    B, H, K, Sq, Skv, hd, bq, bk = shape
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, H, K, Sq, Skv, hd, dtype)
+    want = ref.attention(q, k, v, causal=True)
+    got = ops.attention(q, k, v, causal=True, impl=impl, bq=bq, bk=bk)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_attention_sliding_window(impl, window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 4, 2, 256, 256, 64, jnp.float32)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    got = ops.attention(q, k, v, causal=True, window=window, impl=impl, bq=64, bk=64)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_attention_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 4, 4, 128, 192, 64, jnp.float32)
+    # kv longer than q (cross-attention shape), non-causal
+    want = ref.attention(q, k, v, causal=False)
+    got = ops.attention(q, k, v, causal=False, impl="chunked", bq=64, bk=64)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_attention_q_offset_matches_suffix():
+    """Chunked attention with q_offset == decode-style suffix of full attn."""
+    B, H, K, S, hd = 1, 2, 2, 128, 32
+    q, k, v = _qkv(jax.random.PRNGKey(3), B, H, K, S, S, hd, jnp.float32)
+    full = ref.attention(q, k, v, causal=True)
+    tail = ops.attention(
+        q[:, :, -16:], k, v, causal=True, q_offset=S - 16, impl="chunked",
+        bq=16, bk=64,
+    )
+    np.testing.assert_allclose(tail, full[:, :, -16:], atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_attention_grad_finite():
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 2, 1, 128, 128, 32, jnp.float32)
+
+    def f(q, k, v):
+        return jnp.sum(ops.attention(q, k, v, impl="chunked", bq=64, bk=64) ** 2)
+
+    gq, gk, gv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in (gq, gk, gv))
+    # grads should also match the naive path's grads
+    gq2, gk2, gv2 = jax.grad(
+        lambda q, k, v: jnp.sum(ref.attention(q, k, v) ** 2), argnums=(0, 1, 2)
+    )(q, k, v)
+    np.testing.assert_allclose(gq, gq2, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(gk, gk2, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(gv, gv2, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# effective movement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 4096, 100_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_effective_movement_kernel(n, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    pn = jax.random.normal(k1, (n,), jnp.float32).astype(dtype)
+    po = jax.random.normal(k2, (n,), jnp.float32).astype(dtype)
+    net = jax.random.normal(k3, (n,), jnp.float32)
+    want = ref.effective_movement_update(pn, po, net)
+    got = ops.effective_movement_update(pn, po, net, impl="pallas")
+    np.testing.assert_allclose(got[0], want[0], atol=1e-3, rtol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], atol=max(1e-2, 1e-6 * n), rtol=1e-4)
+    np.testing.assert_allclose(got[2], want[2], atol=max(1e-2, 1e-6 * n), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fedavg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,n", [(2, 64), (5, 4096), (20, 65_537)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_kernel(K, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    p = jax.random.normal(k1, (K, n), jnp.float32).astype(dtype)
+    w = jax.nn.softmax(jax.random.normal(k2, (K,)))
+    want = ref.fedavg(p, w)
+    got = ops.fedavg(p, w, impl="pallas")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
+    )

@@ -1,0 +1,179 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks as B
+from repro.core import effective_movement as EM
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.train.train_step import softmax_xent
+
+jax.config.update("jax_platform_name", "cpu")
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# effective movement invariants (paper §3.3)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.lists(
+        st.lists(st.floats(-1, 1, allow_nan=False, width=32), min_size=8,
+                 max_size=8),
+        min_size=3, max_size=8,
+    )
+)
+@settings(**SET)
+def test_em_always_in_unit_interval(updates):
+    """EM = |Σu| / Σ|u| ∈ [0, 1] for ANY update sequence."""
+    cfg = EM.EMConfig(window_h=len(updates))
+    p = jnp.zeros((8,))
+    stt = EM.em_init({"w": p})
+    em = None
+    for u in updates:
+        p = p + jnp.asarray(u, jnp.float32)
+        em = EM.em_update(cfg, stt, {"w": p})
+    if em is not None:
+        assert -1e-6 <= em <= 1.0 + 1e-6
+
+
+@given(st.floats(0.01, 2.0), st.integers(2, 6))
+@settings(**SET)
+def test_em_constant_direction_is_one(step, h):
+    cfg = EM.EMConfig(window_h=h)
+    p = jnp.zeros((16,))
+    stt = EM.em_init({"w": p})
+    em = None
+    for _ in range(h):
+        p = p + step
+        em = EM.em_update(cfg, stt, {"w": p})
+    assert em is not None and abs(em - 1.0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# fedavg: convex combination bounds + exactness vs weights
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(2, 6),  # K clients
+    st.integers(4, 64),  # n params
+    st.integers(0, 2**31 - 1),
+)
+@settings(**SET)
+def test_fedavg_convex_combination(K, n, seed):
+    kp, kw = jax.random.split(jax.random.PRNGKey(seed))
+    params = jax.random.normal(kp, (K, n))
+    w = jax.nn.softmax(jax.random.normal(kw, (K,)))
+    out = np.asarray(ref.fedavg(params, w))
+    lo = np.min(np.asarray(params), axis=0)
+    hi = np.max(np.asarray(params), axis=0)
+    assert np.all(out >= lo - 1e-5) and np.all(out <= hi + 1e-5)
+    # identical clients -> identity
+    same = jnp.broadcast_to(params[:1], params.shape)
+    np.testing.assert_allclose(
+        np.asarray(ref.fedavg(same, w)), np.asarray(params[0]), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# block partitioning invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 128), st.integers(1, 8))
+@settings(**SET)
+def test_boundaries_partition(n_groups, n_blocks):
+    bs = B.group_boundaries(n_groups, n_blocks)
+    assert bs[0] == 0 and bs[-1] == n_groups
+    widths = [b2 - b1 for b1, b2 in zip(bs, bs[1:])]
+    assert all(w >= 1 for w in widths)
+    assert max(widths) - min(widths) <= 1  # near-even split
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_attention_rows_are_convex(seed, S):
+    """With v = one-hot basis, attention outputs are softmax rows: each sums
+    to 1 and is causal (no weight on future positions)."""
+    rng = jax.random.PRNGKey(seed)
+    B_, H, hd = 1, 2, S  # hd == S so v can be identity
+    q = jax.random.normal(rng, (B_, H, S, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B_, H, S, hd))
+    v = jnp.broadcast_to(jnp.eye(S)[None, None], (B_, H, S, S))
+    out = np.asarray(ref.attention(q, k, v, causal=True))  # rows of softmax
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-4)
+    for i in range(S):
+        assert np.all(np.abs(out[0, 0, i, i + 1:]) < 1e-6)  # causal
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norm_and_relativity(seed):
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (1, 1, 8, 64))
+    pos = jnp.arange(8)
+    y = L.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (64,))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (64,))
+    def dot_at(i, j):
+        qr = L.rope(q[None], jnp.array([i]), 1e4)[0]
+        kr = L.rope(k[None], jnp.array([j]), 1e4)[0]
+        return float(qr @ kr)
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# loss invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 50))
+@settings(**SET)
+def test_xent_nonnegative_and_uniform_bound(seed, V):
+    rng = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(rng, (4, 7, V))
+    labels = jax.random.randint(jax.random.fold_in(rng, 1), (4, 7), 0, V)
+    l = float(softmax_xent(logits, labels))
+    assert l >= 0.0
+    # uniform logits give exactly log(V)
+    lu = float(softmax_xent(jnp.zeros((4, 7, V)), labels))
+    assert abs(lu - np.log(V)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle under hypothesis-driven shapes
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([(1, 2, 1), (2, 4, 2), (1, 4, 4)]),  # B, H, K
+    st.sampled_from([64, 128]),
+)
+@settings(max_examples=8, deadline=None)
+def test_chunked_attention_matches_oracle(seed, bhk, S):
+    B_, H, K = bhk
+    rng = jax.random.PRNGKey(seed)
+    q = jax.random.normal(rng, (B_, H, S, 32))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B_, K, S, 32))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B_, K, S, 32))
+    want = ref.attention(q, k, v, causal=True)
+    got = ops.attention(q, k, v, causal=True, impl="chunked", bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=1e-4)

@@ -1,0 +1,139 @@
+"""End-to-end behaviour tests: full training loop improves, progressive
+training memory claim at the optimizer level, serving pipeline, checkpoint
+roundtrip, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import blocks as B
+from repro.core import progressive as P
+from repro.models import transformer as T
+from repro.train import checkpoint as CKPT
+from repro.train import serve
+from repro.train.optimizer import AdamWCfg, adamw, sgd
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def _toy_cfg():
+    return get_config("qwen1.5-0.5b").reduced(d_model=128, vocab=64).with_(
+        n_prog_blocks=2
+    )
+
+
+def test_full_training_reduces_loss():
+    cfg = _toy_cfg()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    opt = adamw(AdamWCfg(lr=3e-3, warmup=5, weight_decay=0.0))
+    state = init_train_state(cfg, params, opt)
+    step = jax.jit(make_train_step(cfg, opt, remat=False))
+    # memorize a fixed batch
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab)}
+    losses = []
+    for _ in range(30):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_progressive_state_is_smaller_than_full():
+    """The paper's memory claim at the optimizer level: step-t training
+    carries moments ONLY for the active block + output module."""
+    cfg = get_config("qwen3-8b").reduced().with_(n_prog_blocks=4)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    opt = adamw(AdamWCfg())
+    full_state = init_train_state(cfg, params, opt)
+    full_bytes = sum(x.nbytes for x in jax.tree.leaves(full_state["opt"]))
+
+    for t in range(1, B.n_blocks(cfg)):
+        frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
+        prog_opt = opt.init(trainable)
+        prog_bytes = sum(x.nbytes for x in jax.tree.leaves(prog_opt))
+        assert prog_bytes < 0.75 * full_bytes, (t, prog_bytes, full_bytes)
+
+
+def test_progressive_training_improves_submodel():
+    cfg = _toy_cfg()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    t = 1
+    frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
+    opt = sgd(lr=0.2)
+    step = jax.jit(P.make_progressive_train_step(cfg, opt, t))
+    state = {"params": trainable, "opt": opt.init(trainable),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                          cfg.vocab)}
+    losses = []
+    for _ in range(25):
+        state, m = step(state, frozen, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses[::8]
+
+
+def test_serve_batched_generation():
+    """prefill + N greedy decode steps produce a coherent batched rollout."""
+    cfg = _toy_cfg()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    Bz, S, N = 3, 12, 5
+    toks = jax.random.randint(jax.random.PRNGKey(1), (Bz, S), 0, cfg.vocab)
+    logits, cache, pos = serve.prefill(cfg, params, {"tokens": toks},
+                                       cache_len=S + N)
+    out = []
+    cur = jnp.argmax(logits, -1)
+    dstep = jax.jit(lambda c, t, p: serve.decode_step(cfg, params, c, t, p))
+    for i in range(N):
+        out.append(cur)
+        logits, cache = dstep(cache, cur, jnp.int32(S + i))
+        cur = jnp.argmax(logits, -1)
+    gen = jnp.stack(out, 1)
+    assert gen.shape == (Bz, N)
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab)))
+
+
+def test_checkpoint_roundtrip():
+    cfg = _toy_cfg()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        CKPT.save(path, params)
+        like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+        restored = CKPT.load(path, like)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_sharding_rules_divide():
+    """Every sharded dim produced by the rules divides the mesh axis size
+    (sanitization invariant) for every full-size arch."""
+    from repro.configs.base import list_configs
+    from repro.launch import sharding
+    from jax.sharding import Mesh
+    import numpy as np
+
+    # abstract mesh spec check: emulate 16x16 axis sizes without devices
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    env = sharding.AxisEnv(mesh=FakeMesh(), dp_axes=("data",), tp_axis="model")
+    for name in list_configs():
+        cfg = get_config(name)
+        params = jax.eval_shape(
+            lambda c=cfg: T.init_model(c, jax.random.PRNGKey(0)))
+        specs = jax.tree_util.tree_map_with_path(
+            lambda p, l: sharding.spec_for_path(env, p, l), params)
+        for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec))[0],
+        ):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is not None:
+                    n = sharding._axis_size(env, ax)
+                    assert dim % n == 0, (name, path, leaf.shape, spec)
