@@ -47,3 +47,50 @@ def bench(ctx: dict, full: bool = False):
     fa = jax.jit(functools.partial(ops.fedavg, impl="naive"))
     us = C.time_call(fa, p, w)
     C.emit("kernels/fedavg_20x1M", us, f"gbytes_s={4*Kc*n2/us/1e3:.2f}")
+
+    _bench_cohort_aggregation(rng, full)
+
+
+def _bench_cohort_aggregation(rng, full: bool):
+    """Packed-panel fedavg (fl/engine.py) vs the per-leaf einsum tree-map of
+    client.cohort_round, on a realistic many-leaf trainable tree."""
+    from repro.fl import engine as ENG
+
+    Kc = 20
+    leaf_shapes = [(64, 64)] * 24 + [(256, 64)] * 8 + [(64,)] * 32
+    if full:
+        leaf_shapes = [(256, 256)] * 24 + [(1024, 256)] * 8 + [(256,)] * 32
+    tree = {
+        f"l{i}": jax.random.normal(jax.random.fold_in(rng, 10 + i), (Kc,) + s)
+        for i, s in enumerate(leaf_shapes)
+    }
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(rng, 5), (Kc,)))
+    n = sum(int(jnp.prod(jnp.asarray(s))) for s in leaf_shapes)
+
+    @jax.jit
+    def treemap_agg(trs, w):
+        wn = w / jnp.sum(w)
+        agg = lambda leaf: jnp.einsum(
+            "k,k...->...", wn, leaf.astype(jnp.float32)
+        ).astype(leaf.dtype)
+        return jax.tree.map(agg, trs)
+
+    us = C.time_call(treemap_agg, tree, w)
+    C.emit("kernels/cohort_agg_treemap", us,
+           f"n_params={n} gbytes_s={4*Kc*n/us/1e3:.2f}")
+
+    template = jax.tree.map(lambda l: l[0], tree)
+
+    def packed_agg(trs, w, impl):
+        spec = ENG.make_pack_spec(template)
+        panel = spec.pack_stacked(trs, Kc)
+        return spec.unpack(ops.fedavg(panel, w / jnp.sum(w), impl=impl))
+
+    pk = jax.jit(functools.partial(packed_agg, impl="naive"))
+    us = C.time_call(pk, tree, w)
+    C.emit("kernels/cohort_agg_packed", us,
+           f"n_params={n} gbytes_s={4*Kc*n/us/1e3:.2f}")
+
+    pk_pl = jax.jit(functools.partial(packed_agg, impl="pallas"))
+    us_pl = C.time_call(pk_pl, tree, w, iters=3)
+    C.emit("kernels/cohort_agg_packed_pallas_interp", us_pl, "interpret_mode=1")

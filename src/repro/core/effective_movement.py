@@ -60,9 +60,16 @@ def em_init(params) -> EMState:
 
 
 def em_update(cfg: EMConfig, st: EMState, params) -> Optional[float]:
-    """Feed one aggregated update; returns the EM value when a window
-    completes, else None."""
-    p_new = flatten_params(params)
+    """Feed one aggregated update (as a tree); returns the EM value when a
+    window completes, else None."""
+    return em_update_flat(cfg, st, flatten_params(params))
+
+
+def em_update_flat(cfg: EMConfig, st: EMState, p_new: jax.Array) -> Optional[float]:
+    """Same as :func:`em_update`, but takes the round's aggregated params as
+    an already-packed flat vector — the sharded engine (fl/engine.py) hands
+    this straight from its Pallas fedavg output, so the EM bookkeeping is one
+    fused ``effective_movement_update`` pass with no per-leaf re-flattening."""
     net, path_inc, net_abs = ops.effective_movement_update(p_new, st.prev, st.net)
     st.prev = p_new
     st.net = net

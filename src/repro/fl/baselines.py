@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import progressive as P
-from repro.fl import client as CL
 from repro.fl import data as DATA
+from repro.fl import engine as ENG
 from repro.fl import memory_model as MM
 from repro.fl.server import FLConfig
 from repro.models import cnn as C
@@ -55,6 +55,18 @@ class _Runner:
         self.parts, self.budgets = parts, budgets
         self.rng = np.random.default_rng(fl.seed)
         self._key = jax.random.PRNGKey(fl.seed + 1)
+        self.engine = ENG.make_engine(fl.engine)
+
+    def round(self, loss_fn, trainable, frozen, bn, xs, ys, rngs, w, *,
+              lr=None, local_steps=None, batch_size=None):
+        fl = self.fl
+        res = self.engine.round(
+            loss_fn, trainable, frozen, bn, xs, ys, rngs, w,
+            lr=fl.lr if lr is None else lr,
+            local_steps=fl.local_steps if local_steps is None else local_steps,
+            batch_size=fl.batch_size if batch_size is None else batch_size,
+        )
+        return res.trainable, res.bn_state, res.loss
 
     def next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -92,10 +104,7 @@ def run_allsmall(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
         sel = R.rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
         xs, ys, w = R.cohort(sel)
         rngs = jax.random.split(R.next_key(), len(sel))
-        params, bn, _ = CL.cohort_round(
-            loss_fn, params, {}, bn, xs, ys, rngs, w,
-            lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
-        )
+        params, bn, _ = R.round(loss_fn, params, {}, bn, xs, ys, rngs, w)
         accs.append(_acc_full(cfg, params, bn, xte, yte, r * fl.ratio))
     return {"acc": float(np.mean(accs[-10:])), "pr": 1.0, "ratio": r,
             "curve": accs}
@@ -120,10 +129,7 @@ def run_exclusivefl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, round
                            replace=False)
         xs, ys, w = R.cohort(sel)
         rngs = jax.random.split(R.next_key(), len(sel))
-        params, bn, _ = CL.cohort_round(
-            loss_fn, params, {}, bn, xs, ys, rngs, w,
-            lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
-        )
+        params, bn, _ = R.round(loss_fn, params, {}, bn, xs, ys, rngs, w)
         accs.append(_acc_full(cfg, params, bn, xte, yte, fl.ratio))
     return {"acc": float(np.mean(accs[-10:])), "pr": pr, "curve": accs}
 
@@ -158,10 +164,7 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
             xs, ys, w = R.cohort(group)
             rngs = jax.random.split(R.next_key(), len(group))
             loss_fn = _full_loss(cfg, r * fl.ratio)
-            sub, sub_bn, _ = CL.cohort_round(
-                loss_fn, sub, {}, sub_bn, xs, ys, rngs, w,
-                lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
-            )
+            sub, sub_bn, _ = R.round(loss_fn, sub, {}, sub_bn, xs, ys, rngs, w)
             wsum = float(np.sum([len(parts[c]) for c in group]))
             padded, mask = C.scatter_cnn_params(params, sub)
             num = jax.tree.map(lambda n, p: n + wsum * p.astype(jnp.float32),
@@ -253,10 +256,9 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
             }
             xs, ys, w = R.cohort(group)
             rngs = jax.random.split(R.next_key(), len(group))
-            out, bn_cur, _ = CL.cohort_round(
+            out, bn_cur, _ = R.round(
                 _depth_loss(cfg, d, fl.ratio), trainable, {}, bn_cur,
                 xs, ys, rngs, w,
-                lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
             )
             wsum = float(np.sum([len(parts[c]) for c in group]))
             for i in range(d):

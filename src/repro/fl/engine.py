@@ -1,0 +1,268 @@
+"""Sharded cohort execution engine.
+
+``client.cohort_round`` (the oracle) vmaps all K clients on ONE device and
+aggregates with a per-leaf einsum tree-map.  At production cohort sizes that
+caps the round at single-device memory and leaves the fused Pallas
+aggregation kernels idle.  This module executes the same round three ways:
+
+* ``vmap``    — delegate to the oracle (bit-identical reference path).
+* ``packed``  — vmap local SGD, then RAVEL every client's trainable + BN
+                trees into one contiguous ``[K, n]`` f32 panel (cached
+                treedef/offset spec) and aggregate with the Pallas ``fedavg``
+                kernel: one HBM pass over the stacked params instead of a
+                tree of K-way einsums.
+* ``sharded`` — same packed aggregation, but local SGD runs under
+                ``shard_map`` with clients split across a ``clients`` mesh
+                axis (launch/mesh.py::make_client_mesh), so the cohort scales
+                with device count.  K is padded up to a multiple of the axis
+                size with zero-weight ghost clients.
+
+The packed round also returns the aggregated flat trainable vector so the
+server can feed effective movement (core/effective_movement.py::
+em_update_flat) without re-flattening the tree every round — the EM update
+itself is the fused Pallas ``effective_movement_update`` pass over exactly
+this packed delta.
+
+Equivalence to the oracle is asserted in tests/test_engine.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.fl import client as CL
+from repro.kernels import ops
+
+MODES = ("vmap", "packed", "sharded", "auto")
+
+
+# ===========================================================================
+# Packing: tree <-> contiguous flat f32 vector, with a cached spec
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class PackSpec:
+    """Ravel/unravel plan for one pytree structure.
+
+    ``pack`` concatenates every leaf (cast to f32, matching the f32
+    accumulation of the einsum oracle) into one [n] vector; ``unpack``
+    restores shapes and original dtypes.  Built once per (treedef, avals)
+    via :func:`make_pack_spec` and reused across rounds."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    n: int
+
+    def pack(self, tree) -> jax.Array:
+        leaves = self.treedef.flatten_up_to(tree)
+        if not leaves:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves]
+        )
+
+    def pack_stacked(self, tree, k: int) -> jax.Array:
+        """Leaves carry a leading client axis [K, ...] -> [K, n] panel."""
+        leaves = self.treedef.flatten_up_to(tree)
+        if not leaves:
+            return jnp.zeros((k, 0), jnp.float32)
+        return jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+            axis=1,
+        )
+
+    def unpack(self, vec: jax.Array):
+        leaves = [
+            vec[o : o + s].reshape(sh).astype(dt)
+            for o, s, sh, dt in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes
+            )
+        ]
+        return self.treedef.unflatten(leaves)
+
+
+_SPEC_CACHE: dict = {}
+
+
+def make_pack_spec(tree) -> PackSpec:
+    """Cached PackSpec for ``tree`` (keyed on treedef + leaf avals)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        sizes = tuple(math.prod(s) for s in shapes)
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        spec = PackSpec(treedef, shapes, dtypes, tuple(offsets), sizes, off)
+        _SPEC_CACHE[key] = spec
+    return spec
+
+
+# ===========================================================================
+# Round execution
+# ===========================================================================
+
+
+class RoundResult(NamedTuple):
+    trainable: Any
+    bn_state: Any
+    loss: jax.Array
+    packed: Optional[jax.Array]  # aggregated flat trainable (f32) or None
+
+
+def _local_training(loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+                    *, lr, local_steps, batch_size):
+    """vmap the per-client update — identical math to the oracle."""
+    upd = CL.make_client_update(
+        loss_fn, lr=lr, local_steps=local_steps, batch_size=batch_size
+    )
+    return jax.vmap(upd, in_axes=(None, None, None, 0, 0, 0))(
+        trainable, frozen, bn_state, xs, ys, rngs
+    )
+
+
+def _packed_aggregate(trainable, bn_state, trs, bns, losses, weights):
+    """One fused pass: pack (trainable, bn) panels, Pallas fedavg, unpack."""
+    k = losses.shape[0]
+    spec_tr = make_pack_spec(trainable)
+    spec_bn = make_pack_spec(bn_state)
+    panel_tr = spec_tr.pack_stacked(trs, k)
+    panel_bn = spec_bn.pack_stacked(bns, k)
+    panel = jnp.concatenate([panel_tr, panel_bn], axis=1)
+    w = weights / jnp.sum(weights)
+    flat = ops.fedavg(panel, w)
+    new_tr = spec_tr.unpack(flat[: spec_tr.n])
+    new_bn = spec_bn.unpack(flat[spec_tr.n :])
+    # re-pack AFTER the unpack cast so the flat vector matches the tree's
+    # leaf dtypes bit-for-bit (EM must see the same values either way)
+    return new_tr, new_bn, jnp.sum(w * losses), spec_tr.pack(new_tr)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("loss_fn", "lr", "local_steps", "batch_size")
+)
+def _round_packed(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
+                  *, lr, local_steps, batch_size):
+    trs, bns, losses = _local_training(
+        loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+        lr=lr, local_steps=local_steps, batch_size=batch_size,
+    )
+    return _packed_aggregate(trainable, bn_state, trs, bns, losses, weights)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss_fn", "lr", "local_steps", "batch_size", "mesh"),
+)
+def _round_sharded(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
+                   *, lr, local_steps, batch_size, mesh):
+    k = xs.shape[0]
+    n_shards = mesh.shape["clients"]
+    pad = (-k) % n_shards
+    if pad:
+        # ghost clients: replicate client 0's shard inputs at weight 0 so the
+        # K axis divides the mesh; they drop out of the weighted aggregation.
+        idx = jnp.concatenate([jnp.arange(k), jnp.zeros((pad,), jnp.int32)])
+        xs, ys, rngs = xs[idx], ys[idx], rngs[idx]
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
+
+    def local(trainable, frozen, bn_state, xs, ys, rngs):
+        trs, bns, losses = _local_training(
+            loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+            lr=lr, local_steps=local_steps, batch_size=batch_size,
+        )
+        kl = losses.shape[0]
+        panel_tr = make_pack_spec(trainable).pack_stacked(trs, kl)
+        panel_bn = make_pack_spec(bn_state).pack_stacked(bns, kl)
+        return jnp.concatenate([panel_tr, panel_bn], axis=1), losses
+
+    panel, losses = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P("clients"), P("clients"), P("clients")),
+        out_specs=(P("clients"), P("clients")),
+        check_rep=False,
+    )(trainable, frozen, bn_state, xs, ys, rngs)
+
+    spec_tr = make_pack_spec(trainable)
+    spec_bn = make_pack_spec(bn_state)
+    w = weights / jnp.sum(weights)
+    flat = ops.fedavg(panel, w)
+    new_tr = spec_tr.unpack(flat[: spec_tr.n])
+    return (
+        new_tr,
+        spec_bn.unpack(flat[spec_tr.n :]),
+        jnp.sum(w * losses),
+        spec_tr.pack(new_tr),
+    )
+
+
+class CohortEngine:
+    """Executes FL rounds under one of the MODES.  Stateless apart from the
+    mesh; safe to share across server + baselines."""
+
+    def __init__(self, mode: str = "vmap", mesh: Optional[Mesh] = None):
+        if mode == "auto":
+            mode = "sharded" if len(jax.devices()) > 1 else "packed"
+        if mode not in ("vmap", "packed", "sharded"):
+            raise ValueError(f"unknown engine mode {mode!r} (one of {MODES})")
+        if mode == "sharded" and mesh is None:
+            from repro.launch.mesh import make_client_mesh
+
+            mesh = make_client_mesh()
+        self.mode, self.mesh = mode, mesh
+
+    def round(
+        self,
+        loss_fn: Callable,
+        trainable,
+        frozen,
+        bn_state,
+        xs,
+        ys,
+        rngs,
+        weights,
+        *,
+        lr: float,
+        local_steps: int,
+        batch_size: int,
+    ) -> RoundResult:
+        kw = dict(lr=lr, local_steps=local_steps, batch_size=batch_size)
+        if self.mode == "vmap":
+            tr, bn, loss = CL.cohort_round(
+                loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
+                **kw,
+            )
+            return RoundResult(tr, bn, loss, None)
+        if self.mode == "packed":
+            return RoundResult(
+                *_round_packed(
+                    loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+                    weights, **kw,
+                )
+            )
+        return RoundResult(
+            *_round_sharded(
+                loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
+                mesh=self.mesh, **kw,
+            )
+        )
+
+
+def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None) -> CohortEngine:
+    return CohortEngine(mode, mesh)

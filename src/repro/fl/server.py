@@ -20,8 +20,8 @@ from repro.core import distill as D
 from repro.core import effective_movement as EM
 from repro.core import output_module as OM
 from repro.core import progressive as P
-from repro.fl import client as CL
 from repro.fl import data as DATA
+from repro.fl import engine as ENG
 from repro.fl import memory_model as MM
 from repro.models import cnn as C
 
@@ -45,6 +45,7 @@ class FLConfig:
     eval_every: int = 5
     seed: int = 0
     ratio: float = 1.0  # width of the simulated model (reduced on CPU)
+    engine: str = "vmap"  # cohort engine: vmap (oracle) | packed | sharded | auto
 
 
 class ProFLServer:
@@ -72,6 +73,7 @@ class ProFLServer:
         self.history: List[dict] = []
         self.total_uplink_params = 0
         self._key = key
+        self.engine = ENG.make_engine(fl.engine)
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -134,13 +136,19 @@ class ProFLServer:
                 break
             xs, ys, w = self._cohort_data(sel)
             rngs = jax.random.split(self._next_key(), len(sel))
-            trainable, self.bn_state, loss = CL.cohort_round(
+            res = self.engine.round(
                 loss_fn, trainable, frozen, self.bn_state, xs, ys, rngs, w,
                 lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
             )
+            trainable, self.bn_state, loss = res.trainable, res.bn_state, res.loss
             self.total_uplink_params += uplink * len(sel)
             info["rounds"] = rnd + 1
-            em_val = EM.em_update(fl.em, em_state, trainable)
+            # packed engines hand back the flat aggregated vector — feed EM
+            # directly, skipping the per-round tree re-flatten
+            if res.packed is not None:
+                em_val = EM.em_update_flat(fl.em, em_state, res.packed)
+            else:
+                em_val = EM.em_update(fl.em, em_state, trainable)
             rec = {
                 "stage": stage, "t": t, "round": rnd, "loss": float(loss),
                 "em": em_val, "pr": pr,
@@ -186,11 +194,11 @@ class ProFLServer:
                 break
             xs, ys, w = self._cohort_data(sel)
             rngs = jax.random.split(self._next_key(), len(sel))
-            proxy, _, _ = CL.cohort_round(
+            proxy = self.engine.round(
                 loss_fn, proxy, frozen, self.bn_state, xs, ys, rngs, w,
                 lr=fl.distill_lr, local_steps=fl.local_steps,
                 batch_size=fl.batch_size,
-            )
+            ).trainable
         self.proxies[t] = proxy
 
     # ------------------------------------------------------------------

@@ -305,6 +305,8 @@ def lower_combo(
         compile_s = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax <= 0.4.x: one dict per device
+            cost = cost[0] if cost else {}
         coll = _collective_bytes(compiled.as_text())
         n_dev = mesh.devices.size
         return {

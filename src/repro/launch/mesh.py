@@ -23,6 +23,25 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_client_mesh(n_clients: int | None = None):
+    """1-D mesh with a ``clients`` axis for the sharded FL cohort engine
+    (fl/engine.py): local SGD shards the cohort's client dim across it.
+
+    Uses every local device by default (CPU: set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before first jax
+    init to emulate N devices; TPU: the real chips)."""
+    n = len(jax.devices())
+    if n_clients is not None:
+        n = min(n, n_clients)
+    return jax.make_mesh((n,), ("clients",))
+
+
+def make_fl_production_mesh(*, n_client_shards: int = 16, n_model: int = 16):
+    """Production FL mesh: cohort clients sharded across ``clients``,
+    per-client training model-parallel across ``model`` (16×16 pod)."""
+    return jax.make_mesh((n_client_shards, n_model), ("clients", "model"))
+
+
 # TPU v5e hardware constants used by the roofline analysis (benchmarks/roofline.py)
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip

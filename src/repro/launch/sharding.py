@@ -59,7 +59,10 @@ def axis_env(mesh: Mesh, *, fsdp: bool = True, layout: str = "2d"):
     prev = getattr(_tls, "env", None)
     _tls.env = env
     try:
-        with jax.sharding.set_mesh(mesh):
+        # jax >= 0.5 spells this jax.sharding.set_mesh; on 0.4.x the Mesh
+        # context manager sets the same global mesh for jit/shard_map
+        set_mesh = getattr(jax.sharding, "set_mesh", None)
+        with (set_mesh(mesh) if set_mesh is not None else mesh):
             yield env
     finally:
         _tls.env = prev

@@ -8,3 +8,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+# Persistent XLA compilation cache: repeat tier-1 runs skip the multi-second
+# CPU compiles that dominate this suite (first/cold run is unaffected).
+try:
+    jax.config.update("jax_compilation_cache_dir", "/tmp/jax_compile_cache")
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+except Exception:  # older jaxlib without the persistent cache
+    pass

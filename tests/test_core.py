@@ -31,7 +31,7 @@ def test_group_boundaries_cover_exactly():
 
 
 def test_split_merge_roundtrip():
-    cfg = get_config("qwen3-8b").reduced().with_(n_prog_blocks=2)
+    cfg = get_config("qwen3-8b").reduced(d_model=128, vocab=128).with_(n_prog_blocks=2)
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     for t in range(B.n_blocks(cfg)):
         frozen, active = B.split_model(cfg, params, t)
@@ -142,7 +142,7 @@ def test_cnn_output_module_shapes():
 
 
 def test_tf_output_module_head_count():
-    cfg = get_config("qwen3-8b").reduced().with_(n_prog_blocks=2)
+    cfg = get_config("qwen3-8b").reduced(d_model=128, vocab=128).with_(n_prog_blocks=2)
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     op0 = OM.init_tf_output_module(cfg, jax.random.PRNGKey(1), 0, params)
     op_last = OM.init_tf_output_module(
@@ -158,7 +158,7 @@ def test_tf_output_module_head_count():
 
 
 def test_progressive_grads_do_not_touch_frozen():
-    cfg = get_config("qwen1.5-0.5b").reduced().with_(n_prog_blocks=2)
+    cfg = get_config("qwen1.5-0.5b").reduced(d_model=128, vocab=128).with_(n_prog_blocks=2)
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     t = 1
     frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
@@ -173,7 +173,7 @@ def test_progressive_grads_do_not_touch_frozen():
 
 
 def test_progressive_step_trains_only_active():
-    cfg = get_config("qwen1.5-0.5b").reduced().with_(n_prog_blocks=2)
+    cfg = get_config("qwen1.5-0.5b").reduced(d_model=128, vocab=128).with_(n_prog_blocks=2)
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     t = 1
     frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
@@ -193,6 +193,7 @@ def test_progressive_step_trains_only_active():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_progressive_loss_decreases_cnn():
     """A few ProFL steps on the active block reduce the sub-model loss."""
     cfg = C.CNNConfig("vgg11", width_mult=0.25, in_size=16)

@@ -1,0 +1,331 @@
+"""Equivalence tests for the sharded cohort execution engine (fl/engine.py):
+packed/sharded `round` must match the vmap+tree-map oracle
+(fl/client.py::cohort_round) to <= 1e-5 across cohort sizes, uneven weights,
+mixed dtypes, and both CNN and transformer loss_fns; pack/unpack must
+round-trip arbitrary trees; the multi-device path is exercised in a
+subprocess with --xla_force_host_platform_device_count."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import effective_movement as EM
+from repro.core import progressive as P
+from repro.fl import client as CL
+from repro.fl import engine as ENG
+from repro.launch.mesh import make_client_mesh
+from repro.models import cnn as C
+from repro.train.train_step import softmax_xent
+
+ENGINES = ["packed", "sharded"]
+
+
+def _tree_close(a, b, atol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), atol=atol
+        )
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round trips
+# ---------------------------------------------------------------------------
+
+TREES = [
+    {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))},
+    {"blocks": [[jnp.ones((2, 2))], [jnp.zeros((4,))]], "head": {"w": jnp.ones((2, 5))}},
+    {"a": jnp.ones((3,), jnp.bfloat16), "z": jnp.arange(4, dtype=jnp.float32)},
+    {"empty": {}, "x": jnp.ones((1, 1, 2))},
+]
+
+
+@pytest.mark.parametrize("tree", TREES, ids=["flat", "nested", "mixed_dtype", "holey"])
+def test_pack_roundtrip(tree):
+    spec = ENG.make_pack_spec(tree)
+    flat = spec.pack(tree)
+    assert flat.dtype == jnp.float32 and flat.shape == (spec.n,)
+    back = spec.unpack(flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pack_spec_is_cached():
+    t1 = {"w": jnp.zeros((2, 3))}
+    t2 = {"w": jnp.ones((2, 3))}
+    assert ENG.make_pack_spec(t1) is ENG.make_pack_spec(t2)
+    assert ENG.make_pack_spec({"w": jnp.zeros((3, 2))}) is not ENG.make_pack_spec(t1)
+
+
+def test_pack_stacked_matches_per_client_pack():
+    tree = TREES[1]
+    K = 3
+    stacked = jax.tree.map(
+        lambda l: jnp.stack([l * (i + 1) for i in range(K)]), tree
+    )
+    spec = ENG.make_pack_spec(tree)
+    panel = spec.pack_stacked(stacked, K)
+    assert panel.shape == (K, spec.n)
+    for i in range(K):
+        row = spec.pack(jax.tree.map(lambda l: l[i], stacked))
+        np.testing.assert_array_equal(np.asarray(panel[i]), np.asarray(row))
+
+
+def test_empty_tree_pack():
+    spec = ENG.make_pack_spec({})
+    assert spec.n == 0
+    assert spec.pack({}).shape == (0,)
+    assert spec.pack_stacked({}, 4).shape == (4, 0)
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle: synthetic mixed-dtype model, K and weight sweeps
+# ---------------------------------------------------------------------------
+
+
+def _mixed_loss(trainable, frozen, bn_state, xb, yb):
+    w = trainable["w"].astype(jnp.float32)  # bf16 leaf
+    b = trainable["b"]  # f32 leaf
+    pred = xb @ w + b
+    loss = jnp.mean((pred - yb[:, None]) ** 2)
+    return loss, bn_state
+
+
+def _mixed_world(K, n_local=8, d=5):
+    rng = jax.random.PRNGKey(0)
+    trainable = {
+        "w": jax.random.normal(rng, (d, 3), jnp.float32).astype(jnp.bfloat16),
+        "b": jnp.zeros((3,), jnp.float32),
+    }
+    bn = {"mu": jnp.zeros((3,))}
+    xs = jax.random.normal(jax.random.fold_in(rng, 1), (K, n_local, d))
+    ys = jax.random.randint(jax.random.fold_in(rng, 2), (K, n_local), 0, 3)
+    rngs = jax.random.split(jax.random.PRNGKey(7), K)
+    weights = jnp.arange(1.0, K + 1.0) ** 2  # strongly uneven
+    return trainable, bn, xs, ys.astype(jnp.float32), rngs, weights
+
+
+@pytest.mark.parametrize("mode", ENGINES)
+@pytest.mark.parametrize("K", [1, 4])
+def test_engine_matches_oracle_mixed_dtype(mode, K):
+    trainable, bn, xs, ys, rngs, weights = _mixed_world(K)
+    kw = dict(lr=0.1, local_steps=3, batch_size=4)
+    want = CL.cohort_round(
+        _mixed_loss, trainable, {}, bn, xs, ys, rngs, weights, **kw
+    )
+    res = ENG.make_engine(mode).round(
+        _mixed_loss, trainable, {}, bn, xs, ys, rngs, weights, **kw
+    )
+    _tree_close(want[0], res.trainable)
+    _tree_close(want[1], res.bn_state)
+    np.testing.assert_allclose(float(want[2]), float(res.loss), atol=1e-5)
+    # dtypes survive the packed round
+    assert res.trainable["w"].dtype == jnp.bfloat16
+    assert res.trainable["b"].dtype == jnp.float32
+    # packed vector is the aggregated flat trainable
+    spec = ENG.make_pack_spec(trainable)
+    assert res.packed is not None and res.packed.shape == (spec.n,)
+    np.testing.assert_allclose(
+        np.asarray(res.packed),
+        np.asarray(spec.pack(want[0])),
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle: CNN and transformer loss_fns
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cnn_world():
+    cfg = C.CNNConfig("vgg11", width_mult=0.0625, in_size=16)
+    params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))
+
+    def loss_fn(trainable, frozen, bn_state, xb, yb):
+        logits, new_bn = C.forward_cnn(cfg, trainable, bn_state, xb, train=True)
+        return softmax_xent(logits, yb), new_bn
+
+    K, n_local = 4, 8
+    rng = jax.random.PRNGKey(1)
+    xs = jax.random.normal(rng, (K, n_local, 16, 16, 3))
+    ys = jax.random.randint(jax.random.fold_in(rng, 1), (K, n_local), 0, 10)
+    rngs = jax.random.split(jax.random.PRNGKey(2), K)
+    weights = jnp.asarray([3.0, 1.0, 2.0, 0.5])
+    kw = dict(lr=0.05, local_steps=2, batch_size=4)
+    want = CL.cohort_round(loss_fn, params, {}, bn, xs, ys, rngs, weights, **kw)
+    return loss_fn, params, bn, xs, ys, rngs, weights, kw, want
+
+
+@pytest.mark.parametrize("mode", ENGINES)
+def test_engine_matches_oracle_cnn(cnn_world, mode):
+    loss_fn, params, bn, xs, ys, rngs, weights, kw, want = cnn_world
+    res = ENG.make_engine(mode).round(
+        loss_fn, params, {}, bn, xs, ys, rngs, weights, **kw
+    )
+    _tree_close(want[0], res.trainable)
+    _tree_close(want[1], res.bn_state)
+    np.testing.assert_allclose(float(want[2]), float(res.loss), atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def tf_world():
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("qwen1.5-0.5b").reduced(d_model=64, vocab=32).with_(
+        n_prog_blocks=2
+    )
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    t = 1
+    frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
+    prog_loss = P.make_progressive_loss(cfg, t)
+
+    def loss_fn(trainable, frozen, bn_state, xb, yb):
+        loss, _ = prog_loss(trainable, frozen, {"tokens": xb})
+        return loss, bn_state
+
+    K, n_local, S = 4, 6, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (K, n_local, S), 0,
+                              cfg.vocab)
+    ys = jnp.zeros((K, n_local), jnp.int32)  # unused by the LM loss
+    rngs = jax.random.split(jax.random.PRNGKey(3), K)
+    weights = jnp.asarray([1.0, 4.0, 2.0, 3.0])
+    kw = dict(lr=0.05, local_steps=2, batch_size=2)
+    want = CL.cohort_round(
+        loss_fn, trainable, frozen, {}, toks, ys, rngs, weights, **kw
+    )
+    return loss_fn, trainable, frozen, toks, ys, rngs, weights, kw, want
+
+
+@pytest.mark.parametrize("mode", ENGINES)
+def test_engine_matches_oracle_transformer(tf_world, mode):
+    loss_fn, trainable, frozen, toks, ys, rngs, weights, kw, want = tf_world
+    res = ENG.make_engine(mode).round(
+        loss_fn, trainable, frozen, {}, toks, ys, rngs, weights, **kw
+    )
+    _tree_close(want[0], res.trainable)
+    np.testing.assert_allclose(float(want[2]), float(res.loss), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EM integration: flat path == tree path
+# ---------------------------------------------------------------------------
+
+
+def test_em_flat_matches_tree_path():
+    cfg = EM.EMConfig(window_h=2)
+    trainable, bn, xs, ys, rngs, weights = _mixed_world(K=4)
+    # same shapes/statics as the K=4 equivalence tests -> jit cache hits
+    kw = dict(lr=0.1, local_steps=3, batch_size=4)
+    eng = ENG.make_engine("packed")
+
+    st_tree = EM.em_init(trainable)
+    st_flat = EM.em_init(trainable)
+    tr_a = tr_b = trainable
+    for r in range(4):
+        rr = jax.random.split(jax.random.PRNGKey(10 + r), 4)
+        tr_a, _, _ = CL.cohort_round(
+            _mixed_loss, tr_a, {}, bn, xs, ys, rr, weights, **kw
+        )
+        em_a = EM.em_update(cfg, st_tree, tr_a)
+        res = eng.round(_mixed_loss, tr_b, {}, bn, xs, ys, rr, weights, **kw)
+        tr_b = res.trainable
+        em_b = EM.em_update_flat(cfg, st_flat, res.packed)
+        assert (em_a is None) == (em_b is None)
+        if em_a is not None:
+            np.testing.assert_allclose(em_a, em_b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine construction
+# ---------------------------------------------------------------------------
+
+
+def test_make_engine_modes():
+    assert ENG.make_engine("vmap").mode == "vmap"
+    assert ENG.make_engine("packed").mode == "packed"
+    eng = ENG.make_engine("sharded")
+    assert eng.mesh is not None and "clients" in eng.mesh.shape
+    # 1 local device -> auto prefers packed
+    assert ENG.make_engine("auto").mode == (
+        "packed" if len(jax.devices()) == 1 else "sharded"
+    )
+    with pytest.raises(ValueError):
+        ENG.make_engine("einsum")
+
+
+def test_vmap_engine_returns_no_packed():
+    trainable, bn, xs, ys, rngs, weights = _mixed_world(K=4)
+    res = ENG.make_engine("vmap").round(
+        _mixed_loss, trainable, {}, bn, xs, ys, rngs, weights,
+        lr=0.1, local_steps=3, batch_size=4,
+    )
+    assert res.packed is None
+
+
+def test_client_mesh_axis():
+    mesh = make_client_mesh()
+    assert mesh.axis_names == ("clients",)
+    assert mesh.shape["clients"] == len(jax.devices())
+
+
+# ---------------------------------------------------------------------------
+# multi-device sharding (subprocess so the host-device-count flag applies
+# before jax initializes)
+# ---------------------------------------------------------------------------
+
+_MULTIDEV_SCRIPT = r"""
+import jax, jax.numpy as jnp
+assert len(jax.devices()) == 4, jax.devices()
+from repro.fl import client as CL, engine as ENG
+
+def loss_fn(tr, fro, bn, xb, yb):
+    pred = xb @ tr["w"] + tr["b"]
+    return jnp.mean((pred - yb[:, None]) ** 2), bn
+
+K, n_local, d = 6, 8, 5   # K=6 on 4 shards -> padded to 8 with ghosts
+rng = jax.random.PRNGKey(0)
+tr = {"w": jax.random.normal(rng, (d, 3)), "b": jnp.zeros((3,))}
+xs = jax.random.normal(jax.random.fold_in(rng, 1), (K, n_local, d))
+ys = jax.random.normal(jax.random.fold_in(rng, 2), (K, n_local))
+rngs = jax.random.split(jax.random.PRNGKey(1), K)
+w = jnp.arange(1.0, K + 1.0)
+kw = dict(lr=0.1, local_steps=3, batch_size=4)
+
+want = CL.cohort_round(loss_fn, tr, {}, {}, xs, ys, rngs, w, **kw)
+eng = ENG.make_engine("sharded")
+assert eng.mesh.shape["clients"] == 4
+res = eng.round(loss_fn, tr, {}, {}, xs, ys, rngs, w, **kw)
+err = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree.leaves(want[0]), jax.tree.leaves(res.trainable))
+)
+err = max(err, abs(float(want[2]) - float(res.loss)))
+print("MAXERR", err)
+assert err <= 1e-5, err
+"""
+
+
+def test_sharded_multidevice_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_compile_cache")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "MAXERR" in out.stdout

@@ -19,7 +19,7 @@ def _qkv(rng, B, H, K, Sq, Skv, hd, dtype):
 ATTN_SHAPES = [
     # (B, H, K, Sq, Skv, hd, bq, bk)
     (1, 1, 1, 128, 128, 64, 64, 64),
-    (2, 4, 2, 256, 256, 64, 64, 128),
+    pytest.param((2, 4, 2, 256, 256, 64, 64, 128), marks=pytest.mark.slow),
     (1, 8, 8, 128, 128, 128, 128, 64),
     (2, 6, 2, 192, 192, 32, 64, 64),  # non-pow2 heads, GQA g=3
 ]
@@ -27,7 +27,10 @@ ATTN_SHAPES = [
 
 @pytest.mark.parametrize("impl", ["pallas", "chunked"])
 @pytest.mark.parametrize("shape", ATTN_SHAPES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+# bf16 doubles the sweep for a dtype-cast-only code path: slow job only
+@pytest.mark.parametrize("dtype", [
+    jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_attention_causal(impl, shape, dtype):
     B, H, K, Sq, Skv, hd, bq, bk = shape
     q, k, v = _qkv(jax.random.PRNGKey(0), B, H, K, Sq, Skv, hd, dtype)
@@ -40,7 +43,11 @@ def test_attention_causal(impl, shape, dtype):
 
 
 @pytest.mark.parametrize("impl", ["pallas", "chunked"])
-@pytest.mark.parametrize("window", [16, 64, 100])
+@pytest.mark.parametrize("window", [
+    pytest.param(16, marks=pytest.mark.slow),
+    64,
+    pytest.param(100, marks=pytest.mark.slow),  # non-multiple of bk
+])
 def test_attention_sliding_window(impl, window):
     q, k, v = _qkv(jax.random.PRNGKey(1), 2, 4, 2, 256, 256, 64, jnp.float32)
     want = ref.attention(q, k, v, causal=True, window=window)
@@ -121,3 +128,45 @@ def test_fedavg_kernel(K, n, dtype):
     np.testing.assert_allclose(
         got.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
     )
+
+
+# ---------------------------------------------------------------------------
+# packed-panel edge cases for the cohort engine: K=1 cohorts and parameter
+# counts that do NOT divide the kernel tile (exercises the pad/slice path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,n,bt", [(1, 97, 64), (3, 130, 64), (4, 64, 256)])
+def test_fedavg_kernel_nonaligned(K, n, bt):
+    from repro.kernels import fedavg as _fedavg
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    p = jax.random.normal(k1, (K, n))
+    w = jax.nn.softmax(jax.random.normal(k2, (K,)))
+    want = ref.fedavg(p, w)
+    got = _fedavg.fedavg(p, w, bt=bt, interpret=True)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # K=1, weight 1 -> exact identity
+    if K == 1:
+        np.testing.assert_allclose(
+            np.asarray(_fedavg.fedavg(p, jnp.ones((1,)), bt=bt, interpret=True)),
+            np.asarray(p[0]), atol=1e-6,
+        )
+
+
+@pytest.mark.parametrize("n,bt", [(101, 64), (1, 64), (130, 128)])
+def test_effective_movement_kernel_nonaligned(n, bt):
+    from repro.kernels import effective_movement as _em
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    pn = jax.random.normal(k1, (n,))
+    po = jax.random.normal(k2, (n,))
+    net = jax.random.normal(k3, (n,))
+    want = ref.effective_movement_update(pn, po, net)
+    got = _em.effective_movement_update(pn, po, net, bt=bt, interpret=True)
+    assert got[0].shape == (n,)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), atol=1e-5)
+    # padding must not leak into the scalar reductions
+    np.testing.assert_allclose(float(got[1]), float(want[1]), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(float(got[2]), float(want[2]), rtol=1e-6, atol=1e-5)

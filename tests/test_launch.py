@@ -17,7 +17,11 @@ TINY_TRAIN = InputShape("tiny_train", 64, 4, "train")
 TINY_DECODE = InputShape("tiny_decode", 64, 4, "decode")
 
 
-@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-7b", "qwen2-moe-a2.7b"])
+@pytest.mark.parametrize("arch", [
+    "qwen3-8b",
+    pytest.param("rwkv6-7b", marks=pytest.mark.slow),
+    pytest.param("qwen2-moe-a2.7b", marks=pytest.mark.slow),
+])
 def test_lower_combo_debug_mesh(arch):
     cfg = get_config(arch).reduced()
     mesh = make_debug_mesh(1, 1)
@@ -33,6 +37,7 @@ def test_lower_decode_debug_mesh():
     assert r["per_device"]["argument_bytes"] > 0  # params + cache
 
 
+@pytest.mark.slow  # the fast equivalent claim is test_system.py::test_progressive_state_is_smaller_than_full
 def test_progressive_lower_debug_mesh():
     cfg = get_config("qwen1.5-0.5b").reduced().with_(n_prog_blocks=2)
     mesh = make_debug_mesh(1, 1)

@@ -51,7 +51,11 @@ def _naive_moe(cfg, mcfg, p, x):
     return y.reshape(B, S, D)
 
 
-@pytest.mark.parametrize("E,K,shared", [(6, 2, 0), (4, 1, 0), (6, 3, 2)])
+@pytest.mark.parametrize("E,K,shared", [
+    (6, 2, 0),
+    pytest.param(4, 1, 0, marks=pytest.mark.slow),
+    pytest.param(6, 3, 2, marks=pytest.mark.slow),
+])
 def test_moe_matches_dense_reference(E, K, shared):
     cfg = _cfg(E, K, shared)
     p = M.init_moe(cfg, cfg.moe, jax.random.PRNGKey(0))
@@ -63,6 +67,7 @@ def test_moe_matches_dense_reference(E, K, shared):
     assert float(aux) > 0
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_but_never_corrupts():
     """With capacity_factor << 1 some tokens are dropped; the surviving
     outputs must be a subset of the ample-capacity outputs (per token,
@@ -82,6 +87,7 @@ def test_moe_capacity_drops_but_never_corrupts():
         "expected at least one dropped token at cf=0.3"
 
 
+@pytest.mark.slow
 def test_padded_experts_never_selected():
     """E=60-style padding: padded expert slots receive zero tokens."""
     assert M.padded_experts(60) == 64

@@ -25,6 +25,7 @@ def _toy_cfg():
     )
 
 
+@pytest.mark.slow
 def test_full_training_reduces_loss():
     cfg = _toy_cfg()
     params = T.init_model(cfg, jax.random.PRNGKey(0))
@@ -57,6 +58,7 @@ def test_progressive_state_is_smaller_than_full():
         assert prog_bytes < 0.75 * full_bytes, (t, prog_bytes, full_bytes)
 
 
+@pytest.mark.slow
 def test_progressive_training_improves_submodel():
     cfg = _toy_cfg()
     params = T.init_model(cfg, jax.random.PRNGKey(0))
@@ -75,6 +77,7 @@ def test_progressive_training_improves_submodel():
     assert losses[-1] < losses[0] * 0.9, losses[::8]
 
 
+@pytest.mark.slow  # decode==forward consistency stays in tier-1 via test_smoke_archs
 def test_serve_batched_generation():
     """prefill + N greedy decode steps produce a coherent batched rollout."""
     cfg = _toy_cfg()
@@ -107,6 +110,7 @@ def test_checkpoint_roundtrip():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_param_sharding_rules_divide():
     """Every sharded dim produced by the rules divides the mesh axis size
     (sanitization invariant) for every full-size arch."""
