@@ -1,6 +1,12 @@
 """Kernel microbenchmarks (CPU wall-clock for the jnp paths; the Pallas
 kernels run in interpret mode here and are timed for regression tracking,
-not TPU-performance claims)."""
+not TPU-performance claims).
+
+Standalone smoke entry point for CI (catches kernel/engine regressions
+before merge without the full benchmark suite):
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke
+"""
 from __future__ import annotations
 
 import functools
@@ -49,6 +55,7 @@ def bench(ctx: dict, full: bool = False):
     C.emit("kernels/fedavg_20x1M", us, f"gbytes_s={4*Kc*n2/us/1e3:.2f}")
 
     _bench_cohort_aggregation(rng, full)
+    _bench_grouped_round(full=full)
 
 
 def _bench_cohort_aggregation(rng, full: bool):
@@ -94,3 +101,86 @@ def _bench_cohort_aggregation(rng, full: bool):
     pk_pl = jax.jit(functools.partial(packed_agg, impl="pallas"))
     us_pl = C.time_call(pk_pl, tree, w, iters=3)
     C.emit("kernels/cohort_agg_packed_pallas_interp", us_pl, "interpret_mode=1")
+
+
+def _width_loss_factory(f: int):
+    def loss_fn(tr, fro, bn, xb, yb):
+        pred = xb[:, :f] @ tr["w"] + tr["b"]
+        return jnp.mean((pred - yb[:, None]) ** 2), bn
+
+    return loss_fn
+
+
+def _bench_grouped_round(full: bool = False, smoke: bool = False,
+                         iters: int = 5):
+    """Grouped heterogeneous round (fl/engine.py::grouped_round): the fused
+    single-dispatch masked aggregation vs the serial per-group oracle, on a
+    HeteroFL-shaped cohort of three width groups.  Also asserts the fused
+    path's one-dispatch-per-round contract via the ops.DISPATCHES counter."""
+    from repro.fl import engine as ENG
+
+    d = 256 if smoke else (4096 if full else 1024)
+    out = 16
+    ks = (4, 6, 10)  # clients per width group
+    fracs = (0.25, 0.5, 1.0)
+    rng = jax.random.PRNGKey(0)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    losses = {f: _width_loss_factory(f) for f in
+              [max(1, int(d * r)) for r in fracs]}
+    plans = []
+    for gi, (r, kg) in enumerate(zip(fracs, ks)):
+        f = max(1, int(d * r))
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jax.random.normal(jax.random.fold_in(rng, gi), (kg, 16, d))
+        ys = jax.random.normal(jax.random.fold_in(rng, 50 + gi), (kg, 16))
+        rngs = jax.random.split(jax.random.fold_in(rng, 100 + gi), kg)
+        plans.append(ENG.GroupPlan(
+            losses[f], sub, {}, {}, xs, ys, rngs,
+            jnp.arange(1.0, kg + 1.0), 0.1, 2, 8,
+        ))
+    n = sum(x.size for x in jax.tree.leaves(gtr))
+
+    serial = ENG.make_engine("vmap")
+    fused = ENG.make_engine("packed")
+
+    us_s = C.time_call(
+        lambda: serial.grouped_round(plans, gtr, {}).loss, iters=iters
+    )
+    C.emit("kernels/grouped_round_serial", us_s,
+           f"groups={len(plans)} k_total={sum(ks)} n={n}")
+
+    us_f = C.time_call(
+        lambda: fused.grouped_round(plans, gtr, {}).loss, iters=iters
+    )
+    ops.reset_dispatches()
+    fused.grouped_round(plans, gtr, {})
+    n_disp = ops.DISPATCHES["fedavg_masked"]
+    assert n_disp == 1, (
+        f"grouped round must issue exactly ONE aggregation dispatch "
+        f"regardless of group count, saw {n_disp}"
+    )
+    ops.reset_dispatches()
+    C.emit("kernels/grouped_round_fused", us_f,
+           f"groups={len(plans)} k_total={sum(ks)} n={n} agg_dispatches=1 "
+           f"speedup_vs_serial={us_s/us_f:.2f}x")
+
+
+def main() -> None:
+    """CI smoke entry: run the grouped-round benchmark (with its dispatch
+    assertion) plus a small fedavg pass, fast enough for the slow job."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, few iters (CI regression gate)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        _bench_grouped_round(smoke=True, iters=2)
+    else:
+        bench({}, full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,12 +34,18 @@ def main():
         parts = D.partition_iid(jax.random.PRNGKey(1), len(xtr), 100)
     budgets = MM.assign_budgets_mb(np.random.default_rng(0), 100)
     cfg = CNNConfig("resnet18", width_mult=0.25, in_size=16)
+    # FLConfig.engine defaults to "auto": packed Pallas aggregation on a
+    # single device, shard_map across a `clients` mesh axis on multi-device.
+    # Set engine="vmap" to force the reference oracle path.
     fl = FLConfig(
         clients_per_round=10, local_steps=4, batch_size=16, n_local_fixed=32,
         max_rounds_per_step=args.rounds, distill_rounds=2, eval_every=4,
         em=EMConfig(window_h=2, slope_phi=0.03, patience_w=2, fit_points=4,
                     em_level=0.92, min_rounds=4),
     )
+
+    print(f"cohort engine: {fl.engine} "
+          f"({len(jax.devices())} device(s) visible)")
 
     print(f"ResNet18 paper-scale training memory: "
           f"{MM.full_train_memory_mb(CNNConfig('resnet18')):.0f} MB; "

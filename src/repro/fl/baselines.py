@@ -9,10 +9,21 @@
                 accompanied objectives; ensemble inference.  (The optional
                 mutual self-distillation term of DepthFL is omitted — noted
                 in DESIGN.md; the paper's comparison point stands.)
+
+HeteroFL and DepthFL run their multi-structure cohorts through
+``CohortEngine.grouped_round``: every width/depth group becomes a
+:class:`repro.fl.engine.GroupPlan` and the whole ragged cohort aggregates in
+ONE fused masked-kernel dispatch (per-column ``Σ w·m·p / Σ w·m`` with a
+zero-denominator passthrough) instead of a serial per-group loop of rounds
+with host-side num/den tree-maps.  ``oracle=True`` forces the serial
+per-group path — the equivalence oracle asserted in tests.  BN stats now
+aggregate under the same per-column masked average as the weights (each
+client contributes to exactly the bn columns its sub-model touched); for
+DepthFL this replaces the old order-dependent serial bn threading, and for
+HeteroFL the old "widest group defines bn" rule.
 """
 from __future__ import annotations
 
-import copy
 from typing import Dict, List, Optional
 
 import jax
@@ -29,7 +40,9 @@ from repro.train.train_step import softmax_xent
 
 RATIOS = (1.0, 0.5, 0.25, 0.125, 0.0625)
 
-_LOSS_CACHE: dict = {}
+# bounded: loss closures are jit cache keys, but sweeps over many
+# (cfg, depth, ratio) keys must not grow without limit
+_LOSS_CACHE: ENG.BoundedCache = ENG.BoundedCache(maxsize=128)
 
 
 def _full_loss(cfg: C.CNNConfig, ratio: float):
@@ -139,7 +152,13 @@ def run_exclusivefl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, round
 # ===========================================================================
 
 
-def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
+def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
+                 *, oracle: bool = False):
+    """Static-width HeteroFL.  Every round builds one :class:`GroupPlan` per
+    width level and hands the whole ragged cohort to ``grouped_round`` — one
+    fused masked aggregation dispatch regardless of how many width groups the
+    selection produced.  ``oracle=True`` routes the identical plans through
+    the serial per-group reference path instead."""
     levels = np.array([
         MM.width_ratio_for_budget(cfg, b, RATIOS[:-1]) or RATIOS[-1]
         for b in budgets
@@ -150,42 +169,28 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
         r: C.init_cnn(cfg, jax.random.PRNGKey(0), r * fl.ratio)
         for r in sorted(set(levels.tolist()))
     }
+    impl = "serial" if oracle else None
     accs = []
     for _ in range(rounds):
         sel = R.rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
-        num = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), params)
-        den = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), params)
-        bn_new = None
+        plans = []
         for r in sorted(set(levels[sel].tolist())):
             group = sel[levels[sel] == r]
             sub_t, sub_bn_t = templates[r]
-            sub = C.slice_cnn_params(params, sub_t)
-            sub_bn = C.slice_cnn_params(bn, sub_bn_t)
             xs, ys, w = R.cohort(group)
-            rngs = jax.random.split(R.next_key(), len(group))
-            loss_fn = _full_loss(cfg, r * fl.ratio)
-            sub, sub_bn, _ = R.round(loss_fn, sub, {}, sub_bn, xs, ys, rngs, w)
-            wsum = float(np.sum([len(parts[c]) for c in group]))
-            padded, mask = C.scatter_cnn_params(params, sub)
-            num = jax.tree.map(lambda n, p: n + wsum * p.astype(jnp.float32),
-                               num, padded)
-            den = jax.tree.map(lambda d, m: d + wsum * m, den, mask)
-            if r == max(levels[sel]):  # widest group defines bn stats
-                bn_pad, bn_mask = C.scatter_cnn_params(bn, sub_bn)
-                bn_new = jax.tree.map(
-                    lambda old, newp, m: jnp.where(m > 0, newp, old),
-                    bn, bn_pad, bn_mask,
-                )
-        params = jax.tree.map(
-            lambda old, n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-9), old)
-            .astype(old.dtype),
-            params, num, den,
-        )
-        if bn_new is not None:
-            bn = bn_new
+            plans.append(ENG.GroupPlan(
+                _full_loss(cfg, r * fl.ratio),
+                C.slice_cnn_params(params, sub_t), {},
+                C.slice_cnn_params(bn, sub_bn_t),
+                xs, ys, jax.random.split(R.next_key(), len(group)), w,
+                fl.lr, fl.local_steps, fl.batch_size,
+            ))
+        res = R.engine.grouped_round(plans, params, bn, impl=impl)
+        params, bn = res.trainable, res.bn_state
         accs.append(_acc_full(cfg, params, bn, xte, yte, fl.ratio))
     return {"acc": float(np.mean(accs[-10:])), "pr": 1.0,
-            "levels": levels.tolist(), "curve": accs}
+            "levels": levels.tolist(), "curve": accs,
+            "params": params, "bn": bn}
 
 
 # ===========================================================================
@@ -228,13 +233,22 @@ def _depth_loss(cfg: C.CNNConfig, depth: int, ratio: float):
     return _LOSS_CACHE[key]
 
 
-def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
+def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
+                *, oracle: bool = False):
+    """Depth-scaled DepthFL.  Each depth level d becomes a :class:`GroupPlan`
+    whose trainable is the {blocks[:d], heads[:d]} prefix of the global tree;
+    ``grouped_round`` aggregates every depth group (plus bn) in one fused
+    masked dispatch, blocks nobody trained passing through untouched.  Every
+    group starts from the round-start bn and bn aggregates under the same
+    per-column masked average (order-independent, unlike the old serial
+    threading).  ``oracle=True`` forces the serial per-group reference."""
     depths = np.array([MM.depth_for_budget(cfg, b) for b in budgets])
     pr = float(np.mean(depths > 0))
     R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
     params, bn = C.init_cnn(cfg, R.next_key(), fl.ratio)
     heads = _init_depth_heads(cfg, R.next_key(), fl.ratio)
     max_trained = int(depths.max()) if pr > 0 else 0
+    impl = "serial" if oracle else None
     accs = []
     for _ in range(rounds):
         cand = np.where(depths > 0)[0]
@@ -242,50 +256,35 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds):
             break
         sel = R.rng.choice(cand, min(fl.clients_per_round, len(cand)),
                            replace=False)
-        num_b = [jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), blk)
-                 for blk in params["blocks"]]
-        num_h = [jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), h)
-                 for h in heads]
-        den = np.zeros(cfg.n_prog_blocks)
-        bn_cur = bn
+        plans = []
         for d in sorted(set(depths[sel].tolist())):
             group = sel[depths[sel] == d]
             trainable = {
                 "blocks": [params["blocks"][i] for i in range(d)],
                 "heads": [heads[i] for i in range(d)],
             }
+            # bn PREFIX view: the membership mask must cover exactly the bn
+            # columns this depth trains, so deeper blocks' running stats are
+            # not diluted by shallow clients' unchanged round-start copies
+            sub_bn = {"blocks": list(bn["blocks"][:d])}
             xs, ys, w = R.cohort(group)
-            rngs = jax.random.split(R.next_key(), len(group))
-            out, bn_cur, _ = R.round(
-                _depth_loss(cfg, d, fl.ratio), trainable, {}, bn_cur,
-                xs, ys, rngs, w,
-            )
-            wsum = float(np.sum([len(parts[c]) for c in group]))
-            for i in range(d):
-                num_b[i] = jax.tree.map(
-                    lambda n, p: n + wsum * p, num_b[i], out["blocks"][i]
-                )
-                num_h[i] = jax.tree.map(
-                    lambda n, p: n + wsum * p, num_h[i], out["heads"][i]
-                )
-                den[i] += wsum
-        new_blocks = []
-        for i in range(cfg.n_prog_blocks):
-            if den[i] > 0:
-                new_blocks.append(
-                    jax.tree.map(lambda n: n / den[i], num_b[i])
-                )
-                heads[i] = jax.tree.map(lambda n: n / den[i], num_h[i])
-            else:
-                new_blocks.append(params["blocks"][i])
-        params = dict(params, blocks=new_blocks)
-        bn = bn_cur
+            plans.append(ENG.GroupPlan(
+                _depth_loss(cfg, d, fl.ratio), trainable, {}, sub_bn,
+                xs, ys, jax.random.split(R.next_key(), len(group)), w,
+                fl.lr, fl.local_steps, fl.batch_size,
+            ))
+        global_tr = {"blocks": list(params["blocks"]), "heads": list(heads)}
+        res = R.engine.grouped_round(plans, global_tr, bn, impl=impl)
+        params = dict(params, blocks=res.trainable["blocks"])
+        heads = list(res.trainable["heads"])
+        bn = res.bn_state
         accs.append(
             _acc_depth_ensemble(cfg, params, heads, bn, xte, yte,
                                 max_trained, fl.ratio)
         )
     acc = float(np.mean(accs[-10:])) if accs else None
-    return {"acc": acc, "pr": pr, "depths": depths.tolist(), "curve": accs}
+    return {"acc": acc, "pr": pr, "depths": depths.tolist(), "curve": accs,
+            "params": params, "bn": bn, "heads": heads}
 
 
 # ===========================================================================

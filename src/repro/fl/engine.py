@@ -23,17 +23,49 @@ em_update_flat) without re-flattening the tree every round — the EM update
 itself is the fused Pallas ``effective_movement_update`` pass over exactly
 this packed delta.
 
-Equivalence to the oracle is asserted in tests/test_engine.py.
+Grouped heterogeneous rounds
+----------------------------
+``CohortEngine.grouped_round(plans, ...)`` executes a cohort whose groups
+train *different* sub-model structures (HeteroFL widths, DepthFL depths,
+ProFL distill/train phases) and aggregates them in ONE fused dispatch.  Each
+:class:`GroupPlan` carries a group's loss_fn, its trainable/bn trees (a
+sliced or prefix view of the global trees), client data, and raw weights.
+The panel layout:
+
+* every group's vmapped (or shard_mapped) local SGD result is packed into
+  its own ``[K_g, n_g]`` panel via the cached :class:`PackSpec` machinery;
+* a cached :class:`GroupLayout` maps each group's flat coordinates into the
+  GLOBAL flat space (trainable columns first, then bn columns) by matching
+  leaf *paths* between the group tree and the global tree — a group leaf
+  must be a leading-corner slice of (or identical to) the global leaf, which
+  covers HeteroFL channel slicing, DepthFL block prefixes, and the identity;
+* the group panels are scattered into one shared ``[K_total, n_global]``
+  panel; a precomputed ``[K_total, n_global]`` membership mask marks which
+  columns each client actually trained;
+* one ``kernels.ops.fedavg_masked`` dispatch computes the per-column ratio
+  ``Σ_k w_k·m_kj·p_kj / Σ_k w_k·m_kj`` with a zero-denominator passthrough
+  to the server's current value — HeteroFL's num/den masking and DepthFL's
+  per-block averaging as kernel math instead of Python tree-maps.
+
+The serial per-group oracle (``impl="serial"``, default under the ``vmap``
+mode) runs each group through ``client.cohort_round`` and accumulates the
+same num/den host-side; equivalence is asserted in tests/test_engine.py.
+
+Equivalence to the oracle is asserted in tests/test_engine.py.  Module-level
+caches (_SPEC_CACHE, _LAYOUT_CACHE, the loss caches in fl/server.py and
+fl/baselines.py) are bounded LRU maps; :func:`clear_caches` empties them all.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -41,6 +73,62 @@ from repro.fl import client as CL
 from repro.kernels import ops
 
 MODES = ("vmap", "packed", "sharded", "auto")
+
+
+class BoundedCache(collections.OrderedDict):
+    """Tiny LRU map for module-level spec/layout/loss caches: long sweeps
+    over many (cfg, t, ratio) keys must not grow memory without limit.
+
+    Caveat for the loss caches: loss closures are jit static keys, so an
+    evicted-then-recreated closure retraces its round on the next visit, and
+    the evicted closure stays referenced by jax's jit cache until
+    :func:`clear_caches` (which also calls ``jax.clear_caches``) runs.  Size
+    the maxsize above the working set; the bound is a leak backstop, not a
+    hot-path eviction policy."""
+
+    def __init__(self, maxsize: int = 256):
+        super().__init__()
+        self.maxsize = maxsize
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        self.move_to_end(key)
+        return val
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __setitem__(self, key, val):
+        super().__setitem__(key, val)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            # NOT popitem(): OrderedDict.popitem re-enters __getitem__ after
+            # unlinking the key, which would trip move_to_end
+            del self[next(iter(self))]
+
+
+def clear_caches() -> None:
+    """Empty every module-level cache in the FL layer (pack specs, group
+    layouts, and the server/baseline loss caches), plus jax's jit caches —
+    compiled rounds are keyed on loss-closure identity, so dropping the loss
+    caches without the jit caches would leave the executables (and the
+    evicted closures they reference) alive.  Wired into tests/conftest.py;
+    also useful between long parameter sweeps."""
+    _SPEC_CACHE.clear()
+    _LAYOUT_CACHE.clear()
+    _slice_index.cache_clear()
+    from repro.fl import baselines as _bl
+    from repro.fl import server as _srv
+
+    _bl._LOSS_CACHE.clear()
+    _srv._LOSS_CACHE.clear()
+    try:
+        jax.clear_caches()
+    except AttributeError:  # very old jax without clear_caches
+        pass
 
 
 # ===========================================================================
@@ -92,7 +180,7 @@ class PackSpec:
         return self.treedef.unflatten(leaves)
 
 
-_SPEC_CACHE: dict = {}
+_SPEC_CACHE: BoundedCache = BoundedCache(maxsize=256)
 
 
 def make_pack_spec(tree) -> PackSpec:
@@ -165,21 +253,18 @@ def _round_packed(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
     return _packed_aggregate(trainable, bn_state, trs, bns, losses, weights)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("loss_fn", "lr", "local_steps", "batch_size", "mesh"),
-)
-def _round_sharded(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
-                   *, lr, local_steps, batch_size, mesh):
+def _sharded_local_panel(loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+                         *, lr, local_steps, batch_size, mesh):
+    """Local SGD under shard_map across the ``clients`` axis, returning the
+    packed [K, n_tr + n_bn] panel and [K] losses (ghost padding stripped)."""
     k = xs.shape[0]
     n_shards = mesh.shape["clients"]
     pad = (-k) % n_shards
     if pad:
-        # ghost clients: replicate client 0's shard inputs at weight 0 so the
-        # K axis divides the mesh; they drop out of the weighted aggregation.
+        # ghost clients: replicate client 0's shard inputs so the K axis
+        # divides the mesh; their rows are sliced off after the shard_map.
         idx = jnp.concatenate([jnp.arange(k), jnp.zeros((pad,), jnp.int32)])
         xs, ys, rngs = xs[idx], ys[idx], rngs[idx]
-        weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
 
     def local(trainable, frozen, bn_state, xs, ys, rngs):
         trs, bns, losses = _local_training(
@@ -198,7 +283,19 @@ def _round_sharded(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
         out_specs=(P("clients"), P("clients")),
         check_rep=False,
     )(trainable, frozen, bn_state, xs, ys, rngs)
+    return panel[:k], losses[:k]
 
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss_fn", "lr", "local_steps", "batch_size", "mesh"),
+)
+def _round_sharded(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
+                   *, lr, local_steps, batch_size, mesh):
+    panel, losses = _sharded_local_panel(
+        loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+        lr=lr, local_steps=local_steps, batch_size=batch_size, mesh=mesh,
+    )
     spec_tr = make_pack_spec(trainable)
     spec_bn = make_pack_spec(bn_state)
     w = weights / jnp.sum(weights)
@@ -210,6 +307,282 @@ def _round_sharded(loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
         jnp.sum(w * losses),
         spec_tr.pack(new_tr),
     )
+
+
+# ===========================================================================
+# Grouped heterogeneous rounds: one fused dispatch for multi-structure cohorts
+# ===========================================================================
+
+
+class GroupPlan(NamedTuple):
+    """One structure-group of a heterogeneous round.
+
+    ``trainable``/``bn_state`` are the group's view of the global trees:
+    every leaf must be a leading-corner slice of (HeteroFL widths) or
+    identical to (DepthFL prefixes, ProFL) a global leaf at the same tree
+    path.  ``weights`` are RAW aggregation weights (e.g. |D_k|) — the fused
+    num/den ratio makes normalization unnecessary."""
+
+    loss_fn: Callable
+    trainable: Any
+    frozen: Any
+    bn_state: Any
+    xs: jax.Array  # [K_g, n_local, ...]
+    ys: jax.Array  # [K_g, n_local]
+    rngs: jax.Array  # [K_g, 2]
+    weights: jax.Array  # [K_g] raw weights
+    lr: float
+    local_steps: int
+    batch_size: int
+
+
+class GroupedResult(NamedTuple):
+    trainable: Any
+    bn_state: Any
+    loss: jax.Array
+    packed: Optional[jax.Array]  # aggregated flat trainable (f32) or None
+
+
+@functools.lru_cache(maxsize=4096)
+def _slice_index(gshape: Tuple[int, ...], sshape: Tuple[int, ...]) -> np.ndarray:
+    """Flat positions of the leading-corner ``sshape`` slice inside a C-order
+    flattened ``gshape`` leaf."""
+    if gshape == sshape:
+        return np.arange(math.prod(gshape), dtype=np.int64)
+    if len(gshape) != len(sshape) or any(
+        s > g for s, g in zip(sshape, gshape)
+    ):
+        raise ValueError(
+            f"group leaf {sshape} is not a leading-corner slice of {gshape}"
+        )
+    return np.ravel_multi_index(np.indices(sshape), gshape).reshape(-1)
+
+
+def _scatter_index(global_tree, global_spec: PackSpec, sub_tree) -> np.ndarray:
+    """Map ``sub_tree``'s packed coordinates into ``global_tree``'s packed
+    coordinate space by leaf-path matching."""
+    gmap = {}
+    for (path, leaf), off in zip(
+        jax.tree_util.tree_flatten_with_path(global_tree)[0],
+        global_spec.offsets,
+    ):
+        gmap[jax.tree_util.keystr(path)] = (off, tuple(leaf.shape))
+    parts = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(sub_tree)[0]:
+        key = jax.tree_util.keystr(path)
+        if key not in gmap:
+            raise ValueError(f"group leaf {key} has no global counterpart")
+        off, gshape = gmap[key]
+        parts.append(off + _slice_index(gshape, tuple(leaf.shape)))
+    if not parts:
+        return np.zeros((0,), np.int64)
+    return np.concatenate(parts)
+
+
+@dataclass
+class GroupLayout:
+    """Cached scatter plan for one (global trees, group structures) combo:
+    column layout is [trainable columns | bn columns] in global pack order;
+    rows are groups' clients stacked in plan order."""
+
+    gspec_tr: PackSpec
+    gspec_bn: PackSpec
+    n: int  # total columns
+    k_total: int  # total clients (rows)
+    rows: Tuple[int, ...]  # per-group row offset
+    ks: Tuple[int, ...]  # per-group client count
+    idx: Tuple[np.ndarray, ...]  # per-group global column indices
+    group_specs: Tuple[Tuple[PackSpec, PackSpec], ...]
+    identity: bool  # single group covering every column in order
+    _mask: Optional[jax.Array] = None  # built lazily, [k_total, n] f32
+
+    @property
+    def mask(self) -> jax.Array:
+        """[k_total, n] membership — materialized on first use so the
+        serial/identity paths (which never read it) don't pay K_total × n
+        floats of device memory per cached layout."""
+        if self._mask is None:
+            if self.identity:
+                self._mask = jnp.ones((self.k_total, self.n), jnp.float32)
+            else:
+                m = np.zeros((self.k_total, self.n), np.float32)
+                for r, k, ix in zip(self.rows, self.ks, self.idx):
+                    m[r : r + k, ix] = 1.0
+                self._mask = jnp.asarray(m)
+        return self._mask
+
+
+_LAYOUT_CACHE: BoundedCache = BoundedCache(maxsize=32)
+
+
+def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
+                      global_bn) -> GroupLayout:
+    gspec_tr = make_pack_spec(global_trainable)
+    gspec_bn = make_pack_spec(global_bn)
+    group_specs = tuple(
+        (make_pack_spec(p.trainable), make_pack_spec(p.bn_state))
+        for p in plans
+    )
+    ks = tuple(int(p.xs.shape[0]) for p in plans)
+    key = (gspec_tr, gspec_bn, group_specs, ks)
+    layout = _LAYOUT_CACHE.get(key)
+    if layout is not None:
+        return layout
+
+    n = gspec_tr.n + gspec_bn.n
+    # identity (every ProFL round): group specs ARE the global specs, so the
+    # scatter is arange(n) — skip building the O(n) index arrays entirely
+    identity = len(plans) == 1 and group_specs[0] == (gspec_tr, gspec_bn)
+    idx, rows, row = [], [], 0
+    for plan in plans:
+        if not identity:
+            idx_tr = _scatter_index(global_trainable, gspec_tr, plan.trainable)
+            idx_bn = _scatter_index(global_bn, gspec_bn, plan.bn_state)
+            idx.append(np.concatenate([idx_tr, gspec_tr.n + idx_bn]))
+        rows.append(row)
+        row += plan.xs.shape[0]
+    layout = GroupLayout(
+        gspec_tr, gspec_bn, n, row, tuple(rows), ks, tuple(idx), group_specs,
+        identity,
+    )
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+@functools.partial(
+    jax.jit, static_argnames=("loss_fn", "lr", "local_steps", "batch_size")
+)
+def _group_local_pack(loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+                      *, lr, local_steps, batch_size):
+    """vmapped local SGD for one group, packed to its [K_g, n_g] panel."""
+    trs, bns, losses = _local_training(
+        loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+        lr=lr, local_steps=local_steps, batch_size=batch_size,
+    )
+    k = losses.shape[0]
+    panel_tr = make_pack_spec(trainable).pack_stacked(trs, k)
+    panel_bn = make_pack_spec(bn_state).pack_stacked(bns, k)
+    return jnp.concatenate([panel_tr, panel_bn], axis=1), losses
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss_fn", "lr", "local_steps", "batch_size", "mesh"),
+)
+def _group_local_pack_sharded(loss_fn, trainable, frozen, bn_state, xs, ys,
+                              rngs, *, lr, local_steps, batch_size, mesh):
+    return _sharded_local_panel(
+        loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
+        lr=lr, local_steps=local_steps, batch_size=batch_size, mesh=mesh,
+    )
+
+
+def _grouped_prev(layout: GroupLayout, global_trainable, global_bn):
+    return jnp.concatenate(
+        [layout.gspec_tr.pack(global_trainable), layout.gspec_bn.pack(global_bn)]
+    )
+
+
+def _grouped_unpack(layout: GroupLayout, flat, losses_w, w_total):
+    new_tr = layout.gspec_tr.unpack(flat[: layout.gspec_tr.n])
+    new_bn = layout.gspec_bn.unpack(flat[layout.gspec_tr.n :])
+    loss = losses_w / jnp.maximum(w_total, 1e-9)
+    return new_tr, new_bn, loss
+
+
+def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
+                   mesh: Optional[Mesh]):
+    """Fused path: per-group local SGD, one shared panel, ONE fedavg_masked
+    dispatch for the whole heterogeneous cohort."""
+    if layout.identity:
+        # degenerate single-group round (every ProFL round): the mask is all
+        # ones, so skip the scatter/mask machinery and run the one-jit packed
+        # (or sharded) round — still exactly one aggregation dispatch
+        p = plans[0]
+        kw = dict(lr=p.lr, local_steps=p.local_steps, batch_size=p.batch_size)
+        if mesh is not None:
+            return GroupedResult(*_round_sharded(
+                p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys,
+                p.rngs, p.weights, mesh=mesh, **kw,
+            ))
+        return GroupedResult(*_round_packed(
+            p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys,
+            p.rngs, p.weights, **kw,
+        ))
+    panels, losses = [], []
+    for plan in plans:
+        kw = dict(lr=plan.lr, local_steps=plan.local_steps,
+                  batch_size=plan.batch_size)
+        if mesh is not None:
+            panel, loss = _group_local_pack_sharded(
+                plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
+                plan.xs, plan.ys, plan.rngs, mesh=mesh, **kw,
+            )
+        else:
+            panel, loss = _group_local_pack(
+                plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
+                plan.xs, plan.ys, plan.rngs, **kw,
+            )
+        panels.append(panel)
+        losses.append(loss)
+    panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
+    for row, ix, p in zip(layout.rows, layout.idx, panels):
+        panel = panel.at[row : row + p.shape[0], ix].set(p)
+    w = jnp.concatenate(
+        [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
+    )
+    prev = _grouped_prev(layout, global_trainable, global_bn)
+    flat = ops.fedavg_masked(panel, w, layout.mask, prev)
+    losses_w = sum(
+        jnp.sum(jnp.asarray(p.weights, jnp.float32) * l)
+        for p, l in zip(plans, losses)
+    )
+    new_tr, new_bn, loss = _grouped_unpack(layout, flat, losses_w, jnp.sum(w))
+    return GroupedResult(new_tr, new_bn, loss, layout.gspec_tr.pack(new_tr))
+
+
+def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout):
+    """Serial per-group oracle: each group through ``client.cohort_round``
+    (vmap + einsum tree-map), masked num/den accumulated host-side.  This is
+    the semantics of record that the fused path is tested against."""
+    if layout.identity:
+        # degenerate single-group round == the plain oracle cohort round
+        p = plans[0]
+        tr, bn, loss = CL.cohort_round(
+            p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys, p.rngs,
+            p.weights, lr=p.lr, local_steps=p.local_steps,
+            batch_size=p.batch_size,
+        )
+        return GroupedResult(tr, bn, loss, None)
+    num = jnp.zeros((layout.n,), jnp.float32)
+    den = jnp.zeros((layout.n,), jnp.float32)
+    losses_w = jnp.zeros((), jnp.float32)
+    w_total = jnp.zeros((), jnp.float32)
+    for plan, ix, (spec_tr_g, spec_bn_g) in zip(
+        plans, layout.idx, layout.group_specs
+    ):
+        wsum = float(jnp.sum(plan.weights))
+        if wsum <= 0.0:
+            # zero-weight group: no contribution (its unique columns keep the
+            # server's previous values via the zero-denominator passthrough)
+            continue
+        tr_g, bn_g, loss_g = CL.cohort_round(
+            plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
+            plan.xs, plan.ys, plan.rngs, plan.weights,
+            lr=plan.lr, local_steps=plan.local_steps,
+            batch_size=plan.batch_size,
+        )
+        flat_g = jnp.concatenate(
+            [spec_tr_g.pack(tr_g), spec_bn_g.pack(bn_g)]
+        )
+        num = num.at[ix].add(wsum * flat_g)
+        den = den.at[ix].add(wsum)
+        losses_w = losses_w + wsum * loss_g
+        w_total = w_total + wsum
+    prev = _grouped_prev(layout, global_trainable, global_bn)
+    flat = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
+    new_tr, new_bn, loss = _grouped_unpack(layout, flat, losses_w, w_total)
+    return GroupedResult(new_tr, new_bn, loss, None)
 
 
 class CohortEngine:
@@ -262,6 +635,33 @@ class CohortEngine:
                 mesh=self.mesh, **kw,
             )
         )
+
+    def grouped_round(
+        self,
+        plans: Sequence[GroupPlan],
+        global_trainable,
+        global_bn,
+        *,
+        impl: Optional[str] = None,
+    ) -> GroupedResult:
+        """One heterogeneous round over ``plans`` (see module docstring).
+
+        ``impl`` is ``"serial"`` (per-group oracle) or ``"fused"`` (one
+        masked-kernel dispatch); ``None`` picks serial under the ``vmap``
+        mode and fused otherwise (sharded local SGD when the engine mode is
+        ``sharded``, with per-group ghost-client padding on the ``clients``
+        mesh axis)."""
+        if not plans:
+            raise ValueError("grouped_round needs at least one GroupPlan")
+        if impl is None:
+            impl = "serial" if self.mode == "vmap" else "fused"
+        if impl not in ("serial", "fused"):
+            raise ValueError(f"unknown grouped impl {impl!r}")
+        layout = make_group_layout(plans, global_trainable, global_bn)
+        if impl == "serial":
+            return _grouped_serial(plans, global_trainable, global_bn, layout)
+        mesh = self.mesh if self.mode == "sharded" else None
+        return _grouped_fused(plans, global_trainable, global_bn, layout, mesh)
 
 
 def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None) -> CohortEngine:

@@ -45,7 +45,9 @@ class FLConfig:
     eval_every: int = 5
     seed: int = 0
     ratio: float = 1.0  # width of the simulated model (reduced on CPU)
-    engine: str = "vmap"  # cohort engine: vmap (oracle) | packed | sharded | auto
+    # cohort engine: auto (default: sharded on multi-device, packed otherwise)
+    # | vmap (the reference oracle) | packed | sharded
+    engine: str = "auto"
 
 
 class ProFLServer:
@@ -136,10 +138,13 @@ class ProFLServer:
                 break
             xs, ys, w = self._cohort_data(sel)
             rngs = jax.random.split(self._next_key(), len(sel))
-            res = self.engine.round(
+            # ProFL rounds share the grouped entry point with the
+            # heterogeneous baselines: one (degenerate) GroupPlan per round
+            plan = ENG.GroupPlan(
                 loss_fn, trainable, frozen, self.bn_state, xs, ys, rngs, w,
-                lr=fl.lr, local_steps=fl.local_steps, batch_size=fl.batch_size,
+                fl.lr, fl.local_steps, fl.batch_size,
             )
+            res = self.engine.grouped_round([plan], trainable, self.bn_state)
             trainable, self.bn_state, loss = res.trainable, res.bn_state, res.loss
             self.total_uplink_params += uplink * len(sel)
             info["rounds"] = rnd + 1
@@ -194,10 +199,12 @@ class ProFLServer:
                 break
             xs, ys, w = self._cohort_data(sel)
             rngs = jax.random.split(self._next_key(), len(sel))
-            proxy = self.engine.round(
+            plan = ENG.GroupPlan(
                 loss_fn, proxy, frozen, self.bn_state, xs, ys, rngs, w,
-                lr=fl.distill_lr, local_steps=fl.local_steps,
-                batch_size=fl.batch_size,
+                fl.distill_lr, fl.local_steps, fl.batch_size,
+            )
+            proxy = self.engine.grouped_round(
+                [plan], proxy, self.bn_state
             ).trainable
         self.proxies[t] = proxy
 
@@ -233,7 +240,7 @@ class ProFLServer:
 # across rounds of the same step
 # ---------------------------------------------------------------------------
 
-_LOSS_CACHE: dict = {}
+_LOSS_CACHE: ENG.BoundedCache = ENG.BoundedCache(maxsize=128)
 
 
 def _make_cnn_loss(cfg: C.CNNConfig, t: int, ratio: float):

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.pallas_util import default_interpret
+
 
 def _em_kernel(pn_ref, po_ref, net_ref, net_out_ref, path_ref, netabs_ref):
     u = pn_ref[...].astype(jnp.float32) - po_ref[...].astype(jnp.float32)
@@ -40,9 +42,14 @@ def effective_movement_update(
     net: jax.Array,  # [n] float32
     *,
     bt: int = 65536,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Returns (net_new [n] f32, path_inc scalar f32, net_abs scalar f32)."""
+    """Returns (net_new [n] f32, path_inc scalar f32, net_abs scalar f32).
+
+    ``interpret=None`` resolves platform-aware: compiled on TPU, interpret
+    mode on every other backend."""
+    if interpret is None:
+        interpret = default_interpret()
     (n,) = p_new.shape
     bt = min(bt, n)
     pad = (-n) % bt

@@ -7,15 +7,28 @@ each grid step stages a [K, bt] panel into VMEM and contracts the K axis with
 an f32 accumulator entirely on-chip — one HBM pass over the stacked params,
 one write of the result.
 
-Oracle: kernels/ref.py::fedavg.
+``fedavg_masked`` is the heterogeneous-cohort variant: clients train
+*different* sub-structures, so each column j carries a membership mask and
+the contraction computes a per-column ratio ``Σ w·m·p / Σ w·m`` with a
+zero-denominator passthrough to ``prev`` (the server's current value).  One
+fused pass aggregates a whole multi-structure cohort (HeteroFL widths,
+DepthFL depths, ProFL phases) regardless of how many groups it contains.
+
+``interpret`` defaults to platform-aware: compiled on TPU, interpret mode
+everywhere else.  Pass an explicit bool to override.
+
+Oracles: kernels/ref.py::fedavg / fedavg_masked.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_util import default_interpret
 
 
 def _fedavg_kernel(p_ref, w_ref, o_ref):
@@ -30,8 +43,10 @@ def fedavg(
     weights: jax.Array,  # [K]
     *,
     bt: int = 65536,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
     K, n = params.shape
     bt = min(bt, n)
     pad = (-n) % bt
@@ -49,4 +64,57 @@ def fedavg(
         out_shape=jax.ShapeDtypeStruct((n + pad,), params.dtype),
         interpret=interpret,
     )(params, weights)
+    return out[:n]
+
+
+def _fedavg_masked_kernel(p_ref, w_ref, m_ref, prev_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)  # [K, bt]
+    w = w_ref[...].astype(jnp.float32)  # [K]
+    m = m_ref[...].astype(jnp.float32)  # [K, bt]
+    prev = prev_ref[...].astype(jnp.float32)  # [bt]
+    num = jnp.einsum("k,kn->n", w, m * p)
+    den = jnp.einsum("k,kn->n", w, m)
+    out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def fedavg_masked(
+    params: jax.Array,  # [K, n] stacked client vectors (zero where unmasked)
+    weights: jax.Array,  # [K] raw (NOT normalized) weights
+    mask: jax.Array,  # [K, n] column membership
+    prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
+    *,
+    bt: int = 65536,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Tiled like ``fedavg``: each grid step stages [K, bt] panel + mask
+    blocks into VMEM and emits ``Σ w·m·p / Σ w·m`` for its columns, falling
+    back to ``prev`` where no client covers a column."""
+    if interpret is None:
+        interpret = default_interpret()
+    K, n = params.shape
+    if prev is None:
+        prev = jnp.zeros((n,), params.dtype)
+    bt = min(bt, n)
+    pad = (-n) % bt
+    if pad:
+        # padded mask columns are zero -> den 0 -> prev padding (also zero)
+        params = jnp.pad(params, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        prev = jnp.pad(prev, (0, pad))
+    nt = (n + pad) // bt
+    out = pl.pallas_call(
+        _fedavg_masked_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((K, bt), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, bt), lambda i: (0, i)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), params.dtype),
+        interpret=interpret,
+    )(params, weights, mask, prev)
     return out[:n]

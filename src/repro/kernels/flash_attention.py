@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.pallas_util import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -108,8 +110,10 @@ def flash_attention_fwd(
     window: int = 0,
     bq: int = 256,
     bk: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:  # platform-aware: compile on TPU, interpret elsewhere
+        interpret = default_interpret()
     B, H, Sq, hd = q.shape
     Kh, Skv = k.shape[1], k.shape[2]
     g = H // Kh

@@ -9,13 +9,21 @@
                   instead of the O(S²) logits tensor, and XLA can remat it.
   * ``naive``   — the ref.py oracle (small shapes / tests).
 
-``effective_movement_update`` / ``fedavg`` dispatch kernel vs ref the same
-way.  On TPU the pallas paths are selected automatically.
+``effective_movement_update`` / ``fedavg`` / ``fedavg_masked`` dispatch
+kernel vs ref the same way.  On TPU the pallas paths are selected
+automatically, and the Pallas kernels' ``interpret`` flag resolves
+platform-aware (compiled on TPU, interpret mode elsewhere).
+
+``DISPATCHES`` counts aggregation dispatches issued through this module
+(python-level calls; for callers under ``jax.jit`` that means trace-time
+calls).  The grouped cohort engine asserts "one aggregation dispatch per
+round regardless of group count" against it.
 """
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +34,12 @@ from repro.kernels import effective_movement as _em
 from repro.kernels import fedavg as _fedavg
 
 Impl = Literal["auto", "pallas", "chunked", "naive"]
+
+DISPATCHES: collections.Counter = collections.Counter()
+
+
+def reset_dispatches() -> None:
+    DISPATCHES.clear()
 
 
 def _on_tpu() -> bool:
@@ -162,15 +176,33 @@ def effective_movement_update(p_new, p_old, net, *, impl: Impl = "auto"):
     if impl == "auto":
         impl = "pallas" if (_on_tpu() or p_new.size >= 4096) else "naive"
     if impl == "pallas":
-        return _em.effective_movement_update(
-            p_new, p_old, net, interpret=not _on_tpu()
-        )
+        return _em.effective_movement_update(p_new, p_old, net)
     return _ref.effective_movement_update(p_new, p_old, net)
 
 
 def fedavg(params, weights, *, impl: Impl = "auto"):
+    DISPATCHES["fedavg"] += 1
     if impl == "auto":
         impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
     if impl == "pallas":
-        return _fedavg.fedavg(params, weights, interpret=not _on_tpu())
+        return _fedavg.fedavg(params, weights)
     return _ref.fedavg(params, weights)
+
+
+def fedavg_masked(
+    params,  # [K, n] panel
+    weights,  # [K] raw weights (normalization cancels in num/den)
+    mask,  # [K, n] column membership
+    prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
+    *,
+    impl: Impl = "auto",
+):
+    """Masked per-column weighted average: Σ w·m·p / Σ w·m with a
+    zero-denominator passthrough to ``prev``.  One dispatch aggregates a
+    whole heterogeneous cohort (HeteroFL/DepthFL/ProFL groups)."""
+    DISPATCHES["fedavg_masked"] += 1
+    if impl == "auto":
+        impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
+    if impl == "pallas":
+        return _fedavg.fedavg_masked(params, weights, mask, prev)
+    return _ref.fedavg_masked(params, weights, mask, prev)

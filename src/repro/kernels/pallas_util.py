@@ -1,0 +1,11 @@
+"""Shared helpers for the Pallas kernels in this package."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Platform-aware ``interpret`` default for every Pallas kernel: compile
+    on a real TPU backend, interpret mode everywhere else.  Single source of
+    truth — kernels resolve ``interpret=None`` through this."""
+    return jax.default_backend() != "tpu"

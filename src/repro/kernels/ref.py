@@ -80,3 +80,26 @@ def fedavg(params: jax.Array, weights: jax.Array) -> jax.Array:
         "k,kn->n", weights.astype(jnp.float32), params.astype(jnp.float32)
     )
     return out.astype(params.dtype)
+
+
+def fedavg_masked(
+    params: jax.Array,  # [K, n] stacked client vectors (panel)
+    weights: jax.Array,  # [K] raw (NOT normalized) aggregation weights
+    mask: jax.Array,  # [K, n] per-column membership (1 = client trains col)
+    prev: jax.Array | None = None,  # [n] passthrough where nobody covers a col
+) -> jax.Array:
+    """Per-column masked weighted average (heterogeneous cohorts):
+
+        out[j] = Σ_k w_k·m_kj·p_kj / Σ_k w_k·m_kj      if the denom > 0
+        out[j] = prev[j] (or 0 if prev is None)         otherwise
+
+    The per-column denominator makes HeteroFL's num/den masking and DepthFL's
+    per-block averaging plain kernel math; weights need no normalization
+    because it cancels in the ratio.  Accumulated in f32."""
+    w = weights.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    num = jnp.einsum("k,kn->n", w, m * params.astype(jnp.float32))
+    den = jnp.einsum("k,kn->n", w, m)
+    base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
+    out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
+    return out.astype(params.dtype)

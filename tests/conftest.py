@@ -16,3 +16,12 @@ try:
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
 except Exception:  # older jaxlib without the persistent cache
     pass
+
+
+def pytest_sessionfinish(session, exitstatus):
+    # Drop the FL layer's module-level caches (pack specs, group layouts,
+    # loss closures) so long sweeps / looped suites don't accumulate them.
+    # Mid-session the caches are LRU-bounded (fl/engine.py::BoundedCache).
+    from repro.fl.engine import clear_caches
+
+    clear_caches()

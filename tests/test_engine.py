@@ -2,8 +2,12 @@
 packed/sharded `round` must match the vmap+tree-map oracle
 (fl/client.py::cohort_round) to <= 1e-5 across cohort sizes, uneven weights,
 mixed dtypes, and both CNN and transformer loss_fns; pack/unpack must
-round-trip arbitrary trees; the multi-device path is exercised in a
-subprocess with --xla_force_host_platform_device_count."""
+round-trip arbitrary trees; `grouped_round`'s fused masked aggregation must
+match the serial per-group oracle for HeteroFL-style width groups and
+DepthFL-style depth prefixes (incl. zero-weight groups, the single-group
+degenerate case, and a one-dispatch-per-round assertion); the multi-device
+paths are exercised in a subprocess with
+--xla_force_host_platform_device_count."""
 import os
 import subprocess
 import sys
@@ -278,6 +282,204 @@ def test_client_mesh_axis():
 
 
 # ---------------------------------------------------------------------------
+# grouped heterogeneous rounds: fused masked aggregation vs the serial
+# per-group oracle (HeteroFL-style width groups, DepthFL-style depth groups,
+# mask edge cases, single-dispatch assertion)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ops as OPS
+
+
+def _grouped_close(a: ENG.GroupedResult, b: ENG.GroupedResult, atol=1e-5):
+    _tree_close(a.trainable, b.trainable, atol=atol)
+    _tree_close(a.bn_state, b.bn_state, atol=atol)
+    np.testing.assert_allclose(float(a.loss), float(b.loss), atol=atol)
+
+
+def _width_loss(f):
+    def loss_fn(tr, fro, bn, xb, yb):
+        pred = xb[:, :f] @ tr["w"] + tr["b"]
+        mu = bn["mu"] * 0.9 + 0.1 * jnp.mean(pred)
+        return jnp.mean((pred - yb[:, None]) ** 2), {"mu": mu}
+
+    return loss_fn
+
+
+_WIDTH_LOSSES = {f: _width_loss(f) for f in (4, 6, 8)}
+
+
+def _width_world(zero_weight_group=None):
+    """HeteroFL-shaped groups: three width levels slice the leading rows of
+    the global ``w``; strongly uneven weights."""
+    d, out = 8, 3
+    rng = jax.random.PRNGKey(0)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    gbn = {"mu": jnp.zeros(())}
+    plans = []
+    for gi, (f, kg) in enumerate([(4, 2), (6, 3), (8, 2)]):
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jax.random.normal(jax.random.fold_in(rng, gi), (kg, 10, d))
+        ys = jax.random.normal(jax.random.fold_in(rng, 100 + gi), (kg, 10))
+        rngs = jax.random.split(jax.random.fold_in(rng, 200 + gi), kg)
+        w = jnp.arange(1.0, kg + 1.0) * (gi + 0.5)
+        if gi == zero_weight_group:
+            w = jnp.zeros_like(w)
+        plans.append(ENG.GroupPlan(
+            _WIDTH_LOSSES[f], sub, {}, gbn, xs, ys, rngs, w, 0.1, 3, 4
+        ))
+    return plans, gtr, gbn
+
+
+def _depth_loss_fn(depth):
+    def loss_fn(tr, fro, bn, xb, yb):
+        h = xb
+        for i in range(depth):
+            h = jnp.tanh(h @ tr["blocks"][i])
+        return jnp.mean((h.sum(-1) - yb) ** 2), bn
+
+    return loss_fn
+
+
+_DEPTH_LOSSES = {d: _depth_loss_fn(d) for d in (1, 2, 3)}
+
+
+def _depth_world():
+    """DepthFL-shaped groups: each group trains a prefix of the block list."""
+    rng = jax.random.PRNGKey(5)
+    blocks = [
+        jax.random.normal(jax.random.fold_in(rng, i), (4, 4)) for i in range(3)
+    ]
+    gtr = {"blocks": blocks}
+    plans = []
+    for gi, (dep, kg) in enumerate([(1, 2), (2, 2), (3, 3)]):
+        xs = jax.random.normal(jax.random.fold_in(rng, 400 + gi), (kg, 10, 4))
+        ys = jax.random.normal(jax.random.fold_in(rng, 500 + gi), (kg, 10))
+        rngs = jax.random.split(jax.random.fold_in(rng, 600 + gi), kg)
+        plans.append(ENG.GroupPlan(
+            _DEPTH_LOSSES[dep], {"blocks": blocks[:dep]}, {}, {},
+            xs, ys, rngs, jnp.arange(1.0, kg + 1.0), 0.05, 2, 4,
+        ))
+    return plans, gtr, {}
+
+
+@pytest.fixture(scope="module")
+def width_world():
+    plans, gtr, gbn = _width_world()
+    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
+    return plans, gtr, gbn, want
+
+
+@pytest.fixture(scope="module")
+def depth_world():
+    plans, gtr, gbn = _depth_world()
+    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
+    return plans, gtr, gbn, want
+
+
+@pytest.mark.parametrize("mode", ENGINES)
+def test_grouped_width_groups_match_serial(width_world, mode):
+    plans, gtr, gbn, want = width_world
+    got = ENG.make_engine(mode).grouped_round(plans, gtr, gbn)
+    assert want.packed is None and got.packed is not None
+    _grouped_close(want, got)
+    np.testing.assert_allclose(
+        np.asarray(got.packed),
+        np.asarray(ENG.make_pack_spec(gtr).pack(want.trainable)),
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("mode", ENGINES)
+def test_grouped_depth_groups_match_serial(depth_world, mode):
+    plans, gtr, gbn, want = depth_world
+    got = ENG.make_engine(mode).grouped_round(plans, gtr, gbn)
+    _grouped_close(want, got)
+
+
+def test_grouped_zero_weight_group_passes_through():
+    # group 0 (the only one training w rows 0:4 columns it uniquely owns? no:
+    # every column of rows 0:4 is shared with wider groups; zero its weights
+    # and both paths must agree AND stay finite)
+    plans, gtr, gbn = _width_world(zero_weight_group=2)  # widest group
+    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
+    got = ENG.make_engine("packed").grouped_round(plans, gtr, gbn)
+    _grouped_close(want, got)
+    # rows 6:8 of w are trained ONLY by the (zero-weight) widest group ->
+    # per-column denominator 0 -> the server's previous values pass through
+    np.testing.assert_array_equal(
+        np.asarray(got.trainable["w"][6:]), np.asarray(gtr["w"][6:])
+    )
+    assert all(
+        bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(got.trainable)
+    )
+
+
+def test_grouped_single_identity_group_degenerates_to_round():
+    plans, gtr, gbn = _width_world()
+    p = plans[2]._replace(trainable=gtr)  # full-width group == global tree
+    want = CL.cohort_round(
+        p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys, p.rngs,
+        p.weights, lr=p.lr, local_steps=p.local_steps,
+        batch_size=p.batch_size,
+    )
+    serial = ENG.make_engine("vmap").grouped_round([p], gtr, gbn)
+    fused = ENG.make_engine("packed").grouped_round([p], gtr, gbn)
+    _tree_close(want[0], serial.trainable, atol=0)  # bit-identical oracle
+    _tree_close(want[0], fused.trainable)
+    np.testing.assert_allclose(float(want[2]), float(fused.loss), atol=1e-5)
+
+
+def test_grouped_round_single_aggregation_dispatch():
+    """The fused path issues exactly ONE fedavg_masked dispatch per round
+    regardless of how many structure groups the cohort contains."""
+    plans, gtr, gbn = _width_world()
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn)  # warm caches/compiles
+    OPS.reset_dispatches()
+    eng.grouped_round(plans, gtr, gbn)
+    assert OPS.DISPATCHES["fedavg_masked"] == 1
+    assert OPS.DISPATCHES["fedavg"] == 0
+    OPS.reset_dispatches()
+
+
+def test_grouped_layout_cached_and_validates():
+    plans, gtr, gbn = _width_world()
+    l1 = ENG.make_group_layout(plans, gtr, gbn)
+    l2 = ENG.make_group_layout(plans, gtr, gbn)
+    assert l1 is l2
+    assert l1.k_total == sum(p.xs.shape[0] for p in plans)
+    assert l1.mask.shape == (l1.k_total, l1.n)
+    with pytest.raises(ValueError):
+        ENG.make_engine("packed").grouped_round([], gtr, gbn)
+    with pytest.raises(ValueError):
+        ENG.make_engine("packed").grouped_round(plans, gtr, gbn, impl="magic")
+    # a group leaf that is not a leading-corner slice of its global leaf
+    bad = plans[0]._replace(trainable={"w": jnp.zeros((9, 3)), "b": gtr["b"]})
+    with pytest.raises(ValueError):
+        ENG.make_group_layout([bad], gtr, gbn)
+    # a group leaf with no counterpart path in the global tree
+    orphan = plans[0]._replace(trainable={"nope": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ENG.make_group_layout([orphan], gtr, gbn)
+
+
+def test_clear_caches_resets_spec_and_layout():
+    plans, gtr, gbn = _width_world()
+    ENG.make_group_layout(plans, gtr, gbn)
+    assert len(ENG._SPEC_CACHE) > 0 and len(ENG._LAYOUT_CACHE) > 0
+    ENG.clear_caches()
+    assert len(ENG._SPEC_CACHE) == 0 and len(ENG._LAYOUT_CACHE) == 0
+
+
+def test_bounded_cache_evicts_lru():
+    c = ENG.BoundedCache(maxsize=2)
+    c["a"], c["b"] = 1, 2
+    assert c.get("a") == 1  # touch: "b" is now LRU
+    c["c"] = 3
+    assert "b" not in c and c.get("a") == 1 and c.get("c") == 3
+
+
+# ---------------------------------------------------------------------------
 # multi-device sharding (subprocess so the host-device-count flag applies
 # before jax initializes)
 # ---------------------------------------------------------------------------
@@ -311,6 +513,37 @@ err = max(
 err = max(err, abs(float(want[2]) - float(res.loss)))
 print("MAXERR", err)
 assert err <= 1e-5, err
+
+# grouped heterogeneous round: two width groups of K_g=3 each -> neither
+# group size nor K_total=6 divides the 4-device clients axis (ghost padding
+# on every group)
+def width_loss(f):
+    def loss_fn(tr, fro, bn, xb, yb):
+        pred = xb[:, :f] @ tr["w"] + tr["b"]
+        return jnp.mean((pred - yb[:, None]) ** 2), bn
+    return loss_fn
+
+losses = {f: width_loss(f) for f in (3, 5)}
+plans = []
+for gi, f in enumerate((3, 5)):
+    sub = {"w": tr["w"][:f], "b": tr["b"]}
+    gxs = jax.random.normal(jax.random.fold_in(rng, 10 + gi), (3, n_local, d))
+    gys = jax.random.normal(jax.random.fold_in(rng, 20 + gi), (3, n_local))
+    grngs = jax.random.split(jax.random.fold_in(rng, 30 + gi), 3)
+    plans.append(ENG.GroupPlan(
+        losses[f], sub, {}, {}, gxs, gys, grngs,
+        jnp.arange(1.0, 4.0) * (gi + 1), 0.1, 3, 4,
+    ))
+want_g = ENG.make_engine("vmap").grouped_round(plans, tr, {})
+got_g = eng.grouped_round(plans, tr, {})
+gerr = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree.leaves(want_g.trainable),
+                    jax.tree.leaves(got_g.trainable))
+)
+gerr = max(gerr, abs(float(want_g.loss) - float(got_g.loss)))
+print("GROUPED_MAXERR", gerr)
+assert gerr <= 1e-5, gerr
 """
 
 
@@ -329,3 +562,4 @@ def test_sharded_multidevice_subprocess():
     )
     assert out.returncode == 0, out.stdout + out.stderr
     assert "MAXERR" in out.stdout
+    assert "GROUPED_MAXERR" in out.stdout

@@ -131,6 +131,75 @@ def test_fedavg_kernel(K, n, dtype):
 
 
 # ---------------------------------------------------------------------------
+# fedavg_masked (grouped heterogeneous cohorts)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,n", [(2, 64), (5, 4096), (7, 65_537)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_masked_kernel(K, n, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    p = jax.random.normal(k1, (K, n), jnp.float32).astype(dtype)
+    w = jnp.arange(1.0, K + 1.0) ** 2  # raw, strongly uneven, unnormalized
+    m = (jax.random.uniform(k2, (K, n)) > 0.3).astype(jnp.float32)
+    prev = jax.random.normal(k3, (n,), jnp.float32).astype(dtype)
+    want = ref.fedavg_masked(p, w, m, prev)
+    got = ops.fedavg_masked(p, w, m, prev, impl="pallas")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("K,n,bt", [(1, 97, 64), (3, 130, 64), (4, 64, 256)])
+def test_fedavg_masked_kernel_nonaligned(K, n, bt):
+    from repro.kernels import fedavg as _fedavg
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    p = jax.random.normal(k1, (K, n))
+    w = jnp.arange(1.0, K + 1.0)
+    m = (jax.random.uniform(k2, (K, n)) > 0.4).astype(jnp.float32)
+    m = m.at[:, 5].set(0.0)  # a column nobody covers
+    prev = jnp.full((n,), 7.5)
+    want = ref.fedavg_masked(p, w, m, prev)
+    got = _fedavg.fedavg_masked(p, w, m, prev, bt=bt, interpret=True)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # zero-denominator columns pass the server's previous value through
+    assert float(got[5]) == 7.5
+    # full mask + K=1 degenerates to the identity regardless of the weight
+    if K == 1:
+        np.testing.assert_allclose(
+            np.asarray(_fedavg.fedavg_masked(
+                p, jnp.full((1,), 3.0), jnp.ones((1, n)), prev,
+                bt=bt, interpret=True,
+            )),
+            np.asarray(p[0]), atol=1e-6,
+        )
+
+
+def test_fedavg_masked_full_mask_matches_fedavg():
+    """With every client covering every column, masked num/den equals the
+    plain weighted fedavg of the normalized weights."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+    p = jax.random.normal(k1, (5, 200))
+    w = jax.nn.softmax(jax.random.normal(k2, (5,)))
+    want = ref.fedavg(p, w)
+    got = ref.fedavg_masked(p, 13.0 * w, jnp.ones_like(p))  # scale cancels
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fedavg_masked_prev_none_defaults_to_zero():
+    p = jnp.ones((2, 8))
+    got = ref.fedavg_masked(p, jnp.ones((2,)), jnp.zeros((2, 8)))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(8))
+    got_k = ops.fedavg_masked(
+        p, jnp.ones((2,)), jnp.zeros((2, 8)), impl="pallas"
+    )
+    np.testing.assert_array_equal(np.asarray(got_k), np.zeros(8))
+
+
+# ---------------------------------------------------------------------------
 # packed-panel edge cases for the cohort engine: K=1 cohorts and parameter
 # counts that do NOT divide the kernel tile (exercises the pad/slice path)
 # ---------------------------------------------------------------------------
