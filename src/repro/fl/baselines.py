@@ -13,10 +13,16 @@
 HeteroFL and DepthFL run their multi-structure cohorts through
 ``CohortEngine.grouped_round``: every width/depth group becomes a
 :class:`repro.fl.engine.GroupPlan` and the whole ragged cohort aggregates in
-ONE fused masked-kernel dispatch (per-column ``Σ w·m·p / Σ w·m`` with a
+ONE fused group-compressed dispatch (``kernels.ops.fedavg_grouped``:
+per-column ``Σ w·p / Σ_g wsum·gmask`` over a ``[G, n]`` group mask, with a
 zero-denominator passthrough) instead of a serial per-group loop of rounds
-with host-side num/den tree-maps.  ``oracle=True`` forces the serial
-per-group path — the equivalence oracle asserted in tests.  BN stats now
+with host-side num/den tree-maps; group launches pipeline without host
+syncs until the aggregation barrier.  The plans themselves carry RAW
+weights — the engine derives the per-group weight sums the compressed
+denominator needs, so plan construction here stays unchanged whichever
+aggregation (grouped / legacy dense-mask / serial) executes them.
+``oracle=True`` forces the serial per-group path — the equivalence oracle
+asserted in tests.  BN stats now
 aggregate under the same per-column masked average as the weights (each
 client contributes to exactly the bn columns its sub-model touched); for
 DepthFL this replaces the old order-dependent serial bn threading, and for
@@ -156,9 +162,9 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
                  *, oracle: bool = False):
     """Static-width HeteroFL.  Every round builds one :class:`GroupPlan` per
     width level and hands the whole ragged cohort to ``grouped_round`` — one
-    fused masked aggregation dispatch regardless of how many width groups the
-    selection produced.  ``oracle=True`` routes the identical plans through
-    the serial per-group reference path instead."""
+    fused group-compressed aggregation dispatch regardless of how many width
+    groups the selection produced.  ``oracle=True`` routes the identical
+    plans through the serial per-group reference path instead."""
     levels = np.array([
         MM.width_ratio_for_budget(cfg, b, RATIOS[:-1]) or RATIOS[-1]
         for b in budgets
@@ -238,7 +244,8 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
     """Depth-scaled DepthFL.  Each depth level d becomes a :class:`GroupPlan`
     whose trainable is the {blocks[:d], heads[:d]} prefix of the global tree;
     ``grouped_round`` aggregates every depth group (plus bn) in one fused
-    masked dispatch, blocks nobody trained passing through untouched.  Every
+    group-compressed dispatch, blocks nobody trained passing through
+    untouched.  Every
     group starts from the round-start bn and bn aggregates under the same
     per-column masked average (order-independent, unlike the old serial
     threading).  ``oracle=True`` forces the serial per-group reference."""

@@ -40,12 +40,34 @@ The panel layout:
   must be a leading-corner slice of (or identical to) the global leaf, which
   covers HeteroFL channel slicing, DepthFL block prefixes, and the identity;
 * the group panels are scattered into one shared ``[K_total, n_global]``
-  panel; a precomputed ``[K_total, n_global]`` membership mask marks which
-  columns each client actually trained;
-* one ``kernels.ops.fedavg_masked`` dispatch computes the per-column ratio
-  ``Σ_k w_k·m_kj·p_kj / Σ_k w_k·m_kj`` with a zero-denominator passthrough
-  to the server's current value — HeteroFL's num/den masking and DepthFL's
-  per-block averaging as kernel math instead of Python tree-maps.
+  panel UNDER JIT (``lax.dynamic_update_slice`` into the group's contiguous
+  row block, panel buffer donated so XLA updates in place) — no host round
+  trip between group launches;
+* one ``kernels.ops.fedavg_grouped`` dispatch computes the per-column ratio
+  with the GROUP-COMPRESSED denominator.  Membership is identical for every
+  client of a structure group, so the dense ``[K_total, n]`` mask collapses
+  to a ``[G, n]`` group mask and per-group weight sums ``[G]``:
+
+      out[j] = Σ_k w_k·p_kj / Σ_g wsum_g·gmask_gj     (denominator > 0)
+      out[j] = prev[j]                                 (no group covers j)
+
+  The numerator needs no mask at all because the scattered panel is zero
+  outside each group's columns; only the denominator reads membership, and
+  it reads K_total/G fewer mask elements than the per-client formulation
+  (``fedavg_masked``, kept as the ``impl="fused_masked"`` escape hatch and
+  benchmark comparison point via :attr:`GroupLayout.legacy_mask`).
+
+Pipelining: the fused path issues every group's local-SGD dispatch and
+panel scatter back to back without host blocking (jax async dispatch
+pipelines them; the scatters are jitted with donated panel buffers) and
+calls :func:`jax.block_until_ready` exactly ONCE, at the aggregation
+barrier after the single ``fedavg_grouped`` dispatch — counted in ``SYNCS``
+and asserted by a sync-counting shim in tests/test_engine.py.  In sharded
+mode, groups map to DISJOINT contiguous slices of the ``clients`` mesh axis
+(per-group sub-meshes, sized proportionally to K_g) so different structures
+run concurrently on different devices instead of back-to-back over the full
+mesh; when there are fewer devices than groups the full mesh is reused
+per group as before.
 
 The serial per-group oracle (``impl="serial"``, default under the ``vmap``
 mode) runs each group through ``client.cohort_round`` and accumulates the
@@ -53,7 +75,8 @@ same num/den host-side; equivalence is asserted in tests/test_engine.py.
 
 Equivalence to the oracle is asserted in tests/test_engine.py.  Module-level
 caches (_SPEC_CACHE, _LAYOUT_CACHE, the loss caches in fl/server.py and
-fl/baselines.py) are bounded LRU maps; :func:`clear_caches` empties them all.
+fl/baselines.py) are bounded LRU maps; :func:`clear_caches` empties them all
+and drops every cached layout's lazily-built device buffers.
 """
 from __future__ import annotations
 
@@ -74,6 +97,20 @@ from repro.kernels import ops
 
 MODES = ("vmap", "packed", "sharded", "auto")
 
+# Host-sync accounting for the pipelined fused path: every block_until_ready
+# the engine issues goes through _barrier and increments this counter.  The
+# fused grouped round must show exactly one ("aggregation_barrier") per call.
+SYNCS: collections.Counter = collections.Counter()
+
+
+def reset_syncs() -> None:
+    SYNCS.clear()
+
+
+def _barrier(x):
+    SYNCS["aggregation_barrier"] += 1
+    return jax.block_until_ready(x)
+
 
 class BoundedCache(collections.OrderedDict):
     """Tiny LRU map for module-level spec/layout/loss caches: long sweeps
@@ -84,11 +121,16 @@ class BoundedCache(collections.OrderedDict):
     the evicted closure stays referenced by jax's jit cache until
     :func:`clear_caches` (which also calls ``jax.clear_caches``) runs.  Size
     the maxsize above the working set; the bound is a leak backstop, not a
-    hot-path eviction policy."""
+    hot-path eviction policy.
 
-    def __init__(self, maxsize: int = 256):
+    ``on_evict`` runs on each value as LRU eviction unlinks it — the layout
+    cache uses it to drop device buffers on layouts a caller may still
+    reference (the lazy properties rebuild on next use, so this is safe)."""
+
+    def __init__(self, maxsize: int = 256, on_evict=None):
         super().__init__()
         self.maxsize = maxsize
+        self.on_evict = on_evict
 
     def __getitem__(self, key):
         val = super().__getitem__(key)
@@ -107,7 +149,10 @@ class BoundedCache(collections.OrderedDict):
         while len(self) > self.maxsize:
             # NOT popitem(): OrderedDict.popitem re-enters __getitem__ after
             # unlinking the key, which would trip move_to_end
-            del self[next(iter(self))]
+            lru = next(iter(self))
+            if self.on_evict is not None:
+                self.on_evict(super().__getitem__(lru))
+            del self[lru]
 
 
 def clear_caches() -> None:
@@ -115,10 +160,17 @@ def clear_caches() -> None:
     layouts, and the server/baseline loss caches), plus jax's jit caches —
     compiled rounds are keyed on loss-closure identity, so dropping the loss
     caches without the jit caches would leave the executables (and the
-    evicted closures they reference) alive.  Wired into tests/conftest.py;
-    also useful between long parameter sweeps."""
+    evicted closures they reference) alive.  Cached :class:`GroupLayout`
+    objects get their lazily-built device buffers (group mask, legacy mask)
+    dropped explicitly: callers may still hold a layout reference after the
+    cache entry is gone, and without the drop that reference keeps
+    ``O(G·n)``/``O(K·n)`` of device memory alive for the session.  Wired
+    into tests/conftest.py; also useful between long parameter sweeps."""
+    for layout in _LAYOUT_CACHE.values():
+        layout.drop_device_buffers()
     _SPEC_CACHE.clear()
     _LAYOUT_CACHE.clear()
+    _SUBMESH_CACHE.clear()
     _slice_index.cache_clear()
     from repro.fl import baselines as _bl
     from repro.fl import server as _srv
@@ -394,25 +446,101 @@ class GroupLayout:
     idx: Tuple[np.ndarray, ...]  # per-group global column indices
     group_specs: Tuple[Tuple[PackSpec, PackSpec], ...]
     identity: bool  # single group covering every column in order
-    _mask: Optional[jax.Array] = None  # built lazily, [k_total, n] f32
+    _gmask: Optional[jax.Array] = None  # built lazily, [G, n] f32
+    _legacy_mask: Optional[jax.Array] = None  # built lazily, [k_total, n] f32
+    _idx_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy device indices
 
     @property
-    def mask(self) -> jax.Array:
-        """[k_total, n] membership — materialized on first use so the
-        serial/identity paths (which never read it) don't pay K_total × n
-        floats of device memory per cached layout."""
-        if self._mask is None:
+    def n_groups(self) -> int:
+        return len(self.ks)
+
+    @property
+    def idx_dev(self) -> Tuple[jax.Array, ...]:
+        """Per-group global column indices on device — staged once per
+        layout so the per-round jitted scatters don't re-upload O(n_g)
+        index vectors every round."""
+        if self._idx_dev is None:
+            self._idx_dev = tuple(jnp.asarray(ix) for ix in self.idx)
+        return self._idx_dev
+
+    @property
+    def gmask(self) -> jax.Array:
+        """[G, n] per-GROUP membership (one row per structure group) —
+        materialized on first use so the serial/identity paths (which never
+        read it) pay nothing.  This is the only membership array the fused
+        path stages: K_total/G smaller than the per-client mask."""
+        if self._gmask is None:
             if self.identity:
-                self._mask = jnp.ones((self.k_total, self.n), jnp.float32)
+                self._gmask = jnp.ones((1, self.n), jnp.float32)
+            else:
+                m = np.zeros((self.n_groups, self.n), np.float32)
+                for gi, ix in enumerate(self.idx):
+                    m[gi, ix] = 1.0
+                self._gmask = jnp.asarray(m)
+        return self._gmask
+
+    @property
+    def legacy_mask(self) -> jax.Array:
+        """[k_total, n] per-CLIENT membership — escape hatch for the
+        ``fedavg_masked`` oracle/benchmark path only; the fused round never
+        materializes it (the group rows just repeat within each group)."""
+        if self._legacy_mask is None:
+            if self.identity:
+                self._legacy_mask = jnp.ones((self.k_total, self.n),
+                                             jnp.float32)
             else:
                 m = np.zeros((self.k_total, self.n), np.float32)
                 for r, k, ix in zip(self.rows, self.ks, self.idx):
                     m[r : r + k, ix] = 1.0
-                self._mask = jnp.asarray(m)
-        return self._mask
+                self._legacy_mask = jnp.asarray(m)
+        return self._legacy_mask
+
+    def drop_device_buffers(self) -> None:
+        """Release the lazily-built device buffers (group mask, legacy
+        per-client mask, scatter indices).  Called by :func:`clear_caches`
+        on every cached layout so a layout reference that outlives its cache
+        entry cannot pin mask/index buffers for the rest of the session."""
+        self._gmask = None
+        self._legacy_mask = None
+        self._idx_dev = None
 
 
-_LAYOUT_CACHE: BoundedCache = BoundedCache(maxsize=32)
+_LAYOUT_CACHE: BoundedCache = BoundedCache(
+    maxsize=32, on_evict=lambda l: l.drop_device_buffers()
+)
+
+# per-(mesh devices, group sizes) disjoint sub-mesh splits for the sharded
+# fused path; cleared together with the layouts in clear_caches()
+_SUBMESH_CACHE: BoundedCache = BoundedCache(maxsize=32)
+
+
+def _group_submeshes(mesh: Mesh, ks: Tuple[int, ...]):
+    """Disjoint contiguous slices of the ``clients`` mesh axis, one sub-mesh
+    per group, sized ~proportionally to the group's client count (largest-
+    remainder apportionment, ≥1 device each) so different structure groups'
+    local SGD runs CONCURRENTLY on different devices instead of back-to-back
+    time-sharing the full mesh.  Returns None when the mesh has fewer
+    devices than groups (callers fall back to the full mesh per group)."""
+    devs = mesh.devices.reshape(-1)
+    nd, g = len(devs), len(ks)
+    if g < 2 or nd < g:
+        return None
+    key = (tuple(d.id for d in devs), ks)
+    sub = _SUBMESH_CACHE.get(key)
+    if sub is None:
+        total = max(sum(ks), 1)
+        alloc = [1] * g
+        quota = [k * nd / total for k in ks]
+        for _ in range(nd - g):
+            gi = max(range(g), key=lambda i: quota[i] - alloc[i])
+            alloc[gi] += 1
+        bounds = np.cumsum([0] + alloc)
+        sub = tuple(
+            Mesh(devs[bounds[i] : bounds[i + 1]], ("clients",))
+            for i in range(g)
+        )
+        _SUBMESH_CACHE[key] = sub
+    return sub
 
 
 def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
@@ -490,10 +618,29 @@ def _grouped_unpack(layout: GroupLayout, flat, losses_w, w_total):
     return new_tr, new_bn, loss
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_group_panel(panel, gpanel, ix, row):
+    """Scatter one group's [K_g, n_g] panel into its contiguous row block of
+    the shared [K_total, n] panel, entirely under jit: the group columns
+    gather-scatter into a zeroed row block, ``dynamic_update_slice`` lands
+    the rows.  The shared panel buffer is DONATED so XLA can update it in
+    place instead of copying K_total·n floats per group, and nothing here
+    touches the host — the per-group scatters pipeline behind the local-SGD
+    dispatches."""
+    block = jnp.zeros((gpanel.shape[0], panel.shape[1]), panel.dtype)
+    block = block.at[:, ix].set(gpanel)
+    return jax.lax.dynamic_update_slice(panel, block, (row, 0))
+
+
 def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
-                   mesh: Optional[Mesh]):
-    """Fused path: per-group local SGD, one shared panel, ONE fedavg_masked
-    dispatch for the whole heterogeneous cohort."""
+                   mesh: Optional[Mesh], *, agg: str = "grouped"):
+    """Pipelined fused path: EVERY group's local-SGD dispatch launches
+    without host blocking (jax async dispatch), each finished [K_g, n_g]
+    panel streams into the shared panel via jitted donated-buffer scatters,
+    and ONE group-compressed aggregation dispatch (``fedavg_grouped``)
+    closes the round — the only ``block_until_ready`` sits at that
+    aggregation barrier.  ``agg="masked"`` keeps the legacy dense-mask
+    ``fedavg_masked`` aggregation as an escape hatch / benchmark baseline."""
     if layout.identity:
         # degenerate single-group round (every ProFL round): the mask is all
         # ones, so skip the scatter/mask machinery and run the one-jit packed
@@ -509,34 +656,49 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
             p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys,
             p.rngs, p.weights, **kw,
         ))
-    panels, losses = [], []
-    for plan in plans:
+    submeshes = _group_submeshes(mesh, layout.ks) if mesh is not None else None
+    dev0 = mesh.devices.reshape(-1)[0] if submeshes is not None else None
+    panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
+    group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
+    losses = []
+    for gi, plan in enumerate(plans):
         kw = dict(lr=plan.lr, local_steps=plan.local_steps,
                   batch_size=plan.batch_size)
         if mesh is not None:
-            panel, loss = _group_local_pack_sharded(
+            # disjoint clients-axis slice per group when the mesh is large
+            # enough: different structures train CONCURRENTLY on different
+            # devices instead of back-to-back over the full mesh
+            gmesh = submeshes[gi] if submeshes is not None else mesh
+            gpanel, loss = _group_local_pack_sharded(
                 plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
-                plan.xs, plan.ys, plan.rngs, mesh=mesh, **kw,
+                plan.xs, plan.ys, plan.rngs, mesh=gmesh, **kw,
             )
+            if submeshes is not None:
+                # stream the finished group panel off its sub-mesh onto the
+                # aggregation device — device_put is async dispatch, so this
+                # transfer pipelines behind the other groups' local SGD
+                gpanel = jax.device_put(gpanel, dev0)
+                loss = jax.device_put(loss, dev0)
         else:
-            panel, loss = _group_local_pack(
+            gpanel, loss = _group_local_pack(
                 plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
                 plan.xs, plan.ys, plan.rngs, **kw,
             )
-        panels.append(panel)
+        panel = _scatter_group_panel(
+            panel, gpanel, layout.idx_dev[gi], layout.rows[gi]
+        )
         losses.append(loss)
-    panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
-    for row, ix, p in zip(layout.rows, layout.idx, panels):
-        panel = panel.at[row : row + p.shape[0], ix].set(p)
-    w = jnp.concatenate(
-        [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
-    )
+    w = jnp.concatenate(group_w)
+    wsum = jnp.stack([jnp.sum(gw) for gw in group_w])
     prev = _grouped_prev(layout, global_trainable, global_bn)
-    flat = ops.fedavg_masked(panel, w, layout.mask, prev)
+    if agg == "grouped":
+        flat = ops.fedavg_grouped(panel, w, layout.gmask, wsum, prev)
+    else:
+        flat = ops.fedavg_masked(panel, w, layout.legacy_mask, prev)
     losses_w = sum(
-        jnp.sum(jnp.asarray(p.weights, jnp.float32) * l)
-        for p, l in zip(plans, losses)
+        jnp.sum(gw * l) for gw, l in zip(group_w, losses)
     )
+    flat = _barrier(flat)  # the round's ONE host sync
     new_tr, new_bn, loss = _grouped_unpack(layout, flat, losses_w, jnp.sum(w))
     return GroupedResult(new_tr, new_bn, loss, layout.gspec_tr.pack(new_tr))
 
@@ -646,22 +808,28 @@ class CohortEngine:
     ) -> GroupedResult:
         """One heterogeneous round over ``plans`` (see module docstring).
 
-        ``impl`` is ``"serial"`` (per-group oracle) or ``"fused"`` (one
-        masked-kernel dispatch); ``None`` picks serial under the ``vmap``
-        mode and fused otherwise (sharded local SGD when the engine mode is
-        ``sharded``, with per-group ghost-client padding on the ``clients``
-        mesh axis)."""
+        ``impl`` is ``"serial"`` (per-group oracle), ``"fused"`` (pipelined
+        group launches + ONE group-compressed ``fedavg_grouped`` dispatch),
+        or ``"fused_masked"`` (same pipeline but the legacy dense-mask
+        ``fedavg_masked`` aggregation — the benchmark comparison point);
+        ``None`` picks serial under the ``vmap`` mode and fused otherwise
+        (sharded local SGD when the engine mode is ``sharded``, with groups
+        mapped to disjoint ``clients``-axis sub-meshes when the mesh is
+        large enough, per-group ghost-client padding either way)."""
         if not plans:
             raise ValueError("grouped_round needs at least one GroupPlan")
         if impl is None:
             impl = "serial" if self.mode == "vmap" else "fused"
-        if impl not in ("serial", "fused"):
+        if impl not in ("serial", "fused", "fused_masked"):
             raise ValueError(f"unknown grouped impl {impl!r}")
         layout = make_group_layout(plans, global_trainable, global_bn)
         if impl == "serial":
             return _grouped_serial(plans, global_trainable, global_bn, layout)
         mesh = self.mesh if self.mode == "sharded" else None
-        return _grouped_fused(plans, global_trainable, global_bn, layout, mesh)
+        agg = "masked" if impl == "fused_masked" else "grouped"
+        return _grouped_fused(
+            plans, global_trainable, global_bn, layout, mesh, agg=agg
+        )
 
 
 def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None) -> CohortEngine:

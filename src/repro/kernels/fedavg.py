@@ -14,6 +14,16 @@ zero-denominator passthrough to ``prev`` (the server's current value).  One
 fused pass aggregates a whole multi-structure cohort (HeteroFL widths,
 DepthFL depths, ProFL phases) regardless of how many groups it contains.
 
+``fedavg_grouped`` is the group-compressed formulation of the same math:
+mask rows are identical within a structure group, so instead of staging a
+dense ``[K, n]`` membership mask the kernel takes a compact ``[G, n]`` group
+mask plus per-group weight sums ``[G]``.  The panel is zero outside each
+group's columns (the cohort engine's scatter guarantees it), so the
+numerator needs no mask at all — ``Σ_k w_k·p_kj`` — and the denominator
+collapses to the tiny contraction ``Σ_g wsum_g·gmask_gj``.  Mask traffic
+drops from ``K·n`` to ``G·n + G`` elements (a factor of K/G) while the
+output stays bit-comparable to ``fedavg_masked`` up to f32 reduction order.
+
 ``interpret`` defaults to platform-aware: compiled on TPU, interpret mode
 everywhere else.  Pass an explicit bool to override.
 
@@ -117,4 +127,63 @@ def fedavg_masked(
         out_shape=jax.ShapeDtypeStruct((n + pad,), params.dtype),
         interpret=interpret,
     )(params, weights, mask, prev)
+    return out[:n]
+
+
+def _fedavg_grouped_kernel(p_ref, w_ref, gm_ref, ws_ref, prev_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)  # [K, bt]
+    w = w_ref[...].astype(jnp.float32)  # [K]
+    gm = gm_ref[...].astype(jnp.float32)  # [G, bt]
+    ws = ws_ref[...].astype(jnp.float32)  # [G]
+    prev = prev_ref[...].astype(jnp.float32)  # [bt]
+    num = jnp.einsum("k,kn->n", w, p)  # panel zero outside groups: no mask
+    den = jnp.einsum("g,gn->n", ws, gm)
+    out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def fedavg_grouped(
+    params: jax.Array,  # [K, n] stacked client vectors (zero outside groups)
+    weights: jax.Array,  # [K] raw (NOT normalized) weights
+    gmask: jax.Array,  # [G, n] per-GROUP column membership
+    wsum: jax.Array,  # [G] per-group weight sums (Σ of that group's weights)
+    prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
+    *,
+    bt: int = 65536,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Group-compressed ``fedavg_masked``: per grid step stage the [K, bt]
+    panel plus only a [G, bt] group-mask block and emit
+    ``Σ_k w_k·p_kj / Σ_g wsum_g·gmask_gj``, falling back to ``prev`` where no
+    group covers a column.  Requires the panel to be zero outside each
+    group's columns — exactly what the cohort engine's scatter produces."""
+    if interpret is None:
+        interpret = default_interpret()
+    K, n = params.shape
+    G = gmask.shape[0]
+    if prev is None:
+        prev = jnp.zeros((n,), params.dtype)
+    bt = min(bt, n)
+    pad = (-n) % bt
+    if pad:
+        # padded gmask columns are zero -> den 0 -> prev padding (also zero)
+        params = jnp.pad(params, ((0, 0), (0, pad)))
+        gmask = jnp.pad(gmask, ((0, 0), (0, pad)))
+        prev = jnp.pad(prev, (0, pad))
+    nt = (n + pad) // bt
+    out = pl.pallas_call(
+        _fedavg_grouped_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((K, bt), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((G, bt), lambda i: (0, i)),
+            pl.BlockSpec((G,), lambda i: (0,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), params.dtype),
+        interpret=interpret,
+    )(params, weights, gmask, wsum, prev)
     return out[:n]

@@ -17,7 +17,11 @@ platform-aware (compiled on TPU, interpret mode elsewhere).
 ``DISPATCHES`` counts aggregation dispatches issued through this module
 (python-level calls; for callers under ``jax.jit`` that means trace-time
 calls).  The grouped cohort engine asserts "one aggregation dispatch per
-round regardless of group count" against it.
+round regardless of group count" against it.  ``STAGED`` counts membership
+metadata elements staged per aggregation kernel (the dense ``[K, n]`` mask
+for ``fedavg_masked``; the compact ``[G, n]`` group mask + ``[G]`` weight
+sums for ``fedavg_grouped``) — the benchmark smoke gate asserts the grouped
+path stays within ``G·n + K`` elements against it.
 """
 from __future__ import annotations
 
@@ -37,9 +41,15 @@ Impl = Literal["auto", "pallas", "chunked", "naive"]
 
 DISPATCHES: collections.Counter = collections.Counter()
 
+# membership metadata elements staged per aggregation kernel, keyed like
+# DISPATCHES (mask elements for fedavg_masked; gmask + wsum elements for
+# fedavg_grouped — client weights [K] are common to both and not counted)
+STAGED: collections.Counter = collections.Counter()
+
 
 def reset_dispatches() -> None:
     DISPATCHES.clear()
+    STAGED.clear()
 
 
 def _on_tpu() -> bool:
@@ -201,8 +211,32 @@ def fedavg_masked(
     zero-denominator passthrough to ``prev``.  One dispatch aggregates a
     whole heterogeneous cohort (HeteroFL/DepthFL/ProFL groups)."""
     DISPATCHES["fedavg_masked"] += 1
+    STAGED["fedavg_masked"] += int(mask.size)
     if impl == "auto":
         impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
     if impl == "pallas":
         return _fedavg.fedavg_masked(params, weights, mask, prev)
     return _ref.fedavg_masked(params, weights, mask, prev)
+
+
+def fedavg_grouped(
+    params,  # [K, n] panel, zero outside each group's columns
+    weights,  # [K] raw weights (normalization cancels in num/den)
+    gmask,  # [G, n] per-GROUP column membership
+    wsum,  # [G] per-group weight sums
+    prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
+    *,
+    impl: Impl = "auto",
+):
+    """Group-compressed masked average: ``Σ_k w·p / Σ_g wsum·gmask`` with a
+    zero-denominator passthrough to ``prev``.  Same math as ``fedavg_masked``
+    when mask rows repeat within structure groups (they always do for the
+    cohort engine), but stages ``G·n + G`` membership elements instead of
+    ``K·n`` — a K/G cut in mask HBM traffic per dispatch."""
+    DISPATCHES["fedavg_grouped"] += 1
+    STAGED["fedavg_grouped"] += int(gmask.size) + int(wsum.size)
+    if impl == "auto":
+        impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
+    if impl == "pallas":
+        return _fedavg.fedavg_grouped(params, weights, gmask, wsum, prev)
+    return _ref.fedavg_grouped(params, weights, gmask, wsum, prev)

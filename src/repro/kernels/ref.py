@@ -103,3 +103,31 @@ def fedavg_masked(
     base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
     out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
     return out.astype(params.dtype)
+
+
+def fedavg_grouped(
+    params: jax.Array,  # [K, n] stacked client vectors, zero outside groups
+    weights: jax.Array,  # [K] raw (NOT normalized) aggregation weights
+    gmask: jax.Array,  # [G, n] per-GROUP column membership
+    wsum: jax.Array,  # [G] per-group weight sums
+    prev: jax.Array | None = None,  # [n] passthrough where nobody covers a col
+) -> jax.Array:
+    """Group-compressed ``fedavg_masked``: membership is identical within a
+    structure group, so the per-client ``[K, n]`` mask collapses to a
+    ``[G, n]`` group mask and the per-column denominator to
+    ``Σ_g wsum_g·gmask_gj``.  The numerator needs NO mask because the panel
+    is zero outside each group's columns (the engine's scatter invariant):
+
+        out[j] = Σ_k w_k·p_kj / Σ_g wsum_g·gmask_gj    if the denom > 0
+        out[j] = prev[j] (or 0 if prev is None)        otherwise
+
+    Accumulated in f32; equals ``fedavg_masked`` with the expanded per-client
+    mask up to f32 reduction order."""
+    w = weights.astype(jnp.float32)
+    num = jnp.einsum("k,kn->n", w, params.astype(jnp.float32))
+    den = jnp.einsum(
+        "g,gn->n", wsum.astype(jnp.float32), gmask.astype(jnp.float32)
+    )
+    base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
+    out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
+    return out.astype(params.dtype)

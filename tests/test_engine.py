@@ -396,6 +396,36 @@ def test_grouped_depth_groups_match_serial(depth_world, mode):
     _grouped_close(want, got)
 
 
+@pytest.mark.parametrize("mode", ENGINES)
+def test_grouped_transformer_groups_match_serial(tf_world, mode):
+    """Grouped cohort over a REAL transformer trainable tree (many leaves,
+    mixed shapes): one full-structure group plus one group training a
+    leading-corner width slice of every leaf.  Exercises the path-matched
+    scatter + group-compressed aggregation on transformer layouts."""
+    loss_fn, trainable, frozen, toks, ys, rngs, weights, kw, _ = tf_world
+
+    def half_leaf(l):
+        return l[: max(1, l.shape[0] // 2)] if l.ndim > 0 else l
+
+    sub = jax.tree.map(half_leaf, trainable)
+
+    def sub_loss(tr, fro, bn, xb, yb):
+        reg = sum(
+            jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tr)
+        )
+        return reg / 100.0, bn
+
+    plans = [
+        ENG.GroupPlan(loss_fn, trainable, frozen, {}, toks[:2], ys[:2],
+                      rngs[:2], weights[:2], 0.05, 2, 2),
+        ENG.GroupPlan(sub_loss, sub, frozen, {}, toks[2:], ys[2:],
+                      rngs[2:], weights[2:], 0.05, 2, 2),
+    ]
+    want = ENG.make_engine("vmap").grouped_round(plans, trainable, {})
+    got = ENG.make_engine(mode).grouped_round(plans, trainable, {})
+    _grouped_close(want, got)
+
+
 def test_grouped_zero_weight_group_passes_through():
     # group 0 (the only one training w rows 0:4 columns it uniquely owns? no:
     # every column of rows 0:4 is shared with wider groups; zero its weights
@@ -430,16 +460,57 @@ def test_grouped_single_identity_group_degenerates_to_round():
 
 
 def test_grouped_round_single_aggregation_dispatch():
-    """The fused path issues exactly ONE fedavg_masked dispatch per round
-    regardless of how many structure groups the cohort contains."""
+    """The fused path issues exactly ONE group-compressed fedavg_grouped
+    dispatch per round regardless of how many structure groups the cohort
+    contains — and never touches the dense-mask or plain kernels."""
     plans, gtr, gbn = _width_world()
     eng = ENG.make_engine("packed")
     eng.grouped_round(plans, gtr, gbn)  # warm caches/compiles
     OPS.reset_dispatches()
     eng.grouped_round(plans, gtr, gbn)
-    assert OPS.DISPATCHES["fedavg_masked"] == 1
+    assert OPS.DISPATCHES["fedavg_grouped"] == 1
+    assert OPS.DISPATCHES["fedavg_masked"] == 0
     assert OPS.DISPATCHES["fedavg"] == 0
+    # the legacy escape hatch still routes through the dense-mask kernel
+    eng.grouped_round(plans, gtr, gbn, impl="fused_masked")
+    assert OPS.DISPATCHES["fedavg_masked"] == 1
     OPS.reset_dispatches()
+
+
+def test_grouped_fused_masked_escape_hatch_matches():
+    """impl="fused_masked" (legacy dense-mask aggregation) stays equivalent
+    to the group-compressed default and the serial oracle."""
+    plans, gtr, gbn = _width_world()
+    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
+    got = ENG.make_engine("packed").grouped_round(
+        plans, gtr, gbn, impl="fused_masked"
+    )
+    _grouped_close(want, got)
+
+
+def test_grouped_fused_single_host_sync():
+    """The pipelined fused path performs ZERO host syncs between group
+    launches: exactly one jax.block_until_ready for the whole round, at the
+    aggregation barrier (counted by a shim patched over jax)."""
+    plans, gtr, gbn = _width_world()
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn)  # warm compiles outside the window
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        ENG.reset_syncs()
+        eng.grouped_round(plans, gtr, gbn)
+    finally:
+        jax.block_until_ready = real
+    assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+    assert ENG.SYNCS["aggregation_barrier"] == 1
+    ENG.reset_syncs()
 
 
 def test_grouped_layout_cached_and_validates():
@@ -448,7 +519,14 @@ def test_grouped_layout_cached_and_validates():
     l2 = ENG.make_group_layout(plans, gtr, gbn)
     assert l1 is l2
     assert l1.k_total == sum(p.xs.shape[0] for p in plans)
-    assert l1.mask.shape == (l1.k_total, l1.n)
+    assert l1.n_groups == len(plans)
+    # compact [G, n] group mask is what the fused path stages; the dense
+    # [K_total, n] per-client mask survives only as the oracle escape hatch
+    assert l1.gmask.shape == (l1.n_groups, l1.n)
+    assert l1.legacy_mask.shape == (l1.k_total, l1.n)
+    # the group mask rows expand to exactly the legacy per-client rows
+    expanded = np.repeat(np.asarray(l1.gmask), l1.ks, axis=0)
+    np.testing.assert_array_equal(expanded, np.asarray(l1.legacy_mask))
     with pytest.raises(ValueError):
         ENG.make_engine("packed").grouped_round([], gtr, gbn)
     with pytest.raises(ValueError):
@@ -471,12 +549,58 @@ def test_clear_caches_resets_spec_and_layout():
     assert len(ENG._SPEC_CACHE) == 0 and len(ENG._LAYOUT_CACHE) == 0
 
 
+def test_clear_caches_drops_layout_device_buffers():
+    """A layout reference held by a caller must not keep the lazily-built
+    device mask/index buffers alive after clear_caches(): the buffers are
+    dropped on the layout object itself, not just evicted with the cache
+    entry."""
+    import gc
+    import weakref
+
+    plans, gtr, gbn = _width_world()
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    refs = [
+        weakref.ref(layout.gmask),
+        weakref.ref(layout.legacy_mask),
+        weakref.ref(layout.idx_dev[0]),
+    ]
+    assert layout._gmask is not None and layout._idx_dev is not None
+    ENG.clear_caches()  # layout still referenced locally — buffers must go
+    assert layout._gmask is None
+    assert layout._legacy_mask is None
+    assert layout._idx_dev is None
+    gc.collect()
+    assert all(r() is None for r in refs), (
+        "device mask/index buffers still live after clear_caches"
+    )
+
+
 def test_bounded_cache_evicts_lru():
     c = ENG.BoundedCache(maxsize=2)
     c["a"], c["b"] = 1, 2
     assert c.get("a") == 1  # touch: "b" is now LRU
     c["c"] = 3
     assert "b" not in c and c.get("a") == 1 and c.get("c") == 3
+
+
+def test_layout_cache_eviction_drops_device_buffers():
+    """LRU eviction (not just clear_caches) must release an evicted
+    layout's device buffers — a caller-held reference to the evicted layout
+    would otherwise pin them for the session."""
+    evicted = []
+    c = ENG.BoundedCache(maxsize=1, on_evict=evicted.append)
+    c["a"], c["b"] = 1, 2
+    assert evicted == [1]
+    # the real layout cache wires eviction to drop_device_buffers
+    plans, gtr, gbn = _width_world()
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    _ = layout.gmask
+    key = next(k for k, v in ENG._LAYOUT_CACHE.items() if v is layout)
+    ENG._LAYOUT_CACHE.on_evict(layout)
+    assert layout._gmask is None
+    # lazy rebuild keeps an evicted-but-referenced layout usable
+    assert layout.gmask.shape == (layout.n_groups, layout.n)
+    del ENG._LAYOUT_CACHE[key]
 
 
 # ---------------------------------------------------------------------------
@@ -535,7 +659,18 @@ for gi, f in enumerate((3, 5)):
         jnp.arange(1.0, 4.0) * (gi + 1), 0.1, 3, 4,
     ))
 want_g = ENG.make_engine("vmap").grouped_round(plans, tr, {})
+from repro.kernels import ops as OPS
+OPS.reset_dispatches()
 got_g = eng.grouped_round(plans, tr, {})
+# group-compressed aggregation: one fedavg_grouped dispatch, no dense mask
+assert OPS.DISPATCHES["fedavg_grouped"] == 1, dict(OPS.DISPATCHES)
+assert OPS.DISPATCHES["fedavg_masked"] == 0, dict(OPS.DISPATCHES)
+# the two groups ran on DISJOINT clients-axis sub-meshes (2 devices each;
+# K_g=3 divides neither -> ghost padding inside each sub-mesh)
+subs = ENG._group_submeshes(eng.mesh, (3, 3))
+assert subs is not None and len(subs) == 2
+ids = [tuple(d.id for d in m.devices.reshape(-1)) for m in subs]
+assert ids[0] == (0, 1) and ids[1] == (2, 3), ids
 gerr = max(
     float(jnp.max(jnp.abs(a - b)))
     for a, b in zip(jax.tree.leaves(want_g.trainable),

@@ -200,6 +200,121 @@ def test_fedavg_masked_prev_none_defaults_to_zero():
 
 
 # ---------------------------------------------------------------------------
+# fedavg_grouped (group-compressed masked aggregation)
+# ---------------------------------------------------------------------------
+
+
+def _grouped_world(key, K, n, G, dtype=jnp.float32):
+    """Random grouped cohort honoring the kernel contract: clients split
+    into G groups, each group owns a random column set, and the panel is
+    zero outside its group's columns.  Returns the compact inputs plus the
+    expanded per-client mask for the fedavg_masked cross-check."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    gid = np.sort(np.arange(K) % G)  # group of each client row
+    gmask = (jax.random.uniform(k2, (G, n)) > 0.3).astype(jnp.float32)
+    mask = gmask[gid]  # [K, n] rows repeat within each group
+    p = jax.random.normal(k1, (K, n), jnp.float32) * mask
+    p = p.astype(dtype)
+    w = jnp.arange(1.0, K + 1.0) ** 2  # raw, strongly uneven, unnormalized
+    wsum = jnp.asarray(np.bincount(gid, np.asarray(w), minlength=G))
+    prev = jax.random.normal(k3, (n,), jnp.float32).astype(dtype)
+    return p, w, gmask, wsum, mask, prev
+
+
+@pytest.mark.parametrize("K,n,G", [(4, 64, 2), (9, 4096, 3), (7, 65_537, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_grouped_kernel(K, n, G, dtype):
+    p, w, gmask, wsum, mask, prev = _grouped_world(
+        jax.random.PRNGKey(7), K, n, G, dtype
+    )
+    want = ref.fedavg_grouped(p, w, gmask, wsum, prev)
+    got = ops.fedavg_grouped(p, w, gmask, wsum, prev, impl="pallas")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
+    )
+    # the compact formulation == the dense per-client mask formulation
+    dense = ref.fedavg_masked(p, w, mask, prev)
+    np.testing.assert_allclose(
+        got.astype(np.float32), dense.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("K,n,G,bt", [(1, 97, 1, 64), (5, 130, 2, 64),
+                                      (6, 64, 3, 256)])
+def test_fedavg_grouped_kernel_nonaligned(K, n, G, bt):
+    from repro.kernels import fedavg as _fedavg
+
+    p, w, gmask, wsum, mask, prev = _grouped_world(
+        jax.random.PRNGKey(8), K, n, G
+    )
+    gmask = gmask.at[:, 5].set(0.0)  # a column no group covers
+    mask = mask.at[:, 5].set(0.0)
+    p = p * mask
+    prev = prev.at[5].set(7.5)
+    want = ref.fedavg_masked(p, w, mask, prev)
+    got = _fedavg.fedavg_grouped(p, w, gmask, wsum, prev, bt=bt,
+                                 interpret=True)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # zero-denominator columns pass the server's previous value through
+    assert float(got[5]) == 7.5
+
+
+def test_fedavg_grouped_g1_identity():
+    """G=1 with a full group mask and K=1 degenerates to the identity
+    regardless of the (nonzero) weight scale."""
+    from repro.kernels import fedavg as _fedavg
+
+    p = jax.random.normal(jax.random.PRNGKey(9), (1, 97))
+    got = _fedavg.fedavg_grouped(
+        p, jnp.full((1,), 3.0), jnp.ones((1, 97)), jnp.full((1,), 3.0),
+        jnp.zeros((97,)), bt=64, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(p[0]), atol=1e-6)
+    # G=1 full coverage == plain normalized fedavg for K>1 too
+    K = 4
+    p = jax.random.normal(jax.random.PRNGKey(10), (K, 130))
+    w = jnp.arange(1.0, K + 1.0)
+    want = ref.fedavg(p, w / jnp.sum(w))
+    got = ops.fedavg_grouped(
+        p, w, jnp.ones((1, 130)), jnp.sum(w)[None], impl="pallas"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fedavg_grouped_zero_weight_group():
+    """A group whose weight sum is zero contributes nothing; columns only it
+    covers fall back to prev via the zero-denominator passthrough."""
+    n = 40
+    rng = jax.random.PRNGKey(11)
+    gmask = jnp.zeros((2, n)).at[0, :30].set(1.0).at[1, 20:].set(1.0)
+    # group 1 (clients 2..3) has zero weights -> columns 30: are only its own
+    w = jnp.asarray([1.0, 2.0, 0.0, 0.0])
+    mask = gmask[jnp.asarray([0, 0, 1, 1])]
+    p = jax.random.normal(rng, (4, n)) * mask
+    wsum = jnp.asarray([3.0, 0.0])
+    prev = jnp.full((n,), -2.5)
+    want = ref.fedavg_masked(p, w, mask, prev)
+    got = ops.fedavg_grouped(p, w, gmask, wsum, prev, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[30:]), np.full((10,), -2.5))
+
+
+def test_fedavg_grouped_prev_none_defaults_to_zero():
+    p = jnp.zeros((2, 8))
+    got = ref.fedavg_grouped(
+        p, jnp.ones((2,)), jnp.zeros((1, 8)), jnp.asarray([2.0])
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(8))
+    got_k = ops.fedavg_grouped(
+        p, jnp.ones((2,)), jnp.zeros((1, 8)), jnp.asarray([2.0]),
+        impl="pallas",
+    )
+    np.testing.assert_array_equal(np.asarray(got_k), np.zeros(8))
+
+
+# ---------------------------------------------------------------------------
 # packed-panel edge cases for the cohort engine: K=1 cohorts and parameter
 # counts that do NOT divide the kernel tile (exercises the pad/slice path)
 # ---------------------------------------------------------------------------
