@@ -9,14 +9,33 @@ before merge without the full benchmark suite):
 
 ``--json PATH`` additionally persists the benchmark trajectory (the
 masked-vs-grouped kernel comparison, membership bytes staged, per-round
-wall clock over the G x K/G grouped-round matrix, and dispatch counts) so
-subsequent PRs regress against recorded numbers instead of vibes — CI
-uploads the file as a workflow artifact and the repo commits a seed copy
-(BENCH_kernels.json).  The smoke gate asserts three contracts on the fused
-grouped round: exactly ONE ``fedavg_grouped`` dispatch per round, membership
-staging within ``G·n + K`` elements (vs the dense ``K·n`` mask), and
-grouped-vs-masked round wall clock at G=4, K=16 within an interpret-mode
-tolerance.
+wall clock over the G x K/G grouped-round matrix, the replicated-vs-
+column-sharded aggregation comparison, and dispatch counts) so subsequent
+PRs regress against recorded numbers instead of vibes — CI uploads the file
+as a workflow artifact and the repo commits a seed copy
+(BENCH_kernels.json).  Extend the JSON record — don't fork new files — when
+adding kernel benches.
+
+Smoke gates (``--smoke``), all on the fused grouped round:
+  * exactly ONE logical ``fedavg_grouped`` dispatch per round;
+  * membership staging within ``G·n + K`` elements (vs the dense ``K·n``
+    mask);
+  * grouped-vs-masked round wall clock at G=4, K=16 within an
+    interpret-mode tolerance (x1.35, one noise-absorbing retry);
+  * NEW (PR 4, the ``agg_compare`` record): the column-sharded aggregation
+    (``agg="sharded"``) keeps its per-device panel bytes within
+    ``K·(n/D + AGG_TILE)`` — i.e. the replicated panel divided by the
+    ``model``-axis device count D plus tile padding (read from the actual
+    panel sharding via ``engine.AGG_STATS``, so a silent re-replication
+    fails the gate) — and its round wall clock within x1.35 of the
+    replicated round.  On the 1-device CI runner D=1, so the byte gate
+    pins the padding overhead and the wall gate pins the shard_map
+    orchestration overhead; on multi-device hardware the same gates verify
+    the ÷D memory claim.
+
+The per-shard kernel launches a sharded round fans out to are recorded in
+the JSON under ``dispatches`` (``fedavg_grouped_shards`` = D per logical
+round) — see kernels/ops.py for the counter semantics.
 """
 from __future__ import annotations
 
@@ -80,6 +99,7 @@ def bench(ctx: dict, full: bool = False, record: dict = None):
         "kernel_compare": _bench_kernel_compare(smoke=False, sink=record),
         "grouped_rounds": _bench_grouped_round(full=full, matrix=True,
                                                sink=record),
+        "agg_compare": _bench_agg_compare(smoke=False, sink=record),
     }
 
 
@@ -284,6 +304,80 @@ def _bench_grouped_round(full: bool = False, smoke: bool = False,
     return out
 
 
+def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
+    """Replicated vs column-sharded fused grouped aggregation at the gate
+    cell: wall clock per round plus per-device panel bytes read from the
+    ACTUAL panel sharding (engine.AGG_STATS metadata, not the analytic
+    model), so the record catches a path that silently re-replicates the
+    panel.  The per-device byte bound (replicated/D + tile padding) is
+    asserted unconditionally — it is a correctness contract, not a timing;
+    the wall-clock gate (sharded ≤ x1.35 replicated, one retry) fires only
+    in smoke mode.  ``sink`` receives the result dict before any gate."""
+    from repro.fl import engine as ENG
+    from repro.fl import memory_model as MM
+    from repro.kernels.fedavg import AGG_TILE
+
+    d = 128 if smoke else 1024
+    G, kpg = GATE_CELL
+    plans, gtr = _make_width_plans(d, G, kpg)
+    eng_r = ENG.make_engine("packed", agg="replicated")
+    eng_s = ENG.make_engine("packed", agg="sharded")
+    res = {"n_local_devices": len(jax.devices())}
+    if sink is not None:
+        sink["agg_compare"] = res
+    eng_r.grouped_round(plans, gtr, {})
+    stats_r = dict(ENG.AGG_STATS)
+    ops.reset_dispatches()
+    eng_s.grouped_round(plans, gtr, {})
+    stats_s = dict(ENG.AGG_STATS)
+    res["dispatches"] = dict(ops.DISPATCHES)
+    ops.reset_dispatches()
+    D = stats_s["n_shards"]
+    k_total, n = stats_s["k_total"], stats_s["n"]
+    bytes_r = 4 * stats_r["per_device_panel_elems"]
+    bytes_s = 4 * stats_s["per_device_panel_elems"]
+    res.update(
+        G=G, k_total=k_total, n=n, n_shards=D,
+        n_padded_sharded=stats_s["n_padded"],
+        per_device_panel_bytes_replicated=bytes_r,
+        per_device_panel_bytes_sharded=bytes_s,
+        per_device_panel_bytes_model=MM.server_aggregation_peak_bytes(
+            k_total, n, G, n_devices=D, agg="sharded"
+        ),
+    )
+    byte_bound = 4 * k_total * (-(-n // D) + AGG_TILE)
+    assert bytes_s <= byte_bound, (
+        f"column-sharded aggregation staged {bytes_s} panel bytes per "
+        f"device, over the replicated/D + tile-padding bound {byte_bound} "
+        f"(replicated panel is {bytes_r})"
+    )
+    assert res["dispatches"].get("fedavg_grouped") == 1
+    assert res["dispatches"].get("fedavg_grouped_shards") == D
+    for attempt in range(2):
+        us_r = C.time_call(
+            lambda: eng_r.grouped_round(plans, gtr, {}).loss, iters=iters
+        )
+        us_s = C.time_call(
+            lambda: eng_s.grouped_round(plans, gtr, {}).loss, iters=iters
+        )
+        res.update(replicated_us=us_r, sharded_us=us_s,
+                   overhead_sharded_vs_replicated=us_s / us_r)
+        if not smoke or us_s <= us_r * GATE_TOL:
+            break  # retry once: shared-runner noise, not a regression
+    C.emit("kernels/grouped_round_agg_replicated", us_r,
+           f"per_dev_panel_bytes={bytes_r}")
+    C.emit("kernels/grouped_round_agg_sharded", us_s,
+           f"n_shards={D} per_dev_panel_bytes={bytes_s} "
+           f"overhead={us_s / us_r:.2f}x")
+    if smoke:
+        assert us_s <= us_r * GATE_TOL, (
+            f"perf regression: column-sharded fused round ({us_s:.1f}us) "
+            f"slower than the replicated fused round ({us_r:.1f}us) beyond "
+            f"x{GATE_TOL} at G={G}, K={k_total} on both attempts"
+        )
+    return res
+
+
 def _bench_kernel_compare(smoke: bool, sink: dict = None) -> dict:
     """Aggregation-kernel wall clock in isolation: dense-mask fedavg_masked
     vs group-compressed fedavg_grouped on the same panel (jnp paths, jitted;
@@ -361,6 +455,7 @@ def main() -> None:
             _bench_kernel_compare(smoke=True, sink=record)
             _bench_grouped_round(smoke=True, iters=5, matrix=True,
                                  sink=record)
+            _bench_agg_compare(smoke=True, sink=record)
         else:
             bench({}, full=args.full, record=record)
     finally:

@@ -69,14 +69,53 @@ run concurrently on different devices instead of back-to-back over the full
 mesh; when there are fewer devices than groups the full mesh is reused
 per group as before.
 
+Column-sharded aggregation (the ``agg`` knob)
+---------------------------------------------
+``grouped_round(..., agg=...)`` controls WHERE the fused aggregation runs:
+
+* ``"replicated"`` — the PR 3 behavior: every group panel collects onto one
+  device and the single ``fedavg_grouped`` dispatch reads the full
+  ``[K_total, n]`` panel there, so server peak memory scales as ``K_total·n``
+  on one chip.
+* ``"sharded"``   — the panel is BORN column-sharded over a ``model`` mesh
+  axis (``launch/mesh.py::make_model_mesh``, or the ``model`` axis of a
+  composed ``clients × model`` mesh from ``make_fl_cohort_mesh``): columns
+  are split into :data:`repro.kernels.fedavg.AGG_TILE`-aligned blocks
+  (:meth:`GroupLayout.column_shards` caches the per-shard offsets), group
+  panels stream into the per-shard buffers via shard-local
+  ``dynamic_update_slice`` scatters (each device keeps only the group
+  columns inside its block), and ``kernels.ops.fedavg_grouped_sharded``
+  runs the UNCHANGED shard-local kernel per device — the full shared panel
+  never materializes anywhere, PERSISTENT per-device peak drops to
+  ``≈ K_total·n/D`` (fl/memory_model.py::server_aggregation_peak_bytes
+  models both modes).  Caveat: each finished ``[K_g, n_g]`` GROUP panel is
+  still replicated across the agg mesh while it streams into the per-shard
+  buffers, so the TRANSIENT per-device peak adds ``max_g K_g·n_g`` — small
+  for genuinely heterogeneous cohorts (every group is a width/depth
+  fraction), but approaching ``K·n`` again if one near-full-width group
+  dominates the cohort; sharding the stream itself is a ROADMAP item.
+* ``"auto"``      — ``sharded`` when a multi-device ``model`` axis is
+  available, else ``replicated``.
+
+The one-logical-dispatch / one-``block_until_ready`` contract is agg-mode
+independent: ``DISPATCHES["fedavg_grouped"]`` still counts 1 per round, and
+the per-shard kernel launches that one logical dispatch fans out to are
+recorded separately under ``DISPATCHES["fedavg_grouped_shards"]`` (D per
+round).  ``AGG_STATS`` exposes the last round's per-device panel footprint
+from sharding METADATA only (no device sync).  The single-group identity
+fast path keeps the PR 1 packed/sharded round regardless of ``agg`` — its
+panel has no group structure to column-shard.
+
 The serial per-group oracle (``impl="serial"``, default under the ``vmap``
 mode) runs each group through ``client.cohort_round`` and accumulates the
 same num/den host-side; equivalence is asserted in tests/test_engine.py.
 
-Equivalence to the oracle is asserted in tests/test_engine.py.  Module-level
-caches (_SPEC_CACHE, _LAYOUT_CACHE, the loss caches in fl/server.py and
-fl/baselines.py) are bounded LRU maps; :func:`clear_caches` empties them all
-and drops every cached layout's lazily-built device buffers.
+Equivalence to the oracle across the full mode × impl × agg matrix is
+asserted by the engine-contract conformance suite (tests/test_contract.py).
+Module-level caches (_SPEC_CACHE, _LAYOUT_CACHE, the loss caches in
+fl/server.py and fl/baselines.py) are bounded LRU maps; :func:`clear_caches`
+empties them all and drops every cached layout's lazily-built device
+buffers.
 """
 from __future__ import annotations
 
@@ -90,17 +129,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.fl import client as CL
 from repro.kernels import ops
+from repro.kernels.fedavg import AGG_TILE
 
 MODES = ("vmap", "packed", "sharded", "auto")
+AGG_MODES = ("auto", "replicated", "sharded")
 
 # Host-sync accounting for the pipelined fused path: every block_until_ready
 # the engine issues goes through _barrier and increments this counter.  The
 # fused grouped round must show exactly one ("aggregation_barrier") per call.
 SYNCS: collections.Counter = collections.Counter()
+
+# Telemetry from the most recent fused grouped aggregation, recorded from
+# sharding METADATA only (sharding.shard_shape — never a device sync):
+# agg mode, shard count, padded width, and the per-device panel footprint.
+# Tests and benchmarks assert the never-a-full-panel-on-one-device contract
+# and report per-device panel bytes against it.
+AGG_STATS: dict = {}
 
 
 def reset_syncs() -> None:
@@ -172,6 +220,10 @@ def clear_caches() -> None:
     _LAYOUT_CACHE.clear()
     _SUBMESH_CACHE.clear()
     _slice_index.cache_clear()
+    _sharded_zeros_fn.cache_clear()
+    _sharded_scatter_fn.cache_clear()
+    ops.clear_shard_caches()
+    AGG_STATS.clear()
     from repro.fl import baselines as _bl
     from repro.fl import server as _srv
 
@@ -313,10 +365,15 @@ def _sharded_local_panel(loss_fn, trainable, frozen, bn_state, xs, ys, rngs,
     n_shards = mesh.shape["clients"]
     pad = (-k) % n_shards
     if pad:
-        # ghost clients: replicate client 0's shard inputs so the K axis
-        # divides the mesh; their rows are sliced off after the shard_map.
-        idx = jnp.concatenate([jnp.arange(k), jnp.zeros((pad,), jnp.int32)])
-        xs, ys, rngs = xs[idx], ys[idx], rngs[idx]
+        # ghost clients: ZERO-pad the shard inputs so the K axis divides the
+        # mesh; their rows are sliced off after the shard_map.  This must be
+        # jnp.pad, not a gather/concat of client 0's rows: any gather-shaped
+        # prologue feeding a shard_map over a composed clients×model mesh
+        # miscompiles under jit on jax 0.4.37 (wrong rows land in the
+        # middle shards; the 1-D clients mesh is unaffected) — exercised by
+        # the 8-device subprocess test in tests/test_contract.py.
+        wide = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        xs, ys, rngs = wide(xs), wide(ys), wide(rngs)
 
     def local(trainable, frozen, bn_state, xs, ys, rngs):
         trs, bns, losses = _local_training(
@@ -431,6 +488,22 @@ def _scatter_index(global_tree, global_spec: PackSpec, sub_tree) -> np.ndarray:
     return np.concatenate(parts)
 
 
+@dataclass(frozen=True)
+class ColumnShards:
+    """Tile-aligned column partition of the shared ``[K_total, n]`` panel
+    across the ``model`` mesh axis: shard ``d`` owns the global column range
+    ``[offsets[d], offsets[d] + n_shard)`` of the zero-padded ``n_padded``
+    column space.  Alignment to ``tile`` (the Pallas lane width,
+    kernels/fedavg.py::AGG_TILE) keeps every shard boundary on a kernel tile
+    boundary."""
+
+    n_shards: int
+    tile: int
+    n_shard: int  # columns per device
+    n_padded: int  # n_shards * n_shard (>= n)
+    offsets: Tuple[int, ...]  # global start column of each shard
+
+
 @dataclass
 class GroupLayout:
     """Cached scatter plan for one (global trees, group structures) combo:
@@ -449,6 +522,8 @@ class GroupLayout:
     _gmask: Optional[jax.Array] = None  # built lazily, [G, n] f32
     _legacy_mask: Optional[jax.Array] = None  # built lazily, [k_total, n] f32
     _idx_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy device indices
+    _col_shards: Optional[dict] = None  # (n_shards, tile) -> ColumnShards
+    _gmask_sharded: Optional[dict] = None  # mesh device ids -> sharded gmask
 
     @property
     def n_groups(self) -> int:
@@ -495,14 +570,55 @@ class GroupLayout:
                 self._legacy_mask = jnp.asarray(m)
         return self._legacy_mask
 
+    def column_shards(self, n_shards: int, tile: int = AGG_TILE) -> ColumnShards:
+        """Cached tile-aligned column partition of this layout's ``n``
+        columns over ``n_shards`` devices (host metadata only — the offsets
+        the sharded scatter and the memory model both key off)."""
+        if self._col_shards is None:
+            self._col_shards = {}
+        key = (n_shards, tile)
+        cs = self._col_shards.get(key)
+        if cs is None:
+            n_cols = -(-max(self.n, 1) // n_shards)
+            n_shard = -(-n_cols // tile) * tile
+            cs = ColumnShards(
+                n_shards, tile, n_shard, n_shard * n_shards,
+                tuple(i * n_shard for i in range(n_shards)),
+            )
+            self._col_shards[key] = cs
+        return cs
+
+    def gmask_sharded(self, mesh: Mesh) -> jax.Array:
+        """``[G, n_padded]`` group mask, zero-padded to the tile-aligned
+        column partition of ``mesh``'s ``model`` axis and committed
+        column-sharded — cached per device set so rounds never re-upload
+        membership.  Padded columns are zero, so their denominator is zero
+        and the (also zero-padded) ``prev`` passes through."""
+        if self._gmask_sharded is None:
+            self._gmask_sharded = {}
+        # key on the model-axis size too: two meshes over the SAME devices
+        # with different model-axis sizes need different paddings, and a
+        # device-ids-only key would hand the second one a stale gmask
+        key = (tuple(d.id for d in mesh.devices.reshape(-1)),
+               mesh.shape["model"])
+        gm = self._gmask_sharded.get(key)
+        if gm is None:
+            cs = self.column_shards(mesh.shape["model"])
+            padded = jnp.pad(self.gmask, ((0, 0), (0, cs.n_padded - self.n)))
+            gm = jax.device_put(padded, NamedSharding(mesh, P(None, "model")))
+            self._gmask_sharded[key] = gm
+        return gm
+
     def drop_device_buffers(self) -> None:
-        """Release the lazily-built device buffers (group mask, legacy
-        per-client mask, scatter indices).  Called by :func:`clear_caches`
-        on every cached layout so a layout reference that outlives its cache
-        entry cannot pin mask/index buffers for the rest of the session."""
+        """Release the lazily-built device buffers (group mask — replicated
+        and column-sharded — legacy per-client mask, scatter indices).
+        Called by :func:`clear_caches` on every cached layout so a layout
+        reference that outlives its cache entry cannot pin mask/index
+        buffers for the rest of the session."""
         self._gmask = None
         self._legacy_mask = None
         self._idx_dev = None
+        self._gmask_sharded = None
 
 
 _LAYOUT_CACHE: BoundedCache = BoundedCache(
@@ -517,15 +633,17 @@ _SUBMESH_CACHE: BoundedCache = BoundedCache(maxsize=32)
 def _group_submeshes(mesh: Mesh, ks: Tuple[int, ...]):
     """Disjoint contiguous slices of the ``clients`` mesh axis, one sub-mesh
     per group, sized ~proportionally to the group's client count (largest-
-    remainder apportionment, ≥1 device each) so different structure groups'
+    remainder apportionment, ≥1 slice each) so different structure groups'
     local SGD runs CONCURRENTLY on different devices instead of back-to-back
-    time-sharing the full mesh.  Returns None when the mesh has fewer
-    devices than groups (callers fall back to the full mesh per group)."""
-    devs = mesh.devices.reshape(-1)
-    nd, g = len(devs), len(ks)
+    time-sharing the full mesh.  For a composed ``clients × model`` mesh the
+    split slices only the leading ``clients`` axis — each sub-mesh keeps the
+    full ``model`` axis.  Returns None when the clients axis has fewer slots
+    than groups (callers fall back to the full mesh per group)."""
+    devs = mesh.devices if mesh.devices.ndim > 1 else mesh.devices.reshape(-1)
+    nd, g = devs.shape[0], len(ks)
     if g < 2 or nd < g:
         return None
-    key = (tuple(d.id for d in devs), ks)
+    key = (tuple(d.id for d in devs.reshape(-1)), devs.shape, ks)
     sub = _SUBMESH_CACHE.get(key)
     if sub is None:
         total = max(sum(ks), 1)
@@ -535,8 +653,9 @@ def _group_submeshes(mesh: Mesh, ks: Tuple[int, ...]):
             gi = max(range(g), key=lambda i: quota[i] - alloc[i])
             alloc[gi] += 1
         bounds = np.cumsum([0] + alloc)
+        axes = mesh.axis_names if devs.ndim > 1 else ("clients",)
         sub = tuple(
-            Mesh(devs[bounds[i] : bounds[i + 1]], ("clients",))
+            Mesh(devs[bounds[i] : bounds[i + 1]], axes)
             for i in range(g)
         )
         _SUBMESH_CACHE[key] = sub
@@ -632,33 +751,124 @@ def _scatter_group_panel(panel, gpanel, ix, row):
     return jax.lax.dynamic_update_slice(panel, block, (row, 0))
 
 
+def _align_for_mesh(mesh: Mesh, tree):
+    """device_put (replicated, async) any leaf COMMITTED outside ``mesh``'s
+    device set — a prior round's default-device output, an init jit's
+    committed params — so it can enter the mesh's pjit; uncommitted leaves
+    and leaves already on the mesh pass through untouched (pjit places
+    those shard-wise itself, without a full replicate).  Without this,
+    committed single-device inputs abort sharded local SGD with
+    'Received incompatible devices' on any multi-device mesh.
+
+    Replication is deliberately the one-size placement: data leaves the
+    pjit would shard over ``clients`` pay a D-fold broadcast here, but
+    alignment only fires for committed-off-mesh leaves (init outputs,
+    fed-back round results) — host/numpy batches are uncommitted and never
+    take this path — and per-leaf P('clients') placement can't be chosen
+    pre-jit because K_g needn't divide the axis (ghost padding happens
+    inside the jit)."""
+    devset = set(mesh.devices.reshape(-1).tolist())
+    sh = NamedSharding(mesh, P())
+
+    def fix(l):
+        if isinstance(l, jax.Array) and getattr(l, "committed", False) \
+                and set(l.devices()) != devset:
+            return jax.device_put(l, sh)
+        return l
+
+    return jax.tree.map(fix, tree)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_zeros_fn(shape: Tuple[int, ...], sharding: NamedSharding):
+    """Jitted zeros with explicit ``out_shardings``: the shared panel is
+    BORN column-sharded — the full ``[K_total, n_padded]`` buffer never
+    exists on any single device, not even at initialization."""
+    return jax.jit(lambda: jnp.zeros(shape, jnp.float32),
+                   out_shardings=sharding)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_scatter_fn(mesh: Mesh):
+    """Per-shard version of :func:`_scatter_group_panel` for the
+    column-sharded panel: under ``shard_map`` over the ``model`` axis, each
+    device rewrites the group's global column indices into its own
+    tile-aligned column range (out-of-range columns are DROPPED, so a device
+    touches only the group columns it owns), then lands the rows with
+    ``dynamic_update_slice``.  The sharded panel buffer is donated — the
+    update happens in place per shard, and group panels stream straight
+    into the per-shard buffers without ever forming the full panel."""
+
+    def scatter(panel, gpanel, ix, row):
+        def shard(pnl, gp, ixl, rowl):
+            n_shard = pnl.shape[1]
+            local = ixl - jax.lax.axis_index("model") * n_shard
+            local = jnp.where((local >= 0) & (local < n_shard), local, n_shard)
+            block = jnp.zeros((gp.shape[0], n_shard), pnl.dtype)
+            block = block.at[:, local].set(gp, mode="drop")
+            return jax.lax.dynamic_update_slice(pnl, block, (rowl, 0))
+
+        return shard_map(
+            shard, mesh=mesh,
+            in_specs=(P(None, "model"), P(), P(), P()),
+            out_specs=P(None, "model"), check_rep=False,
+        )(panel, gpanel, ix, row)
+
+    return jax.jit(scatter, donate_argnums=(0,))
+
+
 def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
-                   mesh: Optional[Mesh], *, agg: str = "grouped"):
+                   mesh: Optional[Mesh], *, kernel: str = "grouped",
+                   agg: str = "replicated",
+                   agg_mesh: Optional[Mesh] = None):
     """Pipelined fused path: EVERY group's local-SGD dispatch launches
     without host blocking (jax async dispatch), each finished [K_g, n_g]
     panel streams into the shared panel via jitted donated-buffer scatters,
-    and ONE group-compressed aggregation dispatch (``fedavg_grouped``)
-    closes the round — the only ``block_until_ready`` sits at that
-    aggregation barrier.  ``agg="masked"`` keeps the legacy dense-mask
-    ``fedavg_masked`` aggregation as an escape hatch / benchmark baseline."""
+    and ONE logical group-compressed aggregation dispatch closes the round —
+    the only ``block_until_ready`` sits at that aggregation barrier.
+
+    ``kernel="masked"`` keeps the legacy dense-mask ``fedavg_masked``
+    aggregation as an escape hatch / benchmark baseline.  ``agg`` places the
+    aggregation: ``"replicated"`` collects the full [K_total, n] panel onto
+    one device (the PR 3 behavior); ``"sharded"`` column-shards the panel
+    over ``agg_mesh``'s ``model`` axis — the panel is created already
+    sharded, scatters are shard-local, and the one logical dispatch lowers
+    to one shard-local kernel launch per device (see the module docstring).
+    """
     if layout.identity:
         # degenerate single-group round (every ProFL round): the mask is all
         # ones, so skip the scatter/mask machinery and run the one-jit packed
-        # (or sharded) round — still exactly one aggregation dispatch
+        # (or sharded) round — still exactly one aggregation dispatch.  The
+        # agg knob is a no-op here: the identity panel has no group
+        # structure to column-shard.
         p = plans[0]
         kw = dict(lr=p.lr, local_steps=p.local_steps, batch_size=p.batch_size)
         if mesh is not None:
+            args = _align_for_mesh(mesh, (p.trainable, p.frozen, p.bn_state,
+                                          p.xs, p.ys, p.rngs, p.weights))
             return GroupedResult(*_round_sharded(
-                p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys,
-                p.rngs, p.weights, mesh=mesh, **kw,
+                p.loss_fn, *args, mesh=mesh, **kw,
             ))
         return GroupedResult(*_round_packed(
             p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys,
             p.rngs, p.weights, **kw,
         ))
+    sharded = agg == "sharded"
+    if sharded and agg_mesh is None:
+        raise ValueError("agg='sharded' needs an agg_mesh with a 'model' axis")
     submeshes = _group_submeshes(mesh, layout.ks) if mesh is not None else None
     dev0 = mesh.devices.reshape(-1)[0] if submeshes is not None else None
-    panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
+    if sharded:
+        cs = layout.column_shards(agg_mesh.shape["model"])
+        repl = NamedSharding(agg_mesh, P())
+        panel = _sharded_zeros_fn(
+            (layout.k_total, cs.n_padded),
+            NamedSharding(agg_mesh, P(None, "model")),
+        )()
+        scatter = _sharded_scatter_fn(agg_mesh)
+    else:
+        panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
+        scatter = _scatter_group_panel
     group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
     losses = []
     for gi, plan in enumerate(plans):
@@ -669,29 +879,67 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
             # enough: different structures train CONCURRENTLY on different
             # devices instead of back-to-back over the full mesh
             gmesh = submeshes[gi] if submeshes is not None else mesh
-            gpanel, loss = _group_local_pack_sharded(
-                plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
-                plan.xs, plan.ys, plan.rngs, mesh=gmesh, **kw,
+            tr_g, fro_g, bn_g, xs_g, ys_g, rngs_g = _align_for_mesh(
+                gmesh, (plan.trainable, plan.frozen, plan.bn_state,
+                        plan.xs, plan.ys, plan.rngs)
             )
-            if submeshes is not None:
+            gpanel, loss = _group_local_pack_sharded(
+                plan.loss_fn, tr_g, fro_g, bn_g, xs_g, ys_g, rngs_g,
+                mesh=gmesh, **kw,
+            )
+            if submeshes is not None and not sharded:
                 # stream the finished group panel off its sub-mesh onto the
                 # aggregation device — device_put is async dispatch, so this
                 # transfer pipelines behind the other groups' local SGD
                 gpanel = jax.device_put(gpanel, dev0)
-                loss = jax.device_put(loss, dev0)
+            if submeshes is not None:
+                loss = jax.device_put(loss, dev0 if not sharded
+                                      else repl)
         else:
             gpanel, loss = _group_local_pack(
                 plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
                 plan.xs, plan.ys, plan.rngs, **kw,
             )
-        panel = _scatter_group_panel(
-            panel, gpanel, layout.idx_dev[gi], layout.rows[gi]
-        )
+        if sharded:
+            # replicate the [K_g, n_g] group panel across the agg mesh (an
+            # async transfer that pipelines like the dev0 collection above);
+            # the shard-local scatter then keeps only each device's columns
+            gpanel = jax.device_put(gpanel, repl)
+        panel = scatter(panel, gpanel, layout.idx_dev[gi], layout.rows[gi])
         losses.append(loss)
     w = jnp.concatenate(group_w)
     wsum = jnp.stack([jnp.sum(gw) for gw in group_w])
     prev = _grouped_prev(layout, global_trainable, global_bn)
-    if agg == "grouped":
+    AGG_STATS.clear()
+    AGG_STATS.update(
+        agg=agg, kernel=kernel, n=layout.n, k_total=layout.k_total,
+        n_shards=cs.n_shards if sharded else 1,
+        n_padded=cs.n_padded if sharded else layout.n,
+        per_device_panel_elems=math.prod(
+            panel.sharding.shard_shape(panel.shape)
+        ),
+    )
+    if sharded:
+        pad = cs.n_padded - layout.n
+        prev_p = jnp.pad(prev, (0, pad)) if pad else prev
+        prev_p = jax.device_put(prev_p, NamedSharding(agg_mesh, P("model")))
+        if kernel == "grouped":
+            flat = ops.fedavg_grouped_sharded(
+                panel, w, layout.gmask_sharded(agg_mesh), wsum, prev_p,
+                mesh=agg_mesh,
+            )
+        else:
+            lmask = jnp.pad(layout.legacy_mask, ((0, 0), (0, pad)))
+            lmask = jax.device_put(
+                lmask, NamedSharding(agg_mesh, P(None, "model"))
+            )
+            flat = ops.fedavg_masked_sharded(panel, w, lmask, prev_p,
+                                             mesh=agg_mesh)
+        # the round OUTPUT is the [n] aggregate, not the panel: gather it to
+        # the default device (async) so the next round's single-device local
+        # SGD jits see the same placement as the replicated path
+        flat = jax.device_put(flat[: layout.n], jax.devices()[0])
+    elif kernel == "grouped":
         flat = ops.fedavg_grouped(panel, w, layout.gmask, wsum, prev)
     else:
         flat = ops.fedavg_masked(panel, w, layout.legacy_mask, prev)
@@ -749,9 +997,18 @@ def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout):
 
 class CohortEngine:
     """Executes FL rounds under one of the MODES.  Stateless apart from the
-    mesh; safe to share across server + baselines."""
+    meshes; safe to share across server + baselines.
 
-    def __init__(self, mode: str = "vmap", mesh: Optional[Mesh] = None):
+    ``agg`` sets the default aggregation placement for grouped rounds (one
+    of AGG_MODES; ``auto`` resolves to ``sharded`` when a multi-device
+    ``model`` axis is available).  ``agg_mesh`` is the mesh whose ``model``
+    axis the column-sharded aggregation splits over; it defaults to the
+    engine mesh when that mesh carries a ``model`` axis (the composed
+    ``clients × model`` mesh from ``launch/mesh.py::make_fl_cohort_mesh``),
+    else to a 1-D ``model`` mesh over every local device."""
+
+    def __init__(self, mode: str = "vmap", mesh: Optional[Mesh] = None, *,
+                 agg: str = "auto", agg_mesh: Optional[Mesh] = None):
         if mode == "auto":
             mode = "sharded" if len(jax.devices()) > 1 else "packed"
         if mode not in ("vmap", "packed", "sharded"):
@@ -760,7 +1017,19 @@ class CohortEngine:
             from repro.launch.mesh import make_client_mesh
 
             mesh = make_client_mesh()
+        if agg not in AGG_MODES:
+            raise ValueError(f"unknown agg mode {agg!r} (one of {AGG_MODES})")
+        if agg_mesh is not None and "model" not in agg_mesh.axis_names:
+            raise ValueError("agg_mesh needs a 'model' axis")
+        if agg_mesh is None:
+            if mesh is not None and "model" in mesh.axis_names:
+                agg_mesh = mesh
+            elif agg == "sharded" or (agg == "auto" and len(jax.devices()) > 1):
+                from repro.launch.mesh import make_model_mesh
+
+                agg_mesh = make_model_mesh()
         self.mode, self.mesh = mode, mesh
+        self.agg, self.agg_mesh = agg, agg_mesh
 
     def round(
         self,
@@ -791,11 +1060,11 @@ class CohortEngine:
                     weights, **kw,
                 )
             )
+        args = _align_for_mesh(
+            self.mesh, (trainable, frozen, bn_state, xs, ys, rngs, weights)
+        )
         return RoundResult(
-            *_round_sharded(
-                loss_fn, trainable, frozen, bn_state, xs, ys, rngs, weights,
-                mesh=self.mesh, **kw,
-            )
+            *_round_sharded(loss_fn, *args, mesh=self.mesh, **kw)
         )
 
     def grouped_round(
@@ -805,6 +1074,7 @@ class CohortEngine:
         global_bn,
         *,
         impl: Optional[str] = None,
+        agg: Optional[str] = None,
     ) -> GroupedResult:
         """One heterogeneous round over ``plans`` (see module docstring).
 
@@ -815,22 +1085,43 @@ class CohortEngine:
         ``None`` picks serial under the ``vmap`` mode and fused otherwise
         (sharded local SGD when the engine mode is ``sharded``, with groups
         mapped to disjoint ``clients``-axis sub-meshes when the mesh is
-        large enough, per-group ghost-client padding either way)."""
+        large enough, per-group ghost-client padding either way).
+
+        ``agg`` places the fused aggregation: ``"replicated"`` (full panel
+        on one device), ``"sharded"`` (column-sharded over the agg mesh's
+        ``model`` axis — the panel never materializes on a single device),
+        or ``"auto"``/``None`` for the engine default (``auto`` resolves to
+        sharded exactly when the agg mesh has a multi-device ``model``
+        axis).  The serial oracle ignores ``agg``."""
         if not plans:
             raise ValueError("grouped_round needs at least one GroupPlan")
         if impl is None:
             impl = "serial" if self.mode == "vmap" else "fused"
         if impl not in ("serial", "fused", "fused_masked"):
             raise ValueError(f"unknown grouped impl {impl!r}")
+        agg = self.agg if agg is None else agg
+        if agg == "auto":
+            agg = ("sharded" if self.agg_mesh is not None
+                   and self.agg_mesh.shape["model"] > 1 else "replicated")
+        if agg not in ("replicated", "sharded"):
+            raise ValueError(f"unknown agg {agg!r} (one of {AGG_MODES})")
         layout = make_group_layout(plans, global_trainable, global_bn)
         if impl == "serial":
             return _grouped_serial(plans, global_trainable, global_bn, layout)
         mesh = self.mesh if self.mode == "sharded" else None
-        agg = "masked" if impl == "fused_masked" else "grouped"
+        agg_mesh = self.agg_mesh
+        if agg == "sharded" and agg_mesh is None:
+            from repro.launch.mesh import make_model_mesh
+
+            agg_mesh = self.agg_mesh = make_model_mesh()
         return _grouped_fused(
-            plans, global_trainable, global_bn, layout, mesh, agg=agg
+            plans, global_trainable, global_bn, layout, mesh,
+            kernel="masked" if impl == "fused_masked" else "grouped",
+            agg=agg, agg_mesh=agg_mesh,
         )
 
 
-def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None) -> CohortEngine:
-    return CohortEngine(mode, mesh)
+def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None, *,
+                agg: str = "auto",
+                agg_mesh: Optional[Mesh] = None) -> CohortEngine:
+    return CohortEngine(mode, mesh, agg=agg, agg_mesh=agg_mesh)

@@ -1,4 +1,4 @@
-"""Analytic per-client training-memory estimator (paper §4.1 / Fig. 6).
+"""Analytic training- and aggregation-memory estimators (paper §4.1 / Fig. 6).
 
 Client eligibility follows the paper's setup: budgets are drawn uniformly
 from 100–900 MB and a client joins a round iff its budget covers the
@@ -14,6 +14,11 @@ Footprint model (f32):
                   (conv input + BN input + ReLU mask ≈ 3 tensors/unit)
     transient   = 2 × max unit output on the frozen prefix × B
 peak ≈ params_term + act_term + transient.
+
+:func:`server_aggregation_peak_bytes` models the OTHER side of the memory
+wall — the server's fused grouped aggregation (fl/engine.py) — per
+aggregation placement mode, so the column-sharded path's ``≈ K_total·n/D``
+per-device claim is pinned by a regression test instead of vibes.
 """
 from __future__ import annotations
 
@@ -158,6 +163,67 @@ def depth_for_budget(
         if mem <= budget_mb:
             return d
     return 0
+
+
+# ---------------------------------------------------------------------------
+# Server-side aggregation peak (fl/engine.py fused grouped rounds)
+# ---------------------------------------------------------------------------
+
+# mirrors repro.kernels.fedavg.AGG_TILE (this module stays jax-free; the
+# cross-check test in tests/test_contract.py pins the two constants equal)
+AGG_TILE = 128
+
+
+def agg_columns_per_device(n: int, *, n_devices: int = 1,
+                           agg: str = "replicated",
+                           tile: int = AGG_TILE) -> int:
+    """Columns of the shared ``[K_total, n]`` panel resident on ONE device
+    under the given aggregation placement: all ``n`` when replicated, the
+    tile-aligned ``ceil(ceil(n / D) / tile) · tile`` column block when
+    column-sharded over a ``D``-device ``model`` axis (fl/engine.py::
+    GroupLayout.column_shards uses the same rounding)."""
+    if agg == "replicated":
+        return n
+    if agg != "sharded":
+        raise ValueError(f"unknown agg mode {agg!r}")
+    n_cols = -(-max(n, 1) // n_devices)
+    return -(-n_cols // tile) * tile
+
+
+def server_aggregation_peak_bytes(
+    k_total: int,
+    n: int,
+    n_groups: int,
+    *,
+    n_devices: int = 1,
+    agg: str = "replicated",
+    tile: int = AGG_TILE,
+    elem_bytes: int = 4,
+) -> int:
+    """Per-DEVICE peak bytes of the fused grouped aggregation
+    (fl/engine.py::_grouped_fused with the ``fedavg_grouped`` kernel):
+
+        panel   [K_total, n_dev]   — the scattered client panel
+        gmask   [G, n_dev]         — group-compressed membership
+        scratch [n_dev] × 4        — prev + num + den + out
+        weights [K_total] + wsum [G]
+
+    where ``n_dev`` is :func:`agg_columns_per_device` — the full ``n`` when
+    replicated, the tile-aligned ``≈ n/D`` column block when sharded.  The
+    panel term dominates (``K_total ×`` the rest), so sharding the columns
+    divides server peak memory by ``D`` up to tile padding — the last
+    single-device bottleneck the paper's memory-wall argument left open on
+    the server tier.
+
+    This models the PERSISTENT buffers.  The sharded engine additionally
+    holds one group's ``[K_g, n_g]`` panel replicated per device while it
+    streams into the shard buffers (transient ``max_g K_g·n_g`` elements on
+    top of the figure returned here — see the fl/engine.py module
+    docstring's caveat)."""
+    n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg, tile=tile)
+    return elem_bytes * (
+        k_total * n_dev + n_groups * n_dev + 4 * n_dev + k_total + n_groups
+    )
 
 
 def _depthfl_memory_mb(cfg: C.CNNConfig, depth: int, *, batch: int) -> float:

@@ -24,10 +24,19 @@ collapses to the tiny contraction ``Σ_g wsum_g·gmask_gj``.  Mask traffic
 drops from ``K·n`` to ``G·n + G`` elements (a factor of K/G) while the
 output stays bit-comparable to ``fedavg_masked`` up to f32 reduction order.
 
+Every kernel here is SHARD-LOCAL by construction: the per-column ratio has
+no cross-column coupling, so the same ``pallas_call`` runs unchanged on a
+``[K, n/D]`` column shard of the panel inside a ``shard_map`` over a
+``model`` mesh axis (kernels/ops.py::fedavg_grouped_sharded) — that is how
+the cohort engine keeps the full ``[K_total, n]`` panel from ever
+materializing on one device.  Column shards are aligned to :data:`AGG_TILE`
+(the TPU lane width) so shard boundaries never split a Pallas tile.
+
 ``interpret`` defaults to platform-aware: compiled on TPU, interpret mode
 everywhere else.  Pass an explicit bool to override.
 
-Oracles: kernels/ref.py::fedavg / fedavg_masked.
+Oracles: kernels/ref.py::fedavg / fedavg_masked / fedavg_grouped (+ the
+column-shard decomposition oracle ``fedavg_grouped_sharded``).
 """
 from __future__ import annotations
 
@@ -39,6 +48,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.pallas_util import default_interpret
+
+# Column-shard alignment for the sharded aggregation (fl/engine.py and
+# kernels/ops.py::fedavg_grouped_sharded): the TPU lane width, so a per-device
+# column block always starts on a (8, 128) f32 tile boundary and the
+# shard-local pallas_call never sees a tile split across devices.
+AGG_TILE = 128
 
 
 def _fedavg_kernel(p_ref, w_ref, o_ref):

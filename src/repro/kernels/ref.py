@@ -131,3 +131,39 @@ def fedavg_grouped(
     base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
     out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
     return out.astype(params.dtype)
+
+
+def fedavg_grouped_sharded(
+    params: jax.Array,  # [K, n] stacked client vectors, zero outside groups
+    weights: jax.Array,  # [K] raw weights
+    gmask: jax.Array,  # [G, n] per-group column membership
+    wsum: jax.Array,  # [G] per-group weight sums
+    prev: jax.Array | None = None,  # [n] passthrough
+    *,
+    n_shards: int = 1,
+    tile: int = 128,
+) -> jax.Array:
+    """Column-shard decomposition oracle for the sharded aggregation
+    (kernels/ops.py::fedavg_grouped_sharded / fl/engine.py): pad ``n`` up to
+    ``n_shards`` tile-aligned column blocks, run :func:`fedavg_grouped` on
+    each block independently, and concatenate.  The per-column ratio has no
+    cross-column coupling, so this is BITWISE identical to the unsharded
+    oracle — the invariant the shard_map path and the hypothesis property
+    tests rely on."""
+    K, n = params.shape
+    n_cols = -(-n // n_shards)
+    n_shard = -(-n_cols // tile) * tile
+    pad = n_shard * n_shards - n
+    if prev is None:
+        prev = jnp.zeros((n,), params.dtype)
+    p = jnp.pad(params, ((0, 0), (0, pad)))
+    gm = jnp.pad(gmask, ((0, 0), (0, pad)))
+    pv = jnp.pad(prev, (0, pad))
+    outs = [
+        fedavg_grouped(
+            p[:, o : o + n_shard], weights, gm[:, o : o + n_shard], wsum,
+            pv[o : o + n_shard],
+        )
+        for o in range(0, n_shard * n_shards, n_shard)
+    ]
+    return jnp.concatenate(outs)[:n]

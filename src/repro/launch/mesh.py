@@ -36,6 +36,34 @@ def make_client_mesh(n_clients: int | None = None):
     return jax.make_mesh((n,), ("clients",))
 
 
+def make_model_mesh(n_model: int | None = None):
+    """1-D mesh with a ``model`` axis for the column-sharded server
+    aggregation (fl/engine.py ``agg="sharded"``): ``fedavg_grouped`` runs
+    under shard_map with the shared ``[K_total, n]`` panel split into
+    tile-aligned column blocks across this axis, so no single device ever
+    holds the whole panel.  Uses every local device by default."""
+    n = len(jax.devices())
+    if n_model is not None:
+        n = min(n, n_model)
+    return jax.make_mesh((n,), ("model",))
+
+
+def make_fl_cohort_mesh(n_clients: int | None = None, n_model: int = 1):
+    """Composed ``clients × model`` mesh for one heterogeneous round that is
+    sharded on BOTH tiers: local SGD splits the cohort's client dim over
+    ``clients`` (with per-group sub-meshes along that axis) while the fused
+    aggregation column-shards the ``[K_total, n]`` panel over ``model`` —
+    fl/engine.py picks the ``model`` axis up automatically when the engine
+    mesh carries one.  ``n_clients`` defaults to every local device divided
+    by ``n_model``."""
+    n = len(jax.devices())
+    n_model = max(1, min(n_model, n))
+    nc = n // n_model
+    if n_clients is not None:
+        nc = min(nc, n_clients)
+    return jax.make_mesh((max(1, nc), n_model), ("clients", "model"))
+
+
 def make_fl_production_mesh(*, n_client_shards: int = 16, n_model: int = 16):
     """Production FL mesh: cohort clients sharded across ``clients``,
     per-client training model-parallel across ``model`` (16×16 pod)."""

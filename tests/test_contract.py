@@ -1,0 +1,536 @@
+"""Engine-contract conformance suite.
+
+ONE parametrized matrix asserts that every engine mode × grouped impl ×
+aggregation placement combination produces the same grouped-round result as
+the vmap/serial oracle (atol 1e-5) on three shared fixtures:
+
+* ``mixed``       — synthetic multi-structure cohort with bf16 + f32 leaves,
+                    a HeteroFL-style width slice, a DepthFL-style block
+                    prefix, and a full-structure group (fast: the whole
+                    matrix runs in tier-1);
+* ``cnn``         — a real reduced-width VGG forward (full group + a
+                    leading-corner-sliced group);
+* ``transformer`` — a real reduced transformer progressive loss (full group
+                    + width-sliced group).
+
+This replaces the per-pair equivalence tests that used to accumulate (and
+drift) in tests/test_engine.py: a new engine impl or agg mode gets covered
+by adding one axis value here, not N new tests.  Heavy fixture combos are
+marked ``slow``; a small allowlist keeps representative cells in tier-1.
+
+Also here: the column-sharded aggregation contracts — exactly one logical
+dispatch (with per-shard launch accounting), exactly one host sync per
+round, tile-aligned column shard geometry, the server aggregation memory
+model regression (per-device panel bytes ≈ K_total·n/D), and the 8-virtual-
+device subprocess case exercising the composed ``clients × model`` mesh
+(sharded local SGD + column-sharded aggregation in one round, bit-equal to
+the replicated path, with n not divisible by the shard count).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import progressive as P
+from repro.fl import engine as ENG
+from repro.fl import memory_model as MM
+from repro.kernels import ops as OPS
+from repro.kernels.fedavg import AGG_TILE
+from repro.models import cnn as C
+from repro.train.train_step import softmax_xent
+
+MODES = ("vmap", "packed", "sharded")
+IMPLS = ("serial", "fused", "fused_masked")
+AGGS = ("replicated", "sharded")
+FIXTURES = ("mixed", "cnn", "transformer")
+
+# tier-1 allowlist per heavy fixture; None = the full matrix stays tier-1.
+# Everything outside the allowlist still runs — in the slow job.
+TIER1 = {
+    "mixed": None,
+    "cnn": {
+        ("packed", "fused", "replicated"),
+        ("packed", "fused", "sharded"),
+        ("sharded", "fused", "sharded"),
+    },
+    "transformer": {("packed", "fused", "sharded")},
+}
+
+
+def _tree_close(a, b, atol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        tol = atol
+        if getattr(x, "dtype", None) == jnp.bfloat16:
+            # the f32 aggregates agree at 1e-5 (pinned via .packed below);
+            # bf16 STORAGE can still flip one ulp when an f32 reduction-order
+            # delta crosses a round-to-nearest-even boundary — allow one ulp
+            # at the leaf's magnitude on low-precision leaves only
+            tol = max(atol, float(np.max(np.abs(np.asarray(x, np.float32))))
+                      / 128.0)
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), atol=tol
+        )
+
+
+def _grouped_close(want, got, atol=1e-5):
+    _tree_close(want.trainable, got.trainable, atol=atol)
+    _tree_close(want.bn_state, got.bn_state, atol=atol)
+    np.testing.assert_allclose(float(want.loss), float(got.loss), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures: (plans, global_trainable, global_bn, oracle result)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_loss(f: int, dep: int):
+    def loss_fn(tr, fro, bn, xb, yb):
+        h = xb[:, :f] @ tr["w"].astype(jnp.float32) + tr["b"]
+        for i in range(dep):
+            h = jnp.tanh(h @ tr["blocks"][i])
+        mu = bn["mu"] * 0.9 + 0.1 * jnp.mean(h)
+        return jnp.mean((h.sum(-1) - yb) ** 2), {"mu": mu}
+
+    return loss_fn
+
+
+_MIXED_LOSSES = {
+    (f, dep): _mixed_loss(f, dep) for f, dep in [(4, 1), (6, 2), (8, 2)]
+}
+
+
+def build_mixed_world():
+    """Width slice + depth prefix + full structure over a mixed-dtype global
+    tree (bf16 ``w``, f32 everything else), strongly uneven weights."""
+    d, out = 8, 3
+    rng = jax.random.PRNGKey(0)
+    gtr = {
+        "w": jax.random.normal(rng, (d, out)).astype(jnp.bfloat16),
+        "b": jnp.zeros((out,)),
+        "blocks": [
+            jax.random.normal(jax.random.fold_in(rng, 9 + i), (out, out))
+            for i in range(2)
+        ],
+    }
+    gbn = {"mu": jnp.zeros(())}
+    plans = []
+    for gi, (f, dep, kg) in enumerate([(4, 1, 2), (6, 2, 3), (8, 2, 2)]):
+        sub = {
+            "w": gtr["w"][:f],
+            "b": gtr["b"],
+            "blocks": gtr["blocks"][:dep],
+        }
+        xs = jax.random.normal(jax.random.fold_in(rng, gi), (kg, 10, d))
+        ys = jax.random.normal(jax.random.fold_in(rng, 100 + gi), (kg, 10))
+        rngs = jax.random.split(jax.random.fold_in(rng, 200 + gi), kg)
+        w = jnp.arange(1.0, kg + 1.0) * (gi + 0.5)
+        plans.append(ENG.GroupPlan(
+            _MIXED_LOSSES[(f, dep)], sub, {}, gbn, xs, ys, rngs, w, 0.1, 3, 4
+        ))
+    return plans, gtr, gbn
+
+
+@pytest.fixture(scope="module")
+def mixed_world():
+    plans, gtr, gbn = build_mixed_world()
+    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
+    return plans, gtr, gbn, want
+
+
+def _reg_loss(tr, fro, bn, xb, yb):
+    reg = sum(
+        jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tr)
+    )
+    return reg / 100.0, bn
+
+
+def _half_leaf(l):
+    return l[: max(1, l.shape[0] // 2)] if l.ndim > 0 else l
+
+
+@pytest.fixture(scope="module")
+def cnn_world():
+    """Real reduced-width VGG group + a leading-corner-sliced group (the
+    slice group trains an L2 objective — layout coverage, not semantics)."""
+    cfg = C.CNNConfig("vgg11", width_mult=0.0625, in_size=16)
+    params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))
+
+    def loss_fn(trainable, frozen, bn_state, xb, yb):
+        logits, new_bn = C.forward_cnn(cfg, trainable, bn_state, xb,
+                                       train=True)
+        return softmax_xent(logits, yb), new_bn
+
+    K, n_local = 2, 8
+    rng = jax.random.PRNGKey(1)
+    xs = jax.random.normal(rng, (K, n_local, 16, 16, 3))
+    ys = jax.random.randint(jax.random.fold_in(rng, 1), (K, n_local), 0, 10)
+    rngs = jax.random.split(jax.random.PRNGKey(2), K)
+    sub = jax.tree.map(_half_leaf, params)
+    xs2 = jax.random.normal(jax.random.fold_in(rng, 2), (K, n_local, 16, 16, 3))
+    rngs2 = jax.random.split(jax.random.PRNGKey(3), K)
+    plans = [
+        ENG.GroupPlan(loss_fn, params, {}, bn, xs, ys, rngs,
+                      jnp.asarray([3.0, 1.0]), 0.05, 2, 4),
+        ENG.GroupPlan(_reg_loss, sub, {}, {}, xs2, ys, rngs2,
+                      jnp.asarray([2.0, 0.5]), 0.05, 2, 4),
+    ]
+    want = ENG.make_engine("vmap").grouped_round(plans, params, bn)
+    return plans, params, bn, want
+
+
+@pytest.fixture(scope="module")
+def transformer_world():
+    """Real reduced transformer progressive loss (full group) + a width
+    slice of every leaf under an L2 objective (scatter coverage on a
+    many-leaf tree)."""
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("qwen1.5-0.5b").reduced(d_model=64, vocab=32).with_(
+        n_prog_blocks=2
+    )
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    t = 1
+    frozen, trainable = P.submodel_init(cfg, params, jax.random.PRNGKey(1), t)
+    prog_loss = P.make_progressive_loss(cfg, t)
+
+    def loss_fn(trainable, frozen, bn_state, xb, yb):
+        loss, _ = prog_loss(trainable, frozen, {"tokens": xb})
+        return loss, bn_state
+
+    K, n_local, S = 2, 6, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (K, n_local, S), 0,
+                              cfg.vocab)
+    ys = jnp.zeros((K, n_local), jnp.int32)
+    rngs = jax.random.split(jax.random.PRNGKey(3), K)
+    sub = jax.tree.map(_half_leaf, trainable)
+    toks2 = jax.random.randint(jax.random.PRNGKey(4), (K, n_local, S), 0,
+                               cfg.vocab)
+    rngs2 = jax.random.split(jax.random.PRNGKey(5), K)
+    plans = [
+        ENG.GroupPlan(loss_fn, trainable, frozen, {}, toks, ys, rngs,
+                      jnp.asarray([1.0, 4.0]), 0.05, 2, 2),
+        ENG.GroupPlan(_reg_loss, sub, frozen, {}, toks2, ys, rngs2,
+                      jnp.asarray([2.0, 3.0]), 0.05, 2, 2),
+    ]
+    want = ENG.make_engine("vmap").grouped_round(plans, trainable, {})
+    return plans, trainable, {}, want
+
+
+# ---------------------------------------------------------------------------
+# THE matrix: every mode × impl × agg combination vs the vmap oracle
+# ---------------------------------------------------------------------------
+
+
+def _matrix():
+    for fixture in FIXTURES:
+        fast = TIER1[fixture]
+        for mode in MODES:
+            for impl in IMPLS:
+                for agg in AGGS:
+                    marks = ()
+                    if fast is not None and (mode, impl, agg) not in fast:
+                        marks = (pytest.mark.slow,)
+                    yield pytest.param(
+                        fixture, mode, impl, agg, marks=marks,
+                        id=f"{fixture}-{mode}-{impl}-{agg}",
+                    )
+
+
+@pytest.mark.parametrize("fixture,mode,impl,agg", list(_matrix()))
+def test_engine_contract(fixture, mode, impl, agg, request):
+    plans, gtr, gbn, want = request.getfixturevalue(fixture + "_world")
+    got = ENG.make_engine(mode).grouped_round(
+        plans, gtr, gbn, impl=impl, agg=agg
+    )
+    _grouped_close(want, got)
+    if impl != "serial":
+        # fused paths also return the packed flat aggregate; it must be
+        # exactly the pack of the returned tree (the EM fast path reads it)
+        assert got.packed is not None
+        np.testing.assert_array_equal(
+            np.asarray(got.packed),
+            np.asarray(ENG.make_pack_spec(gtr).pack(got.trainable)),
+        )
+
+
+def test_sharded_agg_bit_equal_to_replicated(mixed_world):
+    """The per-column ratio has no cross-column coupling, so the column
+    split must be EXACT — not just 1e-5-close — to the replicated path."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    got_r = eng.grouped_round(plans, gtr, gbn, agg="replicated")
+    got_s = eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    for a, b in zip(jax.tree.leaves(got_r.trainable),
+                    jax.tree.leaves(got_s.trainable)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sharded-aggregation contracts: dispatches, syncs, shard geometry, stats
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_agg_single_logical_dispatch(mixed_world):
+    """agg="sharded" keeps the one-logical-dispatch contract: exactly one
+    ``fedavg_grouped`` per round, with the per-shard kernel launches it
+    fans out to recorded separately under ``fedavg_grouped_shards``."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")  # warm compiles
+    OPS.reset_dispatches()
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    assert OPS.DISPATCHES["fedavg_grouped"] == 1
+    assert OPS.DISPATCHES["fedavg_grouped_shards"] == \
+        ENG.AGG_STATS["n_shards"]
+    assert OPS.DISPATCHES["fedavg_masked"] == 0
+    OPS.reset_dispatches()
+
+
+def test_sharded_agg_single_host_sync(mixed_world):
+    """The column-sharded round still performs exactly ONE
+    jax.block_until_ready, at the aggregation barrier (the panel creation,
+    per-shard scatters, and device_put streams are all async)."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")  # warm compiles
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        ENG.reset_syncs()
+        eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    finally:
+        jax.block_until_ready = real
+    assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+    assert ENG.SYNCS["aggregation_barrier"] == 1
+    ENG.reset_syncs()
+
+
+def test_agg_stats_and_column_shards(mixed_world):
+    """AGG_STATS reflects the actual panel sharding metadata, and
+    GroupLayout.column_shards produces a tile-aligned partition that covers
+    every column exactly once."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    st = dict(ENG.AGG_STATS)
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    cs = layout.column_shards(st["n_shards"])
+    assert st["agg"] == "sharded" and st["n"] == layout.n
+    assert st["n_padded"] == cs.n_padded
+    assert st["per_device_panel_elems"] == layout.k_total * cs.n_shard
+    assert cs.n_shard % AGG_TILE == 0
+    assert cs.n_padded == cs.n_shard * cs.n_shards >= layout.n
+    assert cs.offsets == tuple(
+        i * cs.n_shard for i in range(cs.n_shards)
+    )
+    # replicated rounds report the full panel on one device
+    eng.grouped_round(plans, gtr, gbn, agg="replicated")
+    st_r = dict(ENG.AGG_STATS)
+    assert st_r["agg"] == "replicated" and st_r["n_shards"] == 1
+    assert st_r["per_device_panel_elems"] == layout.k_total * layout.n
+
+
+def test_agg_knob_validation(mixed_world):
+    plans, gtr, gbn, _ = mixed_world
+    with pytest.raises(ValueError):
+        ENG.make_engine("packed", agg="columnwise")
+    with pytest.raises(ValueError):
+        ENG.make_engine("packed").grouped_round(plans, gtr, gbn, agg="magic")
+    with pytest.raises(ValueError):
+        from repro.launch.mesh import make_client_mesh
+
+        ENG.make_engine("packed", agg_mesh=make_client_mesh())
+
+
+def test_clear_caches_drops_sharded_layout_buffers(mixed_world):
+    """The column-sharded gmask staged per mesh is a device buffer like the
+    replicated one: clear_caches must drop it off caller-held layouts."""
+    from repro.launch.mesh import make_model_mesh
+
+    plans, gtr, gbn, _ = mixed_world
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    _ = layout.gmask_sharded(make_model_mesh())
+    assert layout._gmask_sharded
+    ENG.clear_caches()
+    assert layout._gmask_sharded is None
+    # lazy rebuild keeps the layout usable
+    gm = layout.gmask_sharded(make_model_mesh())
+    assert gm.shape[0] == layout.n_groups
+
+
+# ---------------------------------------------------------------------------
+# server aggregation memory model regression
+# ---------------------------------------------------------------------------
+
+
+def test_memory_model_matches_engine_tile():
+    assert MM.AGG_TILE == AGG_TILE
+
+
+def test_server_agg_memory_model_sharded_divides_by_d():
+    """Pin the headline contract: sharded-agg per-device panel bytes ≈
+    K_total·n/D (within one tile of padding per device), never the full
+    panel."""
+    K, n, G = 64, 1_000_000, 8
+    full = MM.server_aggregation_peak_bytes(K, n, G)
+    assert full == 4 * (K * n + G * n + 4 * n + K + G)
+    for D in (2, 4, 8):
+        per_dev = MM.server_aggregation_peak_bytes(
+            K, n, G, n_devices=D, agg="sharded"
+        )
+        panel_dev = 4 * K * MM.agg_columns_per_device(
+            n, n_devices=D, agg="sharded"
+        )
+        # panel term ≈ K·n/D: within one tile of padding per device
+        assert panel_dev >= 4 * K * n / D
+        assert panel_dev <= 4 * K * (n / D + MM.AGG_TILE)
+        # and strictly below the replicated panel — the full [K, n] panel
+        # never fits on (or lands on) a single device
+        assert per_dev < full / (D * 0.9)
+    with pytest.raises(ValueError):
+        MM.server_aggregation_peak_bytes(K, n, G, agg="magic")
+
+
+def test_server_agg_memory_model_matches_measured_stats(mixed_world):
+    """The analytic per-device panel bytes must agree with the sharding
+    metadata AGG_STATS records from the real panel."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    st = dict(ENG.AGG_STATS)
+    n_dev_cols = MM.agg_columns_per_device(
+        st["n"], n_devices=st["n_shards"], agg="sharded"
+    )
+    assert st["per_device_panel_elems"] == st["k_total"] * n_dev_cols
+
+
+# ---------------------------------------------------------------------------
+# 8-virtual-device composed clients × model mesh (subprocess so the
+# host-device-count flag applies before jax initializes)
+# ---------------------------------------------------------------------------
+
+_COMPOSED_MESH_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+from repro.fl import engine as ENG
+from repro.kernels import ops as OPS
+from repro.launch.mesh import make_fl_cohort_mesh
+
+mesh = make_fl_cohort_mesh(n_clients=4, n_model=2)
+assert dict(mesh.shape) == {"clients": 4, "model": 2}, dict(mesh.shape)
+eng = ENG.CohortEngine("sharded", mesh)
+assert eng.agg_mesh is mesh  # the model axis is picked up from the mesh
+
+def width_loss(f):
+    def loss_fn(tr, fro, bn, xb, yb):
+        pred = xb[:, :f] @ tr["w"] + tr["b"]
+        return jnp.mean((pred - yb[:, None]) ** 2), bn
+    return loss_fn
+
+losses = {f: width_loss(f) for f in (3, 5)}
+d, out, n_local = 5, 3, 8
+rng = jax.random.PRNGKey(0)
+# n = 5*3 + 3 + 1 = 19 columns: odd, so NOT divisible by the 2 column shards
+tr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,)),
+      "c": jnp.zeros((1,))}
+plans = []
+for gi, f in enumerate((3, 5)):
+    sub = {"w": tr["w"][:f], "b": tr["b"], "c": tr["c"]}
+    gxs = jax.random.normal(jax.random.fold_in(rng, 10 + gi), (3, n_local, d))
+    gys = jax.random.normal(jax.random.fold_in(rng, 20 + gi), (3, n_local))
+    grngs = jax.random.split(jax.random.fold_in(rng, 30 + gi), 3)
+    plans.append(ENG.GroupPlan(
+        losses[f], sub, {}, {}, gxs, gys, grngs,
+        jnp.arange(1.0, 4.0) * (gi + 1), 0.1, 3, 4,
+    ))
+
+# K_total = 6 does not divide the 4-slot clients axis (ghost padding), and
+# each group's K_g = 3 does not divide its 2-slot clients sub-mesh either
+want = ENG.make_engine("vmap").grouped_round(plans, tr, {})
+got_r = eng.grouped_round(plans, tr, {}, agg="replicated")
+OPS.reset_dispatches()
+got_s = eng.grouped_round(plans, tr, {}, agg="sharded")
+
+# one LOGICAL dispatch, two per-shard kernel launches under it
+assert OPS.DISPATCHES["fedavg_grouped"] == 1, dict(OPS.DISPATCHES)
+assert OPS.DISPATCHES["fedavg_grouped_shards"] == 2, dict(OPS.DISPATCHES)
+
+# the full [K_total, n] panel never materialized on one device: each
+# device's panel block is exactly K_total x (n_padded / 2)
+st = ENG.AGG_STATS
+assert st["n_shards"] == 2, st
+assert st["per_device_panel_elems"] == st["k_total"] * st["n_padded"] // 2, st
+assert st["per_device_panel_elems"] < st["k_total"] * st["n_padded"], st
+
+# column-sharded aggregation is BIT-EQUAL to the replicated path
+for a, b in zip(jax.tree.leaves(got_r.trainable),
+                jax.tree.leaves(got_s.trainable)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+err = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree.leaves(want.trainable),
+                    jax.tree.leaves(got_s.trainable))
+)
+err = max(err, abs(float(want.loss) - float(got_s.loss)))
+print("COMPOSED_MAXERR", err)
+assert err <= 1e-5, err
+
+# a SECOND round fed the first round's outputs (committed to the default
+# device) and device-0-committed plan trees: _align_for_mesh must stream
+# them onto each group's sub-mesh instead of aborting with 'incompatible
+# devices' (this is how real multi-round baselines run on a mesh)
+tr2 = jax.device_put(got_s.trainable, jax.devices()[0])
+plans2 = [
+    p._replace(trainable={"w": tr2["w"][:f], "b": tr2["b"], "c": tr2["c"]})
+    for p, f in zip(plans, (3, 5))
+]
+again = eng.grouped_round(plans2, tr2, {}, agg="sharded")
+assert all(bool(jnp.all(jnp.isfinite(l)))
+           for l in jax.tree.leaves(again.trainable))
+print("SECOND_ROUND_OK")
+
+# gmask_sharded must key on the model-axis size, not just the device set:
+# the 2-shard composed mesh and an 8-shard 1-D model mesh cover the SAME
+# devices but need different paddings
+from repro.launch.mesh import make_model_mesh
+layout = ENG.make_group_layout(plans, tr, {})
+gm2 = layout.gmask_sharded(mesh)               # model axis 2
+gm8 = layout.gmask_sharded(make_model_mesh())  # model axis 8, same devices
+assert gm2.shape[1] == layout.column_shards(2).n_padded, gm2.shape
+assert gm8.shape[1] == layout.column_shards(8).n_padded, gm8.shape
+print("GMASK_KEYING_OK")
+"""
+
+
+def test_composed_mesh_sharded_agg_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_compile_cache")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _COMPOSED_MESH_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "COMPOSED_MAXERR" in out.stdout
+    assert "SECOND_ROUND_OK" in out.stdout
+    assert "GMASK_KEYING_OK" in out.stdout

@@ -2,12 +2,14 @@
 packed/sharded `round` must match the vmap+tree-map oracle
 (fl/client.py::cohort_round) to <= 1e-5 across cohort sizes, uneven weights,
 mixed dtypes, and both CNN and transformer loss_fns; pack/unpack must
-round-trip arbitrary trees; `grouped_round`'s fused masked aggregation must
-match the serial per-group oracle for HeteroFL-style width groups and
-DepthFL-style depth prefixes (incl. zero-weight groups, the single-group
-degenerate case, and a one-dispatch-per-round assertion); the multi-device
-paths are exercised in a subprocess with
---xla_force_host_platform_device_count."""
+round-trip arbitrary trees; plus the grouped-round BEHAVIORAL contracts
+(zero-weight groups, the single-group degenerate case, dispatch/sync
+counting, layout caching/validation); the multi-device paths are exercised
+in a subprocess with --xla_force_host_platform_device_count.
+
+Grouped-round RESULT equivalence across the full engine mode × impl × agg
+matrix lives in tests/test_contract.py (the engine-contract conformance
+suite) — don't add new pairwise equivalence checks here."""
 import os
 import subprocess
 import sys
@@ -330,100 +332,8 @@ def _width_world(zero_weight_group=None):
     return plans, gtr, gbn
 
 
-def _depth_loss_fn(depth):
-    def loss_fn(tr, fro, bn, xb, yb):
-        h = xb
-        for i in range(depth):
-            h = jnp.tanh(h @ tr["blocks"][i])
-        return jnp.mean((h.sum(-1) - yb) ** 2), bn
-
-    return loss_fn
-
-
-_DEPTH_LOSSES = {d: _depth_loss_fn(d) for d in (1, 2, 3)}
-
-
-def _depth_world():
-    """DepthFL-shaped groups: each group trains a prefix of the block list."""
-    rng = jax.random.PRNGKey(5)
-    blocks = [
-        jax.random.normal(jax.random.fold_in(rng, i), (4, 4)) for i in range(3)
-    ]
-    gtr = {"blocks": blocks}
-    plans = []
-    for gi, (dep, kg) in enumerate([(1, 2), (2, 2), (3, 3)]):
-        xs = jax.random.normal(jax.random.fold_in(rng, 400 + gi), (kg, 10, 4))
-        ys = jax.random.normal(jax.random.fold_in(rng, 500 + gi), (kg, 10))
-        rngs = jax.random.split(jax.random.fold_in(rng, 600 + gi), kg)
-        plans.append(ENG.GroupPlan(
-            _DEPTH_LOSSES[dep], {"blocks": blocks[:dep]}, {}, {},
-            xs, ys, rngs, jnp.arange(1.0, kg + 1.0), 0.05, 2, 4,
-        ))
-    return plans, gtr, {}
-
-
-@pytest.fixture(scope="module")
-def width_world():
-    plans, gtr, gbn = _width_world()
-    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
-    return plans, gtr, gbn, want
-
-
-@pytest.fixture(scope="module")
-def depth_world():
-    plans, gtr, gbn = _depth_world()
-    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
-    return plans, gtr, gbn, want
-
-
-@pytest.mark.parametrize("mode", ENGINES)
-def test_grouped_width_groups_match_serial(width_world, mode):
-    plans, gtr, gbn, want = width_world
-    got = ENG.make_engine(mode).grouped_round(plans, gtr, gbn)
-    assert want.packed is None and got.packed is not None
-    _grouped_close(want, got)
-    np.testing.assert_allclose(
-        np.asarray(got.packed),
-        np.asarray(ENG.make_pack_spec(gtr).pack(want.trainable)),
-        atol=1e-5,
-    )
-
-
-@pytest.mark.parametrize("mode", ENGINES)
-def test_grouped_depth_groups_match_serial(depth_world, mode):
-    plans, gtr, gbn, want = depth_world
-    got = ENG.make_engine(mode).grouped_round(plans, gtr, gbn)
-    _grouped_close(want, got)
-
-
-@pytest.mark.parametrize("mode", ENGINES)
-def test_grouped_transformer_groups_match_serial(tf_world, mode):
-    """Grouped cohort over a REAL transformer trainable tree (many leaves,
-    mixed shapes): one full-structure group plus one group training a
-    leading-corner width slice of every leaf.  Exercises the path-matched
-    scatter + group-compressed aggregation on transformer layouts."""
-    loss_fn, trainable, frozen, toks, ys, rngs, weights, kw, _ = tf_world
-
-    def half_leaf(l):
-        return l[: max(1, l.shape[0] // 2)] if l.ndim > 0 else l
-
-    sub = jax.tree.map(half_leaf, trainable)
-
-    def sub_loss(tr, fro, bn, xb, yb):
-        reg = sum(
-            jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tr)
-        )
-        return reg / 100.0, bn
-
-    plans = [
-        ENG.GroupPlan(loss_fn, trainable, frozen, {}, toks[:2], ys[:2],
-                      rngs[:2], weights[:2], 0.05, 2, 2),
-        ENG.GroupPlan(sub_loss, sub, frozen, {}, toks[2:], ys[2:],
-                      rngs[2:], weights[2:], 0.05, 2, 2),
-    ]
-    want = ENG.make_engine("vmap").grouped_round(plans, trainable, {})
-    got = ENG.make_engine(mode).grouped_round(plans, trainable, {})
-    _grouped_close(want, got)
+# Result equivalence for width/depth/transformer groups across the mode ×
+# impl × agg matrix moved to tests/test_contract.py (the conformance suite).
 
 
 def test_grouped_zero_weight_group_passes_through():
@@ -475,17 +385,6 @@ def test_grouped_round_single_aggregation_dispatch():
     eng.grouped_round(plans, gtr, gbn, impl="fused_masked")
     assert OPS.DISPATCHES["fedavg_masked"] == 1
     OPS.reset_dispatches()
-
-
-def test_grouped_fused_masked_escape_hatch_matches():
-    """impl="fused_masked" (legacy dense-mask aggregation) stays equivalent
-    to the group-compressed default and the serial oracle."""
-    plans, gtr, gbn = _width_world()
-    want = ENG.make_engine("vmap").grouped_round(plans, gtr, gbn)
-    got = ENG.make_engine("packed").grouped_round(
-        plans, gtr, gbn, impl="fused_masked"
-    )
-    _grouped_close(want, got)
 
 
 def test_grouped_fused_single_host_sync():
@@ -661,10 +560,18 @@ for gi, f in enumerate((3, 5)):
 want_g = ENG.make_engine("vmap").grouped_round(plans, tr, {})
 from repro.kernels import ops as OPS
 OPS.reset_dispatches()
+# agg="auto" on a 4-device mesh resolves to the column-sharded aggregation
+assert eng.agg_mesh is not None and eng.agg_mesh.shape["model"] == 4
 got_g = eng.grouped_round(plans, tr, {})
-# group-compressed aggregation: one fedavg_grouped dispatch, no dense mask
+# group-compressed aggregation: one LOGICAL fedavg_grouped dispatch (fanning
+# out to one shard-local kernel launch per model-axis device), no dense mask
 assert OPS.DISPATCHES["fedavg_grouped"] == 1, dict(OPS.DISPATCHES)
+assert OPS.DISPATCHES["fedavg_grouped_shards"] == 4, dict(OPS.DISPATCHES)
 assert OPS.DISPATCHES["fedavg_masked"] == 0, dict(OPS.DISPATCHES)
+# the full [K_total, n] panel never materialized on one device
+st = ENG.AGG_STATS
+assert st["agg"] == "sharded" and st["n_shards"] == 4, st
+assert st["per_device_panel_elems"] == st["k_total"] * st["n_padded"] // 4, st
 # the two groups ran on DISJOINT clients-axis sub-meshes (2 devices each;
 # K_g=3 divides neither -> ghost padding inside each sub-mesh)
 subs = ENG._group_submeshes(eng.mesh, (3, 3))

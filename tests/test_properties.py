@@ -1,11 +1,21 @@
 """Hypothesis property tests on system invariants."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed; "
-                    "property tests run in the CI slow job")
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    if os.environ.get("CI"):
+        # CI installs hypothesis in EVERY job (see .github/workflows/ci.yml):
+        # a missing install there must fail loudly, not silently skip the
+        # whole property suite the way importorskip used to.
+        raise
+    pytest.skip("hypothesis not installed locally; CI always runs these",
+                allow_module_level=True)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import blocks as B
@@ -82,6 +92,145 @@ def test_fedavg_convex_combination(K, n, seed):
     np.testing.assert_allclose(
         np.asarray(ref.fedavg(same, w)), np.asarray(params[0]), atol=1e-5
     )
+
+
+# ---------------------------------------------------------------------------
+# fedavg_grouped: group-compressed == dense-mask oracle, shard invariance
+# ---------------------------------------------------------------------------
+
+
+def _grouped_case(draw_ints, seed, G, ks, n):
+    """Build a random grouped-aggregation instance: per-group column sets,
+    panel zeroed outside each group's columns (the engine's scatter
+    invariant), raw weights with a possible zero-weight group."""
+    rng = jax.random.PRNGKey(seed)
+    gid = np.repeat(np.arange(G), ks)  # client -> group
+    K = int(gid.size)
+    gmask = (jax.random.uniform(jax.random.fold_in(rng, 1), (G, n)) > 0.4
+             ).astype(jnp.float32)
+    mask = gmask[gid]  # dense per-client expansion
+    p = jax.random.normal(rng, (K, n)) * mask
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 2), (K,))) + 0.1
+    if draw_ints % 3 == 0 and G > 1:
+        # zero out one whole group's weights: its unique columns must fall
+        # back to prev via the zero-denominator passthrough
+        w = w * jnp.asarray(gid != (draw_ints % G), jnp.float32)
+    wsum = jnp.zeros((G,)).at[gid].add(w)
+    prev = jax.random.normal(jax.random.fold_in(rng, 3), (n,))
+    return p, w, mask, gmask, wsum, prev
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 4),  # G groups
+    st.lists(st.integers(1, 3), min_size=1, max_size=4),  # K_g per group
+    st.integers(1, 300),  # n params — deliberately NOT tile-aligned
+    st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_fedavg_grouped_matches_masked_oracle(seed, G, ks, n, zsel):
+    ks = (ks * G)[:G]
+    p, w, mask, gmask, wsum, prev = _grouped_case(zsel, seed, G, ks, n)
+    want = ref.fedavg_masked(p, w, mask, prev)
+    got = ref.fedavg_grouped(p, w, gmask, wsum, prev)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 3),
+    st.integers(1, 200),
+    st.integers(1, 4),  # shard count
+)
+@settings(max_examples=25, deadline=None)
+def test_fedavg_grouped_shard_invariance(seed, G, n, n_shards):
+    """Splitting the columns into tile-aligned shards and aggregating each
+    independently is BITWISE identical to the unsharded oracle — the
+    invariant the column-sharded engine path (fl/engine.py agg="sharded")
+    rests on."""
+    ks = [2] * G
+    p, w, mask, gmask, wsum, prev = _grouped_case(1, seed, G, ks, n)
+    want = ref.fedavg_grouped(p, w, gmask, wsum, prev)
+    got = ref.fedavg_grouped_sharded(p, w, gmask, wsum, prev,
+                                     n_shards=n_shards)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 2),
+    st.integers(1, 128),
+)
+@settings(max_examples=8, deadline=None)
+def test_fedavg_grouped_kernel_matches_ref(seed, G, n):
+    """The Pallas kernel (interpret mode on CPU) against the jnp oracle at
+    hypothesis-driven non-tile-aligned shapes."""
+    from repro.kernels import fedavg as FK
+
+    ks = [2] * G
+    p, w, mask, gmask, wsum, prev = _grouped_case(1, seed, G, ks, n)
+    want = ref.fedavg_grouped(p, w, gmask, wsum, prev)
+    got = FK.fedavg_grouped(p, w, gmask, wsum, prev, bt=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# GroupLayout: scatter round-trip + column-shard partition invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.lists(st.integers(1, 8), min_size=1, max_size=4),  # per-group widths
+    st.integers(1, 4),  # shard count
+)
+@settings(max_examples=20, deadline=None)
+def test_group_layout_scatter_roundtrip(seed, widths, n_shards):
+    """Scattering each group's packed subtree through the layout's column
+    indices and gathering back must round-trip exactly; the group mask must
+    be the indicator of those indices; the column-shard partition must be
+    tile-aligned and cover every column exactly once."""
+    from repro.fl import engine as ENG
+    from repro.kernels.fedavg import AGG_TILE
+
+    d, out = 8, 3
+    rng = jax.random.PRNGKey(seed)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    plans = []
+    for gi, f in enumerate(widths):
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jnp.zeros((2, 4, d))
+        ys = jnp.zeros((2, 4))
+        rngs = jax.random.split(jax.random.fold_in(rng, gi), 2)
+        plans.append(ENG.GroupPlan(
+            lambda tr, fro, bn, xb, yb: (jnp.zeros(()), bn),
+            sub, {}, {}, xs, ys, rngs, jnp.ones((2,)), 0.1, 1, 4,
+        ))
+    layout = ENG.make_group_layout(plans, gtr, {})
+    if layout.identity:
+        return  # single full-width group: no indices to round-trip
+    for gi, plan in enumerate(plans):
+        spec = ENG.make_pack_spec(plan.trainable)
+        vec = jax.random.normal(jax.random.fold_in(rng, 50 + gi), (spec.n,))
+        flat = jnp.zeros((layout.n,)).at[layout.idx[gi]].set(vec)
+        np.testing.assert_array_equal(
+            np.asarray(flat[layout.idx[gi]]), np.asarray(vec)
+        )
+        indicator = np.zeros(layout.n, np.float32)
+        indicator[layout.idx[gi]] = 1.0
+        np.testing.assert_array_equal(
+            np.asarray(layout.gmask[gi]), indicator
+        )
+    cs = layout.column_shards(n_shards)
+    assert cs.n_shard % AGG_TILE == 0
+    assert cs.n_padded == cs.n_shard * n_shards >= layout.n
+    # shard ranges tile the padded column space exactly
+    covered = np.concatenate(
+        [np.arange(o, o + cs.n_shard) for o in cs.offsets]
+    )
+    np.testing.assert_array_equal(covered, np.arange(cs.n_padded))
 
 
 # ---------------------------------------------------------------------------
