@@ -22,7 +22,7 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     mask);
   * grouped-vs-masked round wall clock at G=4, K=16 within an
     interpret-mode tolerance (x1.35, one noise-absorbing retry);
-  * NEW (PR 4, the ``agg_compare`` record): the column-sharded aggregation
+  * the ``agg_compare`` record (PR 4): the column-sharded aggregation
     (``agg="sharded"``) keeps its per-device panel bytes within
     ``K·(n/D + AGG_TILE)`` — i.e. the replicated panel divided by the
     ``model``-axis device count D plus tile padding (read from the actual
@@ -32,10 +32,28 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     pins the padding overhead and the wall gate pins the shard_map
     orchestration overhead; on multi-device hardware the same gates verify
     the ÷D memory claim.
+  * NEW (PR 5): the TRANSIENT group-panel stream is gated too — the
+    shard-local stream's per-device bytes (``AGG_STATS
+    ["per_device_stream_elems"]``, read from the real transfer sharding)
+    must equal ``memory_model.agg_stream_elems_per_device`` and stay within
+    ``max_g K_g·(n_g/D + AGG_TILE)``; re-replicating the group panels
+    across the agg mesh fails this gate.
 
 The per-shard kernel launches a sharded round fans out to are recorded in
 the JSON under ``dispatches`` (``fedavg_grouped_shards`` = D per logical
-round) — see kernels/ops.py for the counter semantics.
+round; the streaming scatters under ``stream_scatter*``) — see
+kernels/ops.py for the counter semantics.
+
+``--compare SEED.json`` (PR 5, run by the slow CI job against the committed
+seed copy) turns the recorded trajectory into an enforced regression gate:
+after the run, every gated metric must stay within x1.5 (deterministic:
+membership staging elements, per-device panel/stream bytes) or x3 (wall
+clocks: grouped-round per matrix cell, the sharded/replicated overhead
+ratio — noise-padded for cross-machine comparison) of the seed record,
+else the process exits non-zero; a gated metric that DISAPPEARS from the fresh
+record fails rather than silently skipping.  Regenerate the seed copy
+(``--smoke --json BENCH_kernels.json``) when a PR legitimately moves a
+gated metric.
 """
 from __future__ import annotations
 
@@ -336,6 +354,14 @@ def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
     k_total, n = stats_s["k_total"], stats_s["n"]
     bytes_r = 4 * stats_r["per_device_panel_elems"]
     bytes_s = 4 * stats_s["per_device_panel_elems"]
+    layout = ENG.make_group_layout(plans, gtr, {})
+    kns = [(k, int(ix.size)) for k, ix in zip(layout.ks, layout.idx)]
+    stream_r = 4 * stats_r["per_device_stream_elems"]
+    stream_s = 4 * stats_s["per_device_stream_elems"]
+    stream_model = 4 * max(
+        MM.agg_stream_elems_per_device(k, n_g, n_devices=D, agg="sharded")
+        for k, n_g in kns
+    )
     res.update(
         G=G, k_total=k_total, n=n, n_shards=D,
         n_padded_sharded=stats_s["n_padded"],
@@ -344,12 +370,31 @@ def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
         per_device_panel_bytes_model=MM.server_aggregation_peak_bytes(
             k_total, n, G, n_devices=D, agg="sharded"
         ),
+        per_device_stream_bytes_replicated=stream_r,
+        per_device_stream_bytes_sharded=stream_s,
+        per_device_stream_bytes_model=stream_model,
+        stream_chunks_sharded=stats_s["stream_chunks"],
     )
     byte_bound = 4 * k_total * (-(-n // D) + AGG_TILE)
     assert bytes_s <= byte_bound, (
         f"column-sharded aggregation staged {bytes_s} panel bytes per "
         f"device, over the replicated/D + tile-padding bound {byte_bound} "
         f"(replicated panel is {bytes_r})"
+    )
+    # transient-stream gate: the shard-local stream's per-device bytes (read
+    # from the real transfer sharding) must match the analytic model and
+    # stay within max_g K_g*(n_g/D + AGG_TILE) — a silent re-replication of
+    # the group panels across the agg mesh fails here
+    stream_bound = 4 * max(k * (-(-n_g // D) + AGG_TILE) for k, n_g in kns)
+    assert stream_s == stream_model, (
+        f"measured per-device stream bytes {stream_s} != analytic model "
+        f"{stream_model} (memory_model.agg_stream_elems_per_device drifted "
+        f"from the engine's stream_plan)"
+    )
+    assert stream_s <= stream_bound, (
+        f"shard-local stream staged {stream_s} bytes per device, over the "
+        f"max_g K_g*(n_g/D + tile) bound {stream_bound} (a full group-panel "
+        f"replica would be {stream_r})"
     )
     assert res["dispatches"].get("fedavg_grouped") == 1
     assert res["dispatches"].get("fedavg_grouped_shards") == D
@@ -428,10 +473,105 @@ def _bench_kernel_compare(smoke: bool, sink: dict = None) -> dict:
     return res
 
 
+# --compare regression factors.  DETERMINISTIC metrics (staged elements,
+# per-device panel/stream bytes) regress only when the code regresses, so
+# they gate tight at x1.5.  WALL-CLOCK metrics compare a fresh CI-runner
+# measurement against a seed recorded on a different machine, with
+# co-tenant noise on top — the recorded trajectory itself shows >2x
+# same-machine swings (grouped_us vs grouped_us_retry in one run) — so they
+# gate at x3: loose enough to survive a shared-runner spike, tight enough
+# to catch a step-function regression (losing donation/pipelining costs
+# more than 3x).  The fresh side additionally uses the smoke gate's retry
+# re-measure when one was taken (min of the two), never the seed side.
+COMPARE_FACTOR = 1.5
+COMPARE_WALL_FACTOR = 3.0
+
+# gated metrics for --compare: (key, is_wall_clock).  The agg comparison is
+# gated on the sharded/replicated overhead RATIO, not the absolute wall
+# clocks: both sides are timed seconds apart in the same run, so machine-
+# load noise is common-mode and cancels in the ratio (observed: a 4x
+# absolute swing with the ratio stable), while the absolute round time at
+# the same cell is already gated via grouped_rounds[G=4,kpg=4].grouped_us.
+COMPARE_AGG_KEYS = (("overhead_sharded_vs_replicated", True),
+                    ("per_device_panel_bytes_sharded", False),
+                    ("per_device_stream_bytes_sharded", False))
+COMPARE_CELL_KEYS = (("grouped_us", True), ("staged_grouped_elems", False))
+COMPARE_KERNEL_KEYS = (("grouped_us", True),)
+
+
+def compare_trajectories(new: dict, seed: dict,
+                         factor: float = COMPARE_FACTOR,
+                         wall_factor: float = COMPARE_WALL_FACTOR):
+    """Regression gate for ``--compare``: check every gated metric of the
+    fresh record against the committed seed trajectory and return
+    ``(failures, n_checked)``.  A metric regresses when it exceeds
+    ``factor ×`` (deterministic) / ``wall_factor ×`` (wall clock) its seed
+    value.  The skip rules are ASYMMETRIC: metrics missing from the SEED
+    copy (an older schema) are skipped so extending the record never breaks
+    the gate, but a gated metric present in the seed and missing from the
+    fresh record FAILS — a refactor that renames a key or drops a record
+    section must not silently disable the gate.  Only same-backend records
+    are comparable — wall clocks from a TPU seed mean nothing on a CPU
+    runner."""
+    fails: list = []
+    checked = [0]
+
+    def check(name, new_v, seed_v, wall):
+        if seed_v is None or seed_v <= 0:
+            return  # not in the seed (older schema): legitimately skippable
+        if new_v is None:
+            fails.append(
+                f"{name}: missing from the fresh record (seed has "
+                f"{seed_v:.1f}) — gated metrics must not silently disappear"
+            )
+            return
+        checked[0] += 1
+        f = wall_factor if wall else factor
+        if new_v > seed_v * f:
+            fails.append(
+                f"{name}: {new_v:.1f} > x{f} seed {seed_v:.1f}"
+            )
+
+    if new.get("backend") != seed.get("backend"):
+        return ([f"backend mismatch: new={new.get('backend')!r} "
+                 f"seed={seed.get('backend')!r} — regenerate the seed copy "
+                 f"on the comparison backend"], 0)
+    # iterate the SEED's cells so a shrunken fresh matrix fails instead of
+    # silently skipping the dropped cells
+    new_cells = {(c["G"], c["k_per_group"]): c
+                 for c in new.get("grouped_rounds", {}).get("cells", [])}
+    for key, s in (
+        ((c["G"], c["k_per_group"]), c)
+        for c in seed.get("grouped_rounds", {}).get("cells", [])
+    ):
+        c = new_cells.get(key)
+        tag = f"grouped_rounds[G={key[0]},kpg={key[1]}]"
+        if c is None:
+            fails.append(f"{tag}: cell missing from the fresh record")
+            continue
+        for mkey, wall in COMPARE_CELL_KEYS:
+            new_v = c.get(mkey)
+            if wall:
+                # the smoke gate re-measures a noisy cell once; gate on the
+                # better of the two fresh measurements
+                retry = c.get(mkey + "_retry")
+                if new_v is not None and retry is not None:
+                    new_v = min(new_v, retry)
+            check(f"{tag}.{mkey}", new_v, s.get(mkey), wall)
+    na, sa = new.get("agg_compare", {}), seed.get("agg_compare", {})
+    for mkey, wall in COMPARE_AGG_KEYS:
+        check(f"agg_compare.{mkey}", na.get(mkey), sa.get(mkey), wall)
+    nk, sk = new.get("kernel_compare", {}), seed.get("kernel_compare", {})
+    for mkey, wall in COMPARE_KERNEL_KEYS:
+        check(f"kernel_compare.{mkey}", nk.get(mkey), sk.get(mkey), wall)
+    return fails, checked[0]
+
+
 def main() -> None:
     """CI smoke entry: run the grouped-round matrix (with its dispatch,
     staging, and wall-clock gates) plus the kernel comparison, fast enough
-    for the slow job; ``--json`` persists the trajectory."""
+    for the slow job; ``--json`` persists the trajectory; ``--compare``
+    turns the committed trajectory into an enforced regression gate."""
     import argparse
 
     ap = argparse.ArgumentParser()
@@ -442,6 +582,13 @@ def main() -> None:
                     help="write the benchmark trajectory (kernel compare, "
                          "grouped-round matrix, staging/dispatch counts) "
                          "to PATH, e.g. BENCH_kernels.json")
+    ap.add_argument("--compare", metavar="SEED", default=None,
+                    help="after the run, gate the fresh record against this "
+                         "recorded trajectory (the committed "
+                         "BENCH_kernels.json): exit non-zero when any gated "
+                         f"metric regresses beyond x{COMPARE_FACTOR} "
+                         f"(deterministic) / x{COMPARE_WALL_FACTOR} (wall "
+                         "clock) or disappears from the record")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     record = {
@@ -466,6 +613,18 @@ def main() -> None:
                 json.dump(record, f, indent=1, default=float)
                 f.write("\n")
             print(f"wrote {args.json}")
+    if args.compare:
+        with open(args.compare) as f:
+            seed = json.load(f)
+        fails, n_checked = compare_trajectories(record, seed)
+        if fails:
+            print(f"BENCH COMPARE: {len(fails)} regression(s) vs "
+                  f"{args.compare}")
+            for line in fails:
+                print("  " + line)
+            raise SystemExit(1)
+        print(f"bench compare vs {args.compare}: green "
+              f"({n_checked} gated metrics)")
 
 
 if __name__ == "__main__":

@@ -5,9 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import blocks as B
 from repro.core.effective_movement import EMConfig
-from repro.fl.server import FLConfig, ProFLServer
+from repro.fl.server import ProFLServer
 from repro.models import cnn as CN
 
 from benchmarks import common as C

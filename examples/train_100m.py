@@ -14,7 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, register
+from repro.configs.base import ArchConfig
 from repro.core import blocks as B
 from repro.core import progressive as P
 from repro.models import transformer as T

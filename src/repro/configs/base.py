@@ -12,7 +12,7 @@ starts; block ``t`` covers groups ``[b[t], b[t+1])``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------

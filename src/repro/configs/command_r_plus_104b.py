@@ -4,7 +4,7 @@
 parallel attention/FFN residual block, tied embeddings, LayerNorm.
 [hf:CohereForAI/c4ai-command-r-v01]
 """
-from repro.configs.base import ArchConfig, LayerSpec, register
+from repro.configs.base import ArchConfig, register
 
 CONFIG = register(
     ArchConfig(

@@ -6,7 +6,7 @@ with 1 shared expert; early-fusion multimodal (vision frontend stubbed per
 the assignment — this config is the language backbone).
 [hf:meta-llama/Llama-4-Scout-17B-16E]
 """
-from repro.configs.base import ArchConfig, FrontendCfg, LayerSpec, MoECfg, register
+from repro.configs.base import ArchConfig, LayerSpec, MoECfg, register
 
 CONFIG = register(
     ArchConfig(

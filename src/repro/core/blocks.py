@@ -13,7 +13,6 @@ from __future__ import annotations
 from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 

@@ -14,7 +14,7 @@ norm+MLP layer at d_ff = d_model (a cheap stand-in keeping depth position);
 from __future__ import annotations
 
 import math
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

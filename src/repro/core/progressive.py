@@ -24,13 +24,11 @@ from __future__ import annotations
 from typing import Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import blocks as B
 from repro.core import output_module as OM
 from repro.models import cnn as C
-from repro.models import layers as L
 from repro.models import transformer as T
 from repro.train.optimizer import Optimizer
 from repro.train.train_step import MOE_AUX_COEF, softmax_xent

@@ -30,8 +30,6 @@ HeteroFL the old "widest group defines bn" rule.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -83,28 +83,74 @@ Column-sharded aggregation (the ``agg`` knob)
   are split into :data:`repro.kernels.fedavg.AGG_TILE`-aligned blocks
   (:meth:`GroupLayout.column_shards` caches the per-shard offsets), group
   panels stream into the per-shard buffers via shard-local
-  ``dynamic_update_slice`` scatters (each device keeps only the group
-  columns inside its block), and ``kernels.ops.fedavg_grouped_sharded``
+  ``dynamic_update_slice`` scatters, and ``kernels.ops.fedavg_grouped_sharded``
   runs the UNCHANGED shard-local kernel per device — the full shared panel
   never materializes anywhere, PERSISTENT per-device peak drops to
   ``≈ K_total·n/D`` (fl/memory_model.py::server_aggregation_peak_bytes
-  models both modes).  Caveat: each finished ``[K_g, n_g]`` GROUP panel is
-  still replicated across the agg mesh while it streams into the per-shard
-  buffers, so the TRANSIENT per-device peak adds ``max_g K_g·n_g`` — small
-  for genuinely heterogeneous cohorts (every group is a width/depth
-  fraction), but approaching ``K·n`` again if one near-full-width group
-  dominates the cohort; sharding the stream itself is a ROADMAP item.
+  models both modes).  The STREAM is shard-local too (see below): each
+  finished ``[K_g, n_g]`` group panel is sliced per column shard on its
+  SOURCE device(s) and each agg device receives only the group columns
+  inside its own block, so the transient per-device peak is bounded by
+  ``max_g K_g·(⌈n_g/D⌉ tile-aligned)`` — never the ``max_g K_g·n_g`` full
+  replica a near-full-width majority group used to push back toward
+  ``K·n``.
 * ``"auto"``      — ``sharded`` when a multi-device ``model`` axis is
   available, else ``replicated``.
+
+Shard-local group-panel streaming
+--------------------------------
+Under ``agg="sharded"`` the per-group stream is sharded end-to-end.  For
+each group, :meth:`GroupLayout.stream_plan` partitions the group's global
+column indices by destination column shard (host metadata, cached), and the
+engine then
+
+1. GATHERS each shard's columns out of the finished ``[K_g, n_g]`` panel on
+   the panel's OWN source device(s) (``_stream_gather`` — the sub-mesh that
+   ran the group's local SGD, or the default device in packed mode),
+   producing a ``[D, K_g, m]`` selection buffer whose row ``d`` holds
+   exactly the columns shard ``d`` owns;
+2. lands that buffer axis-0-sharded over the agg mesh's ``model`` axis
+   (``launch/mesh.py::put_model_sharded`` — one async ``device_put``; each
+   agg device receives ONLY its ``[1, K_g, m]`` slice, never a replica);
+3. scatters it shard-locally (``kernels.ops.scatter_stream_sharded``:
+   read-modify-write of the donated per-shard panel block, out-of-range
+   padding columns dropped device-side).
+
+``m`` is capped at ``min(n_g, ⌈⌈n_g/D⌉/tile⌉·tile)``: when a group's
+columns concentrate on few shards (a DepthFL prefix group lives entirely in
+the leading shards), the stream is split into ≤ D passes of ``m`` columns
+instead of one wide slice, so each PASS stages at most ``K_g·m`` elements
+per device regardless of how the layout distributes — that per-pass figure
+is what ``AGG_STATS`` measures and the memory model pins.  The passes are
+async-dispatched like everything else (the round still syncs once) and
+each device consumes its scatters in enqueue order, freeing a pass's
+buffer as its scatter retires; transfers are not host-paced, though, so a
+multi-pass stream whose transfers race far ahead of the scatter chain can
+transiently hold several passes' buffers at once (worst case back to
+``≈ K_g·n_g`` on the owning device — still never on every device the way
+the replicated stream was).  Two knowingly-accepted trade-offs of the
+uniform axis-0-split transfer, revisit on real multi-chip hardware (see
+ROADMAP): that pacing race, and the fact that every pass ships a (pad)
+row to every shard, so a fully concentrated group moves up to D× its
+useful bytes in aggregate — balanced groups (HeteroFL widths, the common
+case) take one pass at ~full utilization and pay neither cost.
 
 The one-logical-dispatch / one-``block_until_ready`` contract is agg-mode
 independent: ``DISPATCHES["fedavg_grouped"]`` still counts 1 per round, and
 the per-shard kernel launches that one logical dispatch fans out to are
 recorded separately under ``DISPATCHES["fedavg_grouped_shards"]`` (D per
-round).  ``AGG_STATS`` exposes the last round's per-device panel footprint
-from sharding METADATA only (no device sync).  The single-group identity
-fast path keeps the PR 1 packed/sharded round regardless of ``agg`` — its
-panel has no group structure to column-shard.
+round); the streaming scatters are counted under
+``DISPATCHES["stream_scatter"]``/``["stream_scatter_shards"]``.
+``AGG_STATS`` exposes the last round's per-device panel footprint from
+sharding METADATA only (no device sync), plus the transient-stream fields:
+``stream`` (placement mode), ``per_device_stream_elems`` (max per-device
+footprint of any streamed group buffer, read from the real transfer
+sharding — ``max_g K_g·n_g`` replicated, ``≤ max_g K_g·(⌈n_g/D⌉
+tile-aligned)`` sharded), and ``stream_chunks`` (total scatter passes).
+``fl/memory_model.py::agg_stream_elems_per_device`` models the same bound
+and tests/test_contract.py pins model == measurement.  The single-group
+identity fast path keeps the PR 1 packed/sharded round regardless of
+``agg`` — its panel has no group structure to column-shard.
 
 The serial per-group oracle (``impl="serial"``, default under the ``vmap``
 mode) runs each group through ``client.cohort_round`` and accumulates the
@@ -221,7 +267,6 @@ def clear_caches() -> None:
     _SUBMESH_CACHE.clear()
     _slice_index.cache_clear()
     _sharded_zeros_fn.cache_clear()
-    _sharded_scatter_fn.cache_clear()
     ops.clear_shard_caches()
     AGG_STATS.clear()
     from repro.fl import baselines as _bl
@@ -504,6 +549,35 @@ class ColumnShards:
     offsets: Tuple[int, ...]  # global start column of each shard
 
 
+@dataclass(frozen=True)
+class StreamPlan:
+    """Shard-local streaming plan for one group's ``[K_g, n_g]`` panel into
+    the column-sharded shared panel: the group's global column indices are
+    partitioned by destination column shard and split into ``n_chunks``
+    passes of at most ``m_chunk`` columns per shard, so no single pass
+    lands more than ``K_g·m_chunk`` elements of the group panel on an agg
+    device.
+
+    ``m_chunk = min(n_g, ⌈⌈n_g/D⌉/tile⌉·tile)`` — the tile-aligned even
+    share — which makes the PER-PASS per-device stream bound
+    ``K_g·n_g/D + K_g·tile`` hold regardless of how the group's columns
+    distribute over the shards (a concentrated group just takes more
+    passes, up to D of them; see the module docstring for the transfer-
+    pacing caveat on simultaneous pass residency).
+
+    ``src[c, d]`` are the source columns (positions in the group panel)
+    shard ``d`` receives in pass ``c``; ``dst[c, d]`` the matching local
+    columns inside shard ``d``'s block.  Unused slots are padded with
+    ``n_g`` / ``n_shard`` respectively — the scatter drops them device-side
+    (``mode="drop"``)."""
+
+    n_shards: int
+    m_chunk: int
+    n_chunks: int
+    src: np.ndarray  # [n_chunks, D, m_chunk] int32, pad = n_g
+    dst: np.ndarray  # [n_chunks, D, m_chunk] int32, pad = n_shard
+
+
 @dataclass
 class GroupLayout:
     """Cached scatter plan for one (global trees, group structures) combo:
@@ -524,6 +598,8 @@ class GroupLayout:
     _idx_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy device indices
     _col_shards: Optional[dict] = None  # (n_shards, tile) -> ColumnShards
     _gmask_sharded: Optional[dict] = None  # mesh device ids -> sharded gmask
+    _stream_plans: Optional[dict] = None  # (gi, n_shards, tile) -> StreamPlan
+    _stream_dev: Optional[dict] = None  # (gi, mesh key) -> (src, dst) buffers
 
     @property
     def n_groups(self) -> int:
@@ -609,16 +685,79 @@ class GroupLayout:
             self._gmask_sharded[key] = gm
         return gm
 
+    def stream_plan(self, gi: int, n_shards: int,
+                    tile: int = AGG_TILE) -> StreamPlan:
+        """Cached :class:`StreamPlan` for group ``gi`` over ``n_shards``
+        column shards (host metadata only): partition the group's global
+        column indices by destination shard and chunk each shard's share to
+        at most ``m_chunk`` columns per pass."""
+        if self._stream_plans is None:
+            self._stream_plans = {}
+        key = (gi, n_shards, tile)
+        sp = self._stream_plans.get(key)
+        if sp is None:
+            cs = self.column_shards(n_shards, tile)
+            ix = self.idx[gi]
+            n_g = int(ix.size)
+            even = -(-n_g // n_shards)  # ceil(n_g / D)
+            m_chunk = min(n_g, -(-even // tile) * tile)
+            if m_chunk == 0:  # empty group tree: nothing to stream
+                sp = StreamPlan(n_shards, 0, 0,
+                                np.zeros((0, n_shards, 0), np.int32),
+                                np.zeros((0, n_shards, 0), np.int32))
+            else:
+                sels = [
+                    np.nonzero((ix >= off) & (ix < off + cs.n_shard))[0]
+                    for off in cs.offsets
+                ]
+                n_chunks = max(-(-s.size // m_chunk) for s in sels)
+                src = np.full((n_chunks, n_shards, m_chunk), n_g, np.int32)
+                dst = np.full((n_chunks, n_shards, m_chunk), cs.n_shard,
+                              np.int32)
+                for d, sel in enumerate(sels):
+                    for c in range(-(-sel.size // m_chunk)):
+                        part = sel[c * m_chunk:(c + 1) * m_chunk]
+                        src[c, d, : part.size] = part
+                        dst[c, d, : part.size] = ix[part] - cs.offsets[d]
+                sp = StreamPlan(n_shards, m_chunk, n_chunks, src, dst)
+            self._stream_plans[key] = sp
+        return sp
+
+    def stream_buffers(self, gi: int, mesh: Mesh, tile: int = AGG_TILE):
+        """Device-staged per-pass ``(src, dst)`` index buffers for streaming
+        group ``gi`` onto ``mesh``'s ``model`` axis, cached so rounds never
+        re-upload them.  Each ``src`` is an UNCOMMITTED ``[D, m]`` int32 —
+        it must follow the group panel's placement into the source-side
+        gather jit, wherever local SGD ran — while each matching ``dst`` is
+        COMMITTED axis-0-sharded on the agg mesh for the shard-local
+        scatter."""
+        if self._stream_dev is None:
+            self._stream_dev = {}
+        key = (gi, tuple(d.id for d in mesh.devices.reshape(-1)),
+               mesh.shape["model"], tile)
+        bufs = self._stream_dev.get(key)
+        if bufs is None:
+            sp = self.stream_plan(gi, mesh.shape["model"], tile)
+            sh = NamedSharding(mesh, P("model", None))
+            bufs = (
+                tuple(jnp.asarray(sp.src[c]) for c in range(sp.n_chunks)),
+                tuple(jax.device_put(sp.dst[c], sh)
+                      for c in range(sp.n_chunks)),
+            )
+            self._stream_dev[key] = bufs
+        return bufs
+
     def drop_device_buffers(self) -> None:
         """Release the lazily-built device buffers (group mask — replicated
-        and column-sharded — legacy per-client mask, scatter indices).
-        Called by :func:`clear_caches` on every cached layout so a layout
-        reference that outlives its cache entry cannot pin mask/index
-        buffers for the rest of the session."""
+        and column-sharded — legacy per-client mask, scatter indices, stream
+        src/dst index buffers).  Called by :func:`clear_caches` on every
+        cached layout so a layout reference that outlives its cache entry
+        cannot pin mask/index buffers for the rest of the session."""
         self._gmask = None
         self._legacy_mask = None
         self._idx_dev = None
         self._gmask_sharded = None
+        self._stream_dev = None
 
 
 _LAYOUT_CACHE: BoundedCache = BoundedCache(
@@ -788,33 +927,18 @@ def _sharded_zeros_fn(shape: Tuple[int, ...], sharding: NamedSharding):
                    out_shardings=sharding)
 
 
-@functools.lru_cache(maxsize=32)
-def _sharded_scatter_fn(mesh: Mesh):
-    """Per-shard version of :func:`_scatter_group_panel` for the
-    column-sharded panel: under ``shard_map`` over the ``model`` axis, each
-    device rewrites the group's global column indices into its own
-    tile-aligned column range (out-of-range columns are DROPPED, so a device
-    touches only the group columns it owns), then lands the rows with
-    ``dynamic_update_slice``.  The sharded panel buffer is donated — the
-    update happens in place per shard, and group panels stream straight
-    into the per-shard buffers without ever forming the full panel."""
-
-    def scatter(panel, gpanel, ix, row):
-        def shard(pnl, gp, ixl, rowl):
-            n_shard = pnl.shape[1]
-            local = ixl - jax.lax.axis_index("model") * n_shard
-            local = jnp.where((local >= 0) & (local < n_shard), local, n_shard)
-            block = jnp.zeros((gp.shape[0], n_shard), pnl.dtype)
-            block = block.at[:, local].set(gp, mode="drop")
-            return jax.lax.dynamic_update_slice(pnl, block, (rowl, 0))
-
-        return shard_map(
-            shard, mesh=mesh,
-            in_specs=(P(None, "model"), P(), P(), P()),
-            out_specs=P(None, "model"), check_rep=False,
-        )(panel, gpanel, ix, row)
-
-    return jax.jit(scatter, donate_argnums=(0,))
+@jax.jit
+def _stream_gather(gpanel, src):
+    """Source-side slice of one group's ``[K_g, n_g]`` panel for ONE stream
+    pass: row ``d`` of the ``[D, K_g, m]`` result holds exactly the group
+    columns column-shard ``d`` owns this pass (``src`` from
+    :meth:`GroupLayout.stream_plan`).  Runs where the group panel already
+    lives (the group's sub-mesh, or the default device in packed mode) —
+    the full panel is never copied off its source; only these slices are
+    transferred, shard-to-owner, by ``launch/mesh.py::put_model_sharded``.
+    Padded ``src`` slots clip-gather garbage that the shard-local scatter
+    drops via their out-of-range ``dst``."""
+    return jnp.take(gpanel, src, axis=1, mode="clip").transpose(1, 0, 2)
 
 
 def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
@@ -832,8 +956,10 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     aggregation: ``"replicated"`` collects the full [K_total, n] panel onto
     one device (the PR 3 behavior); ``"sharded"`` column-shards the panel
     over ``agg_mesh``'s ``model`` axis — the panel is created already
-    sharded, scatters are shard-local, and the one logical dispatch lowers
-    to one shard-local kernel launch per device (see the module docstring).
+    sharded, the group-panel STREAM is sliced per shard on its source
+    device(s) so each agg device only ever receives its own columns,
+    scatters are shard-local, and the one logical dispatch lowers to one
+    shard-local kernel launch per device (see the module docstring).
     """
     if layout.identity:
         # degenerate single-group round (every ProFL round): the mask is all
@@ -859,18 +985,22 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     submeshes = _group_submeshes(mesh, layout.ks) if mesh is not None else None
     dev0 = mesh.devices.reshape(-1)[0] if submeshes is not None else None
     if sharded:
+        from repro.launch.mesh import put_model_sharded
+
         cs = layout.column_shards(agg_mesh.shape["model"])
+        # replication sharding for the tiny [K_g] loss vectors ONLY — the
+        # group panels themselves are never replicated across the agg mesh
         repl = NamedSharding(agg_mesh, P())
         panel = _sharded_zeros_fn(
             (layout.k_total, cs.n_padded),
             NamedSharding(agg_mesh, P(None, "model")),
         )()
-        scatter = _sharded_scatter_fn(agg_mesh)
     else:
         panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
-        scatter = _scatter_group_panel
     group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
     losses = []
+    stream_elems = 0  # max per-device footprint of any streamed group buffer
+    stream_chunks = 0
     for gi, plan in enumerate(plans):
         kw = dict(lr=plan.lr, local_steps=plan.local_steps,
                   batch_size=plan.batch_size)
@@ -901,11 +1031,30 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                 plan.xs, plan.ys, plan.rngs, **kw,
             )
         if sharded:
-            # replicate the [K_g, n_g] group panel across the agg mesh (an
-            # async transfer that pipelines like the dev0 collection above);
-            # the shard-local scatter then keeps only each device's columns
-            gpanel = jax.device_put(gpanel, repl)
-        panel = scatter(panel, gpanel, layout.idx_dev[gi], layout.rows[gi])
+            # shard-local stream: slice the finished [K_g, n_g] panel per
+            # column shard ON ITS SOURCE device(s), land each pass's
+            # [D, K_g, m] selection axis-0-sharded over the agg mesh (one
+            # async device_put; each agg device receives ONLY its own
+            # columns — never a full group-panel replica), then scatter
+            # shard-locally.  All passes pipeline behind the other groups'
+            # local SGD like the old replicated stream did.
+            src_bufs, dst_bufs = layout.stream_buffers(gi, agg_mesh)
+            for src_c, dst_c in zip(src_bufs, dst_bufs):
+                sel = put_model_sharded(_stream_gather(gpanel, src_c),
+                                        agg_mesh)
+                stream_elems = max(stream_elems, math.prod(
+                    sel.sharding.shard_shape(sel.shape)
+                ))
+                stream_chunks += 1
+                panel = ops.scatter_stream_sharded(
+                    panel, sel, dst_c, layout.rows[gi], mesh=agg_mesh
+                )
+        else:
+            stream_elems = max(stream_elems,
+                               gpanel.shape[0] * gpanel.shape[1])
+            stream_chunks += 1
+            panel = _scatter_group_panel(panel, gpanel, layout.idx_dev[gi],
+                                         layout.rows[gi])
         losses.append(loss)
     w = jnp.concatenate(group_w)
     wsum = jnp.stack([jnp.sum(gw) for gw in group_w])
@@ -918,6 +1067,14 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
         per_device_panel_elems=math.prod(
             panel.sharding.shard_shape(panel.shape)
         ),
+        # transient-stream telemetry, from transfer-sharding metadata only:
+        # the largest per-device footprint any streamed group buffer had
+        # while scattering into the shared panel, and the number of scatter
+        # passes it took (sharded streams of a concentrated group split
+        # into multiple m_chunk-column passes to keep the bound)
+        stream="sharded" if sharded else "replicated",
+        per_device_stream_elems=stream_elems,
+        stream_chunks=stream_chunks,
     )
     if sharded:
         pad = cs.n_padded - layout.n

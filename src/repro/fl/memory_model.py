@@ -26,7 +26,6 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core import output_module as OM
 from repro.models import cnn as C
 
 BYTES = 4
@@ -157,7 +156,6 @@ def depth_for_budget(
 ) -> int:
     """DepthFL: number of leading blocks (with their classifier) whose
     training fits. 0 = cannot train even one block."""
-    feat = 0
     for d in range(cfg.n_prog_blocks, 0, -1):
         mem = _depthfl_memory_mb(cfg, d, batch=batch)
         if mem <= budget_mb:
@@ -190,6 +188,39 @@ def agg_columns_per_device(n: int, *, n_devices: int = 1,
     return -(-n_cols // tile) * tile
 
 
+def agg_stream_cols_per_device(n_g: int, *, n_devices: int = 1,
+                               agg: str = "replicated",
+                               tile: int = AGG_TILE) -> int:
+    """Columns of one group's ``[K_g, n_g]`` panel transiently resident on
+    ONE agg device PER STREAM PASS while the group streams into the shared
+    panel: all ``n_g`` when replicated (the whole panel lands on the
+    aggregation device), the tile-aligned even share
+    ``min(n_g, ⌈⌈n_g/D⌉/tile⌉·tile)`` under the shard-local stream
+    (fl/engine.py::GroupLayout.stream_plan uses the same ``m_chunk`` — a
+    concentrated group streams in ≤ D passes of that width instead of one
+    wide slice; the engine's module docstring records the transfer-pacing
+    caveat on multiple passes being resident at once)."""
+    if agg == "replicated":
+        return n_g
+    if agg != "sharded":
+        raise ValueError(f"unknown agg mode {agg!r}")
+    even = -(-max(n_g, 0) // n_devices)
+    return min(n_g, -(-even // tile) * tile)
+
+
+def agg_stream_elems_per_device(k_g: int, n_g: int, *, n_devices: int = 1,
+                                agg: str = "replicated",
+                                tile: int = AGG_TILE) -> int:
+    """Per-device transient elements of one group's stream buffer —
+    ``K_g`` rows × :func:`agg_stream_cols_per_device` columns.  The engine
+    records the measured counterpart in ``engine.AGG_STATS
+    ["per_device_stream_elems"]`` (max over the round's groups, from the
+    real transfer sharding); tests/test_contract.py pins the two equal."""
+    return k_g * agg_stream_cols_per_device(
+        n_g, n_devices=n_devices, agg=agg, tile=tile
+    )
+
+
 def server_aggregation_peak_bytes(
     k_total: int,
     n: int,
@@ -197,6 +228,7 @@ def server_aggregation_peak_bytes(
     *,
     n_devices: int = 1,
     agg: str = "replicated",
+    groups: Optional[List[tuple]] = None,
     tile: int = AGG_TILE,
     elem_bytes: int = 4,
 ) -> int:
@@ -215,14 +247,26 @@ def server_aggregation_peak_bytes(
     single-device bottleneck the paper's memory-wall argument left open on
     the server tier.
 
-    This models the PERSISTENT buffers.  The sharded engine additionally
-    holds one group's ``[K_g, n_g]`` panel replicated per device while it
-    streams into the shard buffers (transient ``max_g K_g·n_g`` elements on
-    top of the figure returned here — see the fl/engine.py module
-    docstring's caveat)."""
+    When ``groups`` is given — a sequence of per-group ``(K_g, n_g)`` pairs
+    — the figure additionally includes the STREAM term: the transient
+    per-device footprint of the largest group panel while it streams into
+    the shared panel, ``max_g`` :func:`agg_stream_elems_per_device`.  Under
+    the shard-local stream (``agg="sharded"``) that is
+    ``max_g K_g·n_g/D + tile padding`` — the group panels are sliced per
+    column shard on their source devices, so a near-full-width majority
+    group can no longer transiently re-approach ``K·n`` on one agg device
+    the way the PR 4 replicated stream allowed.  Without ``groups`` the
+    figure covers the persistent buffers only (the PR 4 behavior)."""
     n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg, tile=tile)
+    stream = max(
+        (agg_stream_elems_per_device(kg, ng, n_devices=n_devices, agg=agg,
+                                     tile=tile)
+         for kg, ng in groups),
+        default=0,
+    ) if groups else 0
     return elem_bytes * (
         k_total * n_dev + n_groups * n_dev + 4 * n_dev + k_total + n_groups
+        + stream
     )
 
 

@@ -23,7 +23,10 @@ logical ``fedavg_grouped``/``fedavg_masked`` dispatch per call — the
 round-level contract is unchanged — and additionally record the per-shard
 kernel launches that one logical dispatch lowers to (one per device of the
 ``model`` mesh axis) under the ``*_shards`` keys, so benchmarks can report
-fan-out without weakening the one-dispatch assertion.  ``STAGED`` counts
+fan-out without weakening the one-dispatch assertion.  The shard-local
+group-panel stream scatters (``scatter_stream_sharded``) are counted under
+``stream_scatter``/``stream_scatter_shards`` — data movement, never part of
+the one-aggregation-dispatch contract.  ``STAGED`` counts
 membership metadata elements staged per aggregation kernel (the dense
 ``[K, n]`` mask for ``fedavg_masked``; the compact ``[G, n]`` group mask +
 ``[G]`` weight sums for ``fedavg_grouped``, padded-to-tile for the sharded
@@ -276,10 +279,64 @@ def _sharded_agg_call(mesh: Mesh, kind: str, impl: str):
     ))
 
 
+@functools.lru_cache(maxsize=32)
+def _stream_scatter_call(mesh: Mesh):
+    """Cached jitted shard_map of the shard-local group-panel stream scatter
+    over the ``model`` mesh axis (see :func:`scatter_stream_sharded`)."""
+
+    def scatter(panel, sel, dst, row):
+        def shard(pnl, gp, dl, rowl):
+            # gp [1, K_g, m]: this device's pre-sliced group columns for the
+            # pass; dl [1, m]: their local columns inside this shard's
+            # block (pad = n_shard -> dropped).  Read-modify-write of the
+            # group's row block so multi-pass streams compose — the donated
+            # panel makes it an in-place update.
+            blk = jax.lax.dynamic_slice(
+                pnl, (rowl, 0), (gp.shape[1], pnl.shape[1])
+            )
+            blk = blk.at[:, dl[0]].set(gp[0], mode="drop")
+            return jax.lax.dynamic_update_slice(pnl, blk, (rowl, 0))
+
+        return shard_map(
+            shard, mesh=mesh,
+            in_specs=(P(None, "model"), P("model"), P("model"), P()),
+            out_specs=P(None, "model"), check_rep=False,
+        )(panel, sel, dst, row)
+
+    # only the panel is donated: sel has no matching output to alias into
+    # (XLA frees it after the read anyway), and dst is a cached buffer
+    return jax.jit(scatter, donate_argnums=(0,))
+
+
+def scatter_stream_sharded(
+    panel,  # [K_total, n_padded] shared panel, column-sharded P(None, "model")
+    sel,  # [D, K_g, m] pre-sliced group columns, axis-0-sharded P("model")
+    dst,  # [D, m] local destination columns per shard, axis-0-sharded
+    row: int,  # the group's row offset in the shared panel
+    *,
+    mesh: Mesh,
+):
+    """Shard-local scatter of one stream pass of a group panel into the
+    column-sharded shared panel: each device of ``mesh``'s ``model`` axis
+    receives ONLY the group columns it owns (``sel`` row ``d``, sliced on
+    the group panel's source device by fl/engine.py::_stream_gather) and
+    lands them at ``dst`` inside its own block — no ``[K_g, n_g]`` replica
+    ever exists on an agg device.  The panel is donated (in-place update);
+    ``dst`` is the layout's cached per-mesh index buffer and must NOT be
+    donated.  Accounting: one ``stream_scatter`` entry
+    per pass plus ``stream_scatter_shards`` += D for the per-shard updates
+    (scatters are data movement, not aggregation dispatches — the
+    one-``fedavg_grouped``-dispatch round contract does not count them)."""
+    DISPATCHES["stream_scatter"] += 1
+    DISPATCHES["stream_scatter_shards"] += mesh.shape["model"]
+    return _stream_scatter_call(mesh)(panel, sel, dst, row)
+
+
 def clear_shard_caches() -> None:
-    """Drop the cached shard_map'd aggregation executables (they hold mesh
-    references).  Wired into fl/engine.py::clear_caches."""
+    """Drop the cached shard_map'd aggregation + stream-scatter executables
+    (they hold mesh references).  Wired into fl/engine.py::clear_caches."""
     _sharded_agg_call.cache_clear()
+    _stream_scatter_call.cache_clear()
 
 
 def fedavg_grouped_sharded(

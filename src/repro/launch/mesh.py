@@ -64,6 +64,31 @@ def make_fl_cohort_mesh(n_clients: int | None = None, n_model: int = 1):
     return jax.make_mesh((max(1, nc), n_model), ("clients", "model"))
 
 
+def model_stream_sharding(mesh, ndim: int = 3):
+    """``NamedSharding`` that splits axis 0 of a ``[D, ...]`` stream buffer
+    across ``mesh``'s ``model`` axis (the remaining axes replicated — each
+    of the D devices owns exactly its own leading slice).  This is the
+    transfer layout of the shard-local group-panel stream (fl/engine.py
+    ``agg="sharded"``): the per-shard column selections gathered on a
+    group's source device land with this sharding, so no agg device ever
+    receives more than its own ``[1, ...]`` slice."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return NamedSharding(
+        mesh, PartitionSpec("model", *([None] * (ndim - 1)))
+    )
+
+
+def put_model_sharded(x, mesh):
+    """Sub-mesh → agg-mesh transfer helper for composed ``clients × model``
+    rounds: land ``x`` (committed anywhere — a group's ``clients`` sub-mesh,
+    the default device in packed mode) on ``mesh`` with axis 0 split over
+    the ``model`` axis.  One async ``device_put``; jax moves each axis-0
+    slice straight to its owning device, so the buffer is never replicated
+    across the aggregation mesh the way a ``P()`` placement would."""
+    return jax.device_put(x, model_stream_sharding(mesh, x.ndim))
+
+
 def make_fl_production_mesh(*, n_client_shards: int = 16, n_model: int = 16):
     """Production FL mesh: cohort clients sharded across ``clients``,
     per-client training model-parallel across ``model`` (16×16 pod)."""

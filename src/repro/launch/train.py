@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as Psh
 
 from repro.configs.base import get_config
 from repro.core import blocks as B

@@ -67,7 +67,6 @@ def _mamba_proj(cfg, scfg, p, x):
     """Shared pre-recurrence compute. x: [B, S, D] ->
     (a [B,S,di,N], b [B,S,di,N], Cmat [B,S,N], x_conv [B,S,di], z)."""
     d_inner, dt_rank = mamba_dims(cfg, scfg)
-    N = scfg.d_state
     xz = x @ p["w_in"]
     x_in, z = jnp.split(xz, 2, axis=-1)
     # keep d_inner on the 'model' axis (NOT the residual stream's seq
@@ -166,8 +165,6 @@ def mamba_state_init(cfg: ArchConfig, scfg: SSMCfg, batch: int, dtype) -> dict:
 
 def mamba_decode_step(cfg: ArchConfig, scfg: SSMCfg, p: dict, state: dict, x: jax.Array):
     """x: [B, 1, D] -> (y [B, 1, D], new_state)."""
-    B = x.shape[0]
-    K = scfg.d_conv
     x_in, z = _mamba_proj(cfg, scfg, p, x)  # [B,1,di]
     hist = jnp.concatenate([state["conv"], x_in], axis=1)  # [B, K, di]
     x_conv = jnp.einsum("bkd,dk->bd", hist, p["conv_w"]) + p["conv_b"]

@@ -44,8 +44,6 @@ def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimize
         return jax.tree.map(_zeros_if, m, params)
 
     def update(grads, state, params, step):
-        m = None
-
         def upd(g, s, p):
             gf = g.astype(jnp.float32)
             if weight_decay:

@@ -2,7 +2,7 @@
 assembled in core/progressive.py from the same primitives)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,10 +21,14 @@ marked ``slow``; a small allowlist keeps representative cells in tier-1.
 Also here: the column-sharded aggregation contracts — exactly one logical
 dispatch (with per-shard launch accounting), exactly one host sync per
 round, tile-aligned column shard geometry, the server aggregation memory
-model regression (per-device panel bytes ≈ K_total·n/D), and the 8-virtual-
-device subprocess case exercising the composed ``clients × model`` mesh
-(sharded local SGD + column-sharded aggregation in one round, bit-equal to
-the replicated path, with n not divisible by the shard count).
+model regression (per-device panel bytes ≈ K_total·n/D, transient stream
+bytes ≈ max_g K_g·n_g/D + tile padding, both pinned against the measured
+``AGG_STATS`` metadata), and the 8-virtual-device subprocess case
+exercising the composed ``clients × model`` mesh (sharded local SGD +
+column-sharded aggregation + shard-local group-panel streaming in one
+round, bit-equal to the replicated path, with n not divisible by the shard
+count and a wide-group case where the stream slice is strictly smaller
+than the full group panel).
 """
 import os
 import subprocess
@@ -344,6 +348,36 @@ def test_agg_stats_and_column_shards(mixed_world):
     assert st_r["per_device_panel_elems"] == layout.k_total * layout.n
 
 
+def test_transient_stream_stats_match_model(mixed_world):
+    """AGG_STATS transient-stream fields vs the analytic model: under the
+    shard-local stream the measured per-device stream footprint (read from
+    the real transfer sharding) equals ``max_g``
+    :func:`MM.agg_stream_elems_per_device` exactly, and the replicated
+    stream records the full ``max_g K_g·n_g`` group-panel footprint."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    kns = [(k, int(ix.size)) for k, ix in zip(layout.ks, layout.idx)]
+
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    st = dict(ENG.AGG_STATS)
+    assert st["stream"] == "sharded"
+    model = max(
+        MM.agg_stream_elems_per_device(k, n_g, n_devices=st["n_shards"],
+                                       agg="sharded")
+        for k, n_g in kns
+    )
+    assert st["per_device_stream_elems"] == model
+    # one scatter pass per group here (every group fits one m_chunk slice)
+    assert st["stream_chunks"] >= layout.n_groups
+
+    eng.grouped_round(plans, gtr, gbn, agg="replicated")
+    st_r = dict(ENG.AGG_STATS)
+    assert st_r["stream"] == "replicated"
+    assert st_r["per_device_stream_elems"] == max(k * n_g for k, n_g in kns)
+    assert st_r["stream_chunks"] == layout.n_groups
+
+
 def test_agg_knob_validation(mixed_world):
     plans, gtr, gbn, _ = mixed_world
     with pytest.raises(ValueError):
@@ -418,6 +452,58 @@ def test_server_agg_memory_model_matches_measured_stats(mixed_world):
     assert st["per_device_panel_elems"] == st["k_total"] * n_dev_cols
 
 
+def test_agg_stream_model_bound():
+    """Pin the transient-stream contract: under the shard-local stream a
+    group's per-device footprint is within ``K_g·n_g/D`` + one tile of
+    padding, never exceeds the replicated ``K_g·n_g``, and the ≤D chunked
+    passes still cover every column."""
+    tile = MM.AGG_TILE
+    k_g = 7
+    for D in (1, 2, 4, 8):
+        for n_g in (1, 50, 1000, 12345, 1_000_000):
+            elems = MM.agg_stream_elems_per_device(
+                k_g, n_g, n_devices=D, agg="sharded"
+            )
+            cols = MM.agg_stream_cols_per_device(n_g, n_devices=D,
+                                                 agg="sharded")
+            assert elems == k_g * cols
+            assert elems <= k_g * (n_g / D + tile)  # the headline bound
+            assert elems <= k_g * n_g  # never worse than the replicated stream
+            assert cols * D >= n_g  # D passes of m_chunk cover the panel
+            assert MM.agg_stream_elems_per_device(k_g, n_g, n_devices=D) \
+                == k_g * n_g  # replicated default
+    with pytest.raises(ValueError):
+        MM.agg_stream_cols_per_device(10, agg="magic")
+
+
+def test_server_agg_peak_includes_stream_term():
+    """``server_aggregation_peak_bytes(groups=...)`` adds exactly the
+    largest group's transient stream footprint on top of the persistent
+    buffers, per agg mode."""
+    K, n, G, D = 64, 1_000_000, 8, 4
+    groups = [(8, 200_000), (16, 500_000), (40, 990_000)]
+    for agg in ("replicated", "sharded"):
+        base = MM.server_aggregation_peak_bytes(K, n, G, n_devices=D, agg=agg)
+        full = MM.server_aggregation_peak_bytes(K, n, G, n_devices=D, agg=agg,
+                                                groups=groups)
+        stream = max(
+            MM.agg_stream_elems_per_device(kg, ng, n_devices=D, agg=agg)
+            for kg, ng in groups
+        )
+        assert full == base + 4 * stream
+    # the sharded stream term divides by D (up to tile padding) — the
+    # near-full-width majority group no longer re-approaches K·n
+    s_repl = MM.server_aggregation_peak_bytes(
+        K, n, G, n_devices=D, agg="replicated", groups=groups
+    ) - MM.server_aggregation_peak_bytes(K, n, G, n_devices=D,
+                                         agg="replicated")
+    s_shard = MM.server_aggregation_peak_bytes(
+        K, n, G, n_devices=D, agg="sharded", groups=groups
+    ) - MM.server_aggregation_peak_bytes(K, n, G, n_devices=D, agg="sharded")
+    assert s_shard <= s_repl / D + 4 * 40 * MM.AGG_TILE
+    assert s_shard < s_repl
+
+
 # ---------------------------------------------------------------------------
 # 8-virtual-device composed clients × model mesh (subprocess so the
 # host-device-count flag applies before jax initializes)
@@ -476,6 +562,16 @@ assert st["n_shards"] == 2, st
 assert st["per_device_panel_elems"] == st["k_total"] * st["n_padded"] // 2, st
 assert st["per_device_panel_elems"] < st["k_total"] * st["n_padded"], st
 
+# the group-panel STREAM is shard-local too: the measured per-device stream
+# footprint (from the real transfer sharding) equals the analytic model
+from repro.fl import memory_model as MM
+layout_s = ENG.make_group_layout(plans, tr, {})
+kns = [(k, int(ix.size)) for k, ix in zip(layout_s.ks, layout_s.idx)]
+model = max(MM.agg_stream_elems_per_device(k, n_g, n_devices=2, agg="sharded")
+            for k, n_g in kns)
+assert st["stream"] == "sharded", st
+assert st["per_device_stream_elems"] == model, (st, model)
+
 # column-sharded aggregation is BIT-EQUAL to the replicated path
 for a, b in zip(jax.tree.leaves(got_r.trainable),
                 jax.tree.leaves(got_s.trainable)):
@@ -514,6 +610,43 @@ gm8 = layout.gmask_sharded(make_model_mesh())  # model axis 8, same devices
 assert gm2.shape[1] == layout.column_shards(2).n_padded, gm2.shape
 assert gm8.shape[1] == layout.column_shards(8).n_padded, gm8.shape
 print("GMASK_KEYING_OK")
+
+# WIDE groups (n_g > tile x D): the shard-local stream must move strictly
+# LESS than a full [K_g, n_g] replica per agg device — this is the peak the
+# PR 4 replicated stream could not bound (a near-full-width majority group
+# transiently re-approached K x n on every agg device)
+d2 = 512
+losses_w = {f: width_loss(f) for f in (128, 256)}
+tr_w = {"w": jax.random.normal(jax.random.fold_in(rng, 99), (d2, out)),
+        "b": jnp.zeros((out,)), "c": jnp.zeros((1,))}
+plans_w = []
+for gi, f in enumerate((128, 256)):
+    sub = {"w": tr_w["w"][:f], "b": tr_w["b"], "c": tr_w["c"]}
+    gxs = jax.random.normal(jax.random.fold_in(rng, 40 + gi), (3, n_local, d2))
+    gys = jax.random.normal(jax.random.fold_in(rng, 50 + gi), (3, n_local))
+    grngs = jax.random.split(jax.random.fold_in(rng, 60 + gi), 3)
+    plans_w.append(ENG.GroupPlan(
+        losses_w[f], sub, {}, {}, gxs, gys, grngs,
+        jnp.arange(1.0, 4.0) * (gi + 1), 0.1, 2, 4,
+    ))
+wide = eng.grouped_round(plans_w, tr_w, {}, agg="sharded")
+assert all(bool(jnp.all(jnp.isfinite(l)))
+           for l in jax.tree.leaves(wide.trainable))
+st_w = ENG.AGG_STATS
+layout_w = ENG.make_group_layout(plans_w, tr_w, {})
+kns_w = [(k, int(ix.size)) for k, ix in zip(layout_w.ks, layout_w.idx)]
+model_w = max(
+    MM.agg_stream_elems_per_device(k, n_g, n_devices=2, agg="sharded")
+    for k, n_g in kns_w
+)
+full_w = max(k * n_g for k, n_g in kns_w)
+assert st_w["stream"] == "sharded", st_w
+assert st_w["per_device_stream_elems"] == model_w, (st_w, model_w)
+assert st_w["per_device_stream_elems"] < full_w, (st_w, full_w)
+# and the analytic bound itself: max_g K_g*n_g/D + tile padding
+from repro.kernels.fedavg import AGG_TILE
+assert model_w <= max(k * (n_g / 2 + AGG_TILE) for k, n_g in kns_w)
+print("STREAM_SHARDED_OK", st_w["per_device_stream_elems"], "<", full_w)
 """
 
 
@@ -534,3 +667,4 @@ def test_composed_mesh_sharded_agg_subprocess():
     assert "COMPOSED_MAXERR" in out.stdout
     assert "SECOND_ROUND_OK" in out.stdout
     assert "GMASK_KEYING_OK" in out.stdout
+    assert "STREAM_SHARDED_OK" in out.stdout

@@ -107,7 +107,6 @@ def test_cohort_round_reduces_loss(tiny_world):
     # 0.25-width variant runs in the slow job via the end-to-end tests
     xtr, ytr, xte, yte, parts, budgets = tiny_world
     cfg = CNNConfig("vgg11", width_mult=0.0625, in_size=16)
-    fl = _fl()
     from repro.models import cnn as C
 
     params, bn = C.init_cnn(cfg, jax.random.PRNGKey(0))

@@ -2,16 +2,11 @@
 input_specs, lower+compile of train/prefill/decode for a reduced arch
 (the 512-device production sweep runs via `python -m repro.launch.dryrun`)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import INPUT_SHAPES, InputShape, get_config
-from repro.launch import dryrun, sharding
+from repro.launch import dryrun
 from repro.launch.mesh import make_debug_mesh
-from repro.models import transformer as T
-from repro.train import serve
-from repro.train.optimizer import AdamWCfg, adamw
-from repro.train.train_step import init_train_state, make_train_step
 
 TINY_TRAIN = InputShape("tiny_train", 64, 4, "train")
 TINY_DECODE = InputShape("tiny_decode", 64, 4, "decode")

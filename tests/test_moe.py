@@ -1,8 +1,6 @@
 """MoE dispatch correctness: the sort/gather pipeline must equal a naive
 per-token dense evaluation of the routed experts when capacity is ample,
 and must drop (not corrupt) tokens when capacity binds."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +32,6 @@ def _naive_moe(cfg, mcfg, p, x):
     B, S, D = x.shape
     xf = x.reshape(-1, D)
     logits = xf @ p["router"].astype(xf.dtype)
-    E = p["router"].shape[1]
     probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
     gate, eidx = jax.lax.top_k(probs, mcfg.top_k)
     gate = gate / jnp.sum(gate, -1, keepdims=True)

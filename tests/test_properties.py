@@ -233,6 +233,67 @@ def test_group_layout_scatter_roundtrip(seed, widths, n_shards):
     np.testing.assert_array_equal(covered, np.arange(cs.n_padded))
 
 
+@given(
+    st.integers(0, 2**31 - 1),
+    st.lists(st.integers(1, 8), min_size=2, max_size=4),  # per-group widths
+    st.integers(1, 4),  # shard count
+)
+@settings(max_examples=20, deadline=None)
+def test_stream_plan_partitions_and_bounds(seed, widths, n_shards):
+    """The shard-local stream plan (fl/engine.py::GroupLayout.stream_plan)
+    must (1) route every group column to exactly the shard that owns it,
+    exactly once; (2) keep every pass's per-shard slice within the
+    tile-aligned even share ``m_chunk ≤ n_g/D + tile`` in at most D passes;
+    (3) reconstruct, via numpy-simulated gather+scatter, exactly the panel
+    the direct global scatter produces — the invariant the engine's
+    bit-equality to the replicated path rests on."""
+    from repro.fl import engine as ENG
+    from repro.kernels.fedavg import AGG_TILE
+
+    d, out = 8, 3
+    rng = jax.random.PRNGKey(seed)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    plans = []
+    for gi, f in enumerate(widths):
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jnp.zeros((2, 4, d))
+        ys = jnp.zeros((2, 4))
+        rngs = jax.random.split(jax.random.fold_in(rng, gi), 2)
+        plans.append(ENG.GroupPlan(
+            lambda tr, fro, bn, xb, yb: (jnp.zeros(()), bn),
+            sub, {}, {}, xs, ys, rngs, jnp.ones((2,)), 0.1, 1, 4,
+        ))
+    layout = ENG.make_group_layout(plans, gtr, {})
+    if layout.identity:
+        return
+    cs = layout.column_shards(n_shards)
+    nprng = np.random.default_rng(seed)
+    for gi in range(layout.n_groups):
+        ix = layout.idx[gi]
+        n_g = int(ix.size)
+        sp = layout.stream_plan(gi, n_shards)
+        even = -(-n_g // n_shards)
+        assert sp.m_chunk == min(n_g, -(-even // AGG_TILE) * AGG_TILE)
+        assert 1 <= sp.n_chunks <= n_shards
+        vec = nprng.normal(size=n_g).astype(np.float32)
+        flat = np.zeros(cs.n_padded, np.float32)
+        placed = 0
+        for c in range(sp.n_chunks):
+            for d_ in range(n_shards):
+                src, dst = sp.src[c, d_], sp.dst[c, d_]
+                valid = dst < cs.n_shard
+                # every valid pair maps a group column to its OWNING shard
+                np.testing.assert_array_equal(
+                    cs.offsets[d_] + dst[valid], ix[src[valid]]
+                )
+                flat[cs.offsets[d_] + dst[valid]] = vec[src[valid]]
+                placed += int(valid.sum())
+        assert placed == n_g  # each column streamed exactly once
+        want = np.zeros(cs.n_padded, np.float32)
+        want[ix] = vec
+        np.testing.assert_array_equal(flat, want)
+
+
 # ---------------------------------------------------------------------------
 # block partitioning invariants
 # ---------------------------------------------------------------------------
