@@ -38,6 +38,15 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     must equal ``memory_model.agg_stream_elems_per_device`` and stay within
     ``max_g K_g·(n_g/D + AGG_TILE)``; re-replicating the group panels
     across the agg mesh fails this gate.
+  * NEW (PR 6): the ``freeze_decay`` record replays the grouped round at
+    the gate cell under growing frozen-column prefixes
+    (``FREEZE_FRACS`` — the Table-4 schedule order: leading blocks
+    converge and freeze first) for BOTH aggregation placements, asserts
+    measured ``AGG_STATS`` equals ``memory_model`` at each point (with the
+    per-group frozen counts), and asserts all four per-device byte metrics
+    (panel and stream, replicated and sharded) STRICTLY DECREASE at every
+    freeze transition — frozen columns must leave the panel, the stream,
+    and the kernel, not just be masked out of the update.
 
 The per-shard kernel launches a sharded round fans out to are recorded in
 the JSON under ``dispatches`` (``fedavg_grouped_shards`` = D per logical
@@ -54,6 +63,12 @@ else the process exits non-zero; a gated metric that DISAPPEARS from the fresh
 record fails rather than silently skipping.  Regenerate the seed copy
 (``--smoke --json BENCH_kernels.json``) when a PR legitimately moves a
 gated metric.
+
+The freeze-decay section gates on SHAPE as well as magnitude: the fresh
+record's byte metrics must decrease at every freeze transition regardless
+of the seed's absolute numbers (so the gate holds even on the first run
+against an older seed), and each point's deterministic bytes additionally
+compare x1.5 against the seed point with the same ``n_frozen``.
 """
 from __future__ import annotations
 
@@ -62,6 +77,7 @@ import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
@@ -118,6 +134,7 @@ def bench(ctx: dict, full: bool = False, record: dict = None):
         "grouped_rounds": _bench_grouped_round(full=full, matrix=True,
                                                sink=record),
         "agg_compare": _bench_agg_compare(smoke=False, sink=record),
+        "freeze_decay": _bench_freeze_decay(smoke=False, sink=record),
     }
 
 
@@ -423,6 +440,120 @@ def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
     return res
 
 
+# freeze-decay schedule: fraction of PANEL columns frozen at each freeze
+# point.  Leading columns freeze first (leading blocks converge first —
+# the order the Table 4 freezing benchmark's EM determination produces on
+# the progressive schedule); each step freezes another quarter of the
+# packed space, so every transition must shrink the panel by whole tiles.
+FREEZE_FRACS = (0.0, 0.25, 0.5, 0.75)
+
+
+def _bench_freeze_decay(smoke: bool, sink: dict = None, iters: int = 3) -> dict:
+    """Freezing-aware layout decay record (ISSUE 6): per-device panel and
+    transient-stream bytes vs round across a schedule of freeze events, per
+    aggregation placement, all read from the real sharding metadata
+    (``engine.AGG_STATS``) and pinned against ``memory_model``'s
+    frozen-fraction term.  Gated here (always — these are deterministic
+    byte figures, not timings): measured == model at every point, and both
+    placements' bytes strictly DECREASE at every freeze transition — the
+    paper's peak-memory-decay claim, measured.  ``--compare`` re-enforces
+    the decay shape on the fresh record (compare_trajectories), so a layout
+    change that stops shrinking the panel fails the slow CI job even if
+    every wall clock looks fine.  ``sink`` receives the result dict before
+    any gate can fire."""
+    from repro.fl import engine as ENG
+    from repro.fl import memory_model as MM
+
+    d = 128 if smoke else 1024
+    G, kpg = GATE_CELL
+    plans, gtr = _make_width_plans(d, G, kpg)
+    eng_r = ENG.make_engine("packed", agg="replicated")
+    eng_s = ENG.make_engine("packed", agg="sharded")
+    n = ENG.make_group_layout(plans, gtr, {}).n
+    points: list = []
+    res = {"d": d, "G": G, "k_total": G * kpg, "n": n,
+           "n_local_devices": len(jax.devices()), "points": points}
+    if sink is not None:
+        sink["freeze_decay"] = res
+    for rnd, frac in enumerate(FREEZE_FRACS):
+        n_frozen = int(n * frac)
+        mask = np.zeros(n, bool)
+        mask[:n_frozen] = True
+        fro = ENG.make_frozen_columns(mask)
+        us_r = C.time_call(
+            lambda: eng_r.grouped_round(plans, gtr, {}, frozen=fro).loss,
+            iters=iters,
+        )
+        st_r = dict(ENG.AGG_STATS)
+        us_s = C.time_call(
+            lambda: eng_s.grouped_round(plans, gtr, {}, frozen=fro).loss,
+            iters=iters,
+        )
+        st_s = dict(ENG.AGG_STATS)
+        D = st_s["n_shards"]
+        layout = ENG.make_group_layout(plans, gtr, {}, frozen=fro)
+        g_kn = [(k, int(ix.size), int(np.sum(dd >= layout.n_active)))
+                for k, ix, dd in zip(layout.ks, layout.idx, layout.dst)]
+        point = {
+            "round": rnd, "n_frozen": n_frozen,
+            "n_active": n - n_frozen,
+            "per_device_panel_bytes_replicated":
+                4 * st_r["per_device_panel_elems"],
+            "per_device_panel_bytes_sharded":
+                4 * st_s["per_device_panel_elems"],
+            "per_device_stream_bytes_replicated":
+                4 * st_r["per_device_stream_elems"],
+            "per_device_stream_bytes_sharded":
+                4 * st_s["per_device_stream_elems"],
+            "replicated_us": us_r, "sharded_us": us_s,
+        }
+        points.append(point)
+        # model == measured, per placement, at every freeze point
+        for agg, st in (("replicated", st_r), ("sharded", st_s)):
+            panel_model = st["k_total"] * MM.agg_columns_per_device(
+                n, n_devices=st["n_shards"], agg=agg, n_frozen=n_frozen
+            )
+            stream_model = max(
+                MM.agg_stream_elems_per_device(
+                    k, n_g, n_devices=st["n_shards"], agg=agg, n_frozen=f
+                )
+                for k, n_g, f in g_kn
+            )
+            assert st["per_device_panel_elems"] == panel_model, (
+                f"freeze decay: measured {agg} panel elems "
+                f"{st['per_device_panel_elems']} != model {panel_model} at "
+                f"n_frozen={n_frozen} (memory_model drifted from the layout)"
+            )
+            assert st["per_device_stream_elems"] == stream_model, (
+                f"freeze decay: measured {agg} stream elems "
+                f"{st['per_device_stream_elems']} != model {stream_model} "
+                f"at n_frozen={n_frozen}"
+            )
+            assert st["n_frozen"] == n_frozen and st["n_active"] == n - n_frozen
+        C.emit(
+            f"kernels/freeze_decay_f{int(frac * 100)}", us_s,
+            f"n_frozen={n_frozen} "
+            f"panel_bytes_repl={point['per_device_panel_bytes_replicated']} "
+            f"panel_bytes_shard={point['per_device_panel_bytes_sharded']} "
+            f"stream_bytes_shard={point['per_device_stream_bytes_sharded']}",
+        )
+    # the decay gate: every freeze transition must strictly shrink BOTH
+    # placements' panel and stream bytes (the schedule steps whole tiles,
+    # so tile padding cannot mask a step on any realistic device count)
+    for prev, cur in zip(points, points[1:]):
+        for key in ("per_device_panel_bytes_replicated",
+                    "per_device_panel_bytes_sharded",
+                    "per_device_stream_bytes_replicated",
+                    "per_device_stream_bytes_sharded"):
+            assert cur[key] < prev[key], (
+                f"freeze decay: {key} did not decrease at the "
+                f"n_frozen={cur['n_frozen']} transition "
+                f"({prev[key]} -> {cur[key]}) — frozen columns are not "
+                f"leaving the panel/stream"
+            )
+    return res
+
+
 def _bench_kernel_compare(smoke: bool, sink: dict = None) -> dict:
     """Aggregation-kernel wall clock in isolation: dense-mask fedavg_masked
     vs group-compressed fedavg_grouped on the same panel (jnp paths, jitted;
@@ -497,6 +628,10 @@ COMPARE_AGG_KEYS = (("overhead_sharded_vs_replicated", True),
                     ("per_device_stream_bytes_sharded", False))
 COMPARE_CELL_KEYS = (("grouped_us", True), ("staged_grouped_elems", False))
 COMPARE_KERNEL_KEYS = (("grouped_us", True),)
+COMPARE_DECAY_KEYS = ("per_device_panel_bytes_replicated",
+                      "per_device_panel_bytes_sharded",
+                      "per_device_stream_bytes_replicated",
+                      "per_device_stream_bytes_sharded")
 
 
 def compare_trajectories(new: dict, seed: dict,
@@ -564,6 +699,36 @@ def compare_trajectories(new: dict, seed: dict,
     nk, sk = new.get("kernel_compare", {}), seed.get("kernel_compare", {})
     for mkey, wall in COMPARE_KERNEL_KEYS:
         check(f"kernel_compare.{mkey}", nk.get(mkey), sk.get(mkey), wall)
+    # freeze-decay gate (ISSUE 6): the FRESH record must show per-device
+    # panel and stream bytes strictly decreasing at every freeze transition
+    # — the decay SHAPE is the contract, independent of the seed's absolute
+    # numbers — and the per-point deterministic bytes also gate at x1.5
+    # against the seed points (matched by n_frozen).  A freeze_decay
+    # section present in the seed and missing from the fresh record fails
+    # like any other gated metric.
+    nf, sf = new.get("freeze_decay", {}), seed.get("freeze_decay", {})
+    if sf and not nf:
+        fails.append("freeze_decay: section missing from the fresh record")
+    pts = nf.get("points", [])
+    for prev_p, p in zip(pts, pts[1:]):
+        if p.get("n_frozen", 0) <= prev_p.get("n_frozen", 0):
+            continue  # not a freeze transition
+        for mkey in COMPARE_DECAY_KEYS:
+            checked[0] += 1
+            if not p.get(mkey, 0) < prev_p.get(mkey, float("inf")):
+                fails.append(
+                    f"freeze_decay.{mkey}: did not decrease at "
+                    f"n_frozen={p.get('n_frozen')} "
+                    f"({prev_p.get(mkey)} -> {p.get(mkey)})"
+                )
+    seed_pts = {p.get("n_frozen"): p for p in sf.get("points", [])}
+    for p in pts:
+        s = seed_pts.get(p.get("n_frozen"))
+        if s is None:
+            continue
+        for mkey in COMPARE_DECAY_KEYS:
+            check(f"freeze_decay[n_frozen={p.get('n_frozen')}].{mkey}",
+                  p.get(mkey), s.get(mkey), False)
     return fails, checked[0]
 
 
@@ -603,6 +768,7 @@ def main() -> None:
             _bench_grouped_round(smoke=True, iters=5, matrix=True,
                                  sink=record)
             _bench_agg_compare(smoke=True, sink=record)
+            _bench_freeze_decay(smoke=True, sink=record)
         else:
             bench({}, full=args.full, record=record)
     finally:

@@ -15,11 +15,23 @@ early training does not trigger).
 Implementation: tumbling windows of H updates with an O(1)-memory net-
 movement accumulator, maintained by the fused Pallas pass
 (kernels/effective_movement.py) — one HBM sweep per round per block.
+
+Host-sync discipline: ``em_update_flat`` keeps ``path``/``net`` as DEVICE
+scalars across the window and reads them back with one explicit
+``jax.device_get`` only when the window closes (``k == window_h``) — a
+mid-window round issues no device→host transfer at all, so EM bookkeeping
+composes with the engine's one-``block_until_ready``-per-round contract
+(asserted under ``jax.transfer_guard('disallow')`` in tests/test_core.py).
+
+:class:`FreezeTracker` runs the same machinery per BLOCK over stable column
+ids of the packed trainable vector (fl/engine.py::columns_for_paths) and
+reports newly frozen blocks — the decision the engine's freezing-aware
+layouts (``grouped_round(frozen=...)``) consume to shrink the panel.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +59,11 @@ class EMConfig:
 class EMState:
     prev: jax.Array  # p_{k-1} flattened
     net: jax.Array  # running Σ U within the current window (f32)
-    path: float = 0.0  # running Σ|U| within the current window
+    path: float = 0.0  # running Σ|U| (a DEVICE scalar mid-window)
     k: int = 0  # updates seen in the current window
-    history: List[float] = field(default_factory=list)  # EM per window
+    history: List[float] = field(default_factory=list)  # EM per window,
+    # trimmed by em_update_flat to the max(fit_points, 2) entries slope and
+    # should_freeze actually read, so a long run can't grow it unboundedly
     rounds: int = 0
     below: int = 0  # consecutive below-threshold evaluations
 
@@ -69,17 +83,29 @@ def em_update_flat(cfg: EMConfig, st: EMState, p_new: jax.Array) -> Optional[flo
     """Same as :func:`em_update`, but takes the round's aggregated params as
     an already-packed flat vector — the sharded engine (fl/engine.py) hands
     this straight from its Pallas fedavg output, so the EM bookkeeping is one
-    fused ``effective_movement_update`` pass with no per-leaf re-flattening."""
+    fused ``effective_movement_update`` pass with no per-leaf re-flattening.
+
+    Mid-window rounds accumulate ``path`` as a DEVICE scalar (``0.0 + array``
+    promotes on the first update) and return without any device→host
+    transfer; the one explicit ``jax.device_get`` happens at window close,
+    batched over ``(path, net_abs)``."""
     net, path_inc, net_abs = ops.effective_movement_update(p_new, st.prev, st.net)
     st.prev = p_new
     st.net = net
-    st.path += float(path_inc)
+    # device-scalar accumulation, no transfer in either direction: the
+    # window's first update ADOPTS the device increment (st.path is the
+    # python-float 0.0 placeholder then), later updates add device-to-device
+    st.path = path_inc if st.k == 0 else st.path + path_inc
     st.k += 1
     st.rounds += 1
     if st.k < cfg.window_h:
         return None
-    em = float(net_abs) / max(st.path, 1e-12)
+    path_v, net_v = jax.device_get((st.path, net_abs))
+    em = float(net_v) / max(float(path_v), 1e-12)
     st.history.append(em)
+    maxlen = max(cfg.fit_points, 2)
+    if len(st.history) > maxlen:
+        del st.history[: len(st.history) - maxlen]
     st.net = jnp.zeros_like(st.net)
     st.path = 0.0
     st.k = 0
@@ -108,3 +134,87 @@ def should_freeze(cfg: EMConfig, st: EMState) -> bool:
     else:
         st.below = 0
     return st.below >= cfg.patience_w
+
+
+def em_state_to_tree(st: EMState) -> dict:
+    """Checkpointable pytree view of an EMState (train/checkpoint.py::save
+    takes it directly).  ``below`` and ``history`` ride along so a freeze
+    decision — patience already accumulated, slope-fit window — survives a
+    checkpoint round-trip instead of resetting to zero on restore."""
+    return {
+        "prev": st.prev,
+        "net": st.net,
+        "path": jnp.asarray(st.path, jnp.float32),
+        "k": np.int64(st.k),
+        "rounds": np.int64(st.rounds),
+        "below": np.int64(st.below),
+        "history": np.asarray(st.history, np.float64),
+    }
+
+
+def em_state_from_tree(tree: Mapping) -> EMState:
+    """Inverse of :func:`em_state_to_tree`; accepts the flat dict
+    ``train/checkpoint.py::load`` returns for a saved EM state."""
+    return EMState(
+        prev=jnp.asarray(tree["prev"]),
+        net=jnp.asarray(tree["net"], jnp.float32),
+        path=float(np.asarray(tree["path"])),
+        k=int(np.asarray(tree["k"])),
+        rounds=int(np.asarray(tree["rounds"])),
+        below=int(np.asarray(tree["below"])),
+        history=[float(v) for v in np.asarray(tree["history"]).reshape(-1)],
+    )
+
+
+class FreezeTracker:
+    """Per-BLOCK freeze determination over a packed flat trainable vector.
+
+    ``blocks`` maps a block name (conventionally the leaf-path prefix the
+    engine's :func:`repro.fl.engine.columns_for_paths` resolved) to the
+    block's STABLE column ids in the packed vector.  Each round,
+    :meth:`update` slices every still-live block out of the aggregated flat
+    vector DEVICE-side, feeds its own :class:`EMState`, and returns the
+    names that crossed :func:`should_freeze` this round — the caller turns
+    those into a frozen-column epoch
+    (``repro.fl.engine.frozen_columns_for_paths``) for the next
+    ``grouped_round(frozen=...)``.
+
+    The first ``update`` call only records the baseline (``em_init``
+    semantics); sub-vector slicing is async like the EM update itself, so a
+    mid-window round still performs no host sync."""
+
+    def __init__(self, cfg: EMConfig, blocks: Mapping[str, np.ndarray]):
+        self.cfg = cfg
+        self.blocks: Dict[str, np.ndarray] = {
+            name: np.asarray(cols, np.int64).reshape(-1)
+            for name, cols in blocks.items()
+        }
+        self._cols_dev = {
+            name: jnp.asarray(cols) for name, cols in self.blocks.items()
+        }
+        self.states: Dict[str, EMState] = {}
+        self.frozen: Dict[str, bool] = {name: False for name in self.blocks}
+
+    @property
+    def frozen_names(self) -> List[str]:
+        return [name for name, f in self.frozen.items() if f]
+
+    def update(self, flat: jax.Array) -> List[str]:
+        """Feed one round's aggregated flat trainable vector; returns the
+        block names newly frozen by this round's window (usually [])."""
+        newly = []
+        for name, cols in self._cols_dev.items():
+            if self.frozen[name]:
+                continue
+            sub = jnp.take(flat, cols)
+            st = self.states.get(name)
+            if st is None:
+                self.states[name] = EMState(
+                    prev=sub, net=jnp.zeros_like(sub, jnp.float32)
+                )
+                continue
+            em = em_update_flat(self.cfg, st, sub)
+            if em is not None and should_freeze(self.cfg, st):
+                self.frozen[name] = True
+                newly.append(name)
+        return newly

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import effective_movement as EM
 from repro.core import progressive as P
 from repro.fl import data as DATA
 from repro.fl import engine as ENG
@@ -157,12 +158,19 @@ def run_exclusivefl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, round
 
 
 def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
-                 *, oracle: bool = False):
+                 *, oracle: bool = False, freeze_em: "EM.EMConfig" = None):
     """Static-width HeteroFL.  Every round builds one :class:`GroupPlan` per
     width level and hands the whole ragged cohort to ``grouped_round`` — one
     fused group-compressed aggregation dispatch regardless of how many width
     groups the selection produced.  ``oracle=True`` routes the identical
-    plans through the serial per-group reference path instead."""
+    plans through the serial per-group reference path instead.
+
+    ``freeze_em`` (optional) enables freezing-aware layouts: a per-block
+    :class:`~repro.core.effective_movement.FreezeTracker` over the
+    aggregated global params; blocks whose effective movement converges
+    leave the panel, the stream, and the kernel for the rest of the run
+    (``grouped_round(frozen=...)``) — clients still train them locally, the
+    server just stops aggregating them, so per-round bytes decay."""
     levels = np.array([
         MM.width_ratio_for_budget(cfg, b, RATIOS[:-1]) or RATIOS[-1]
         for b in budgets
@@ -174,6 +182,14 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
         for r in sorted(set(levels.tolist()))
     }
     impl = "serial" if oracle else None
+    tracker, fro = None, None
+    if freeze_em is not None:
+        tracker = EM.FreezeTracker(freeze_em, {
+            f"['blocks'][{i}]": ENG.columns_for_paths(
+                params, [f"['blocks'][{i}]"]
+            )
+            for i in range(len(params["blocks"]))
+        })
     accs = []
     for _ in range(rounds):
         sel = R.rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
@@ -189,12 +205,22 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
                 xs, ys, jax.random.split(R.next_key(), len(group)), w,
                 fl.lr, fl.local_steps, fl.batch_size,
             ))
-        res = R.engine.grouped_round(plans, params, bn, impl=impl)
+        res = R.engine.grouped_round(plans, params, bn, impl=impl, frozen=fro)
         params, bn = res.trainable, res.bn_state
+        if tracker is not None:
+            flat = (res.packed if res.packed is not None
+                    else EM.flatten_params(params))
+            if tracker.update(flat):
+                fro = ENG.frozen_columns_for_paths(
+                    params, bn, tracker.frozen_names
+                )
         accs.append(_acc_full(cfg, params, bn, xte, yte, fl.ratio))
-    return {"acc": float(np.mean(accs[-10:])), "pr": 1.0,
-            "levels": levels.tolist(), "curve": accs,
-            "params": params, "bn": bn}
+    out = {"acc": float(np.mean(accs[-10:])), "pr": 1.0,
+           "levels": levels.tolist(), "curve": accs,
+           "params": params, "bn": bn}
+    if tracker is not None:
+        out["frozen_blocks"] = tracker.frozen_names
+    return out
 
 
 # ===========================================================================
@@ -238,7 +264,7 @@ def _depth_loss(cfg: C.CNNConfig, depth: int, ratio: float):
 
 
 def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
-                *, oracle: bool = False):
+                *, oracle: bool = False, freeze_em: "EM.EMConfig" = None):
     """Depth-scaled DepthFL.  Each depth level d becomes a :class:`GroupPlan`
     whose trainable is the {blocks[:d], heads[:d]} prefix of the global tree;
     ``grouped_round`` aggregates every depth group (plus bn) in one fused
@@ -246,7 +272,11 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
     untouched.  Every
     group starts from the round-start bn and bn aggregates under the same
     per-column masked average (order-independent, unlike the old serial
-    threading).  ``oracle=True`` forces the serial per-group reference."""
+    threading).  ``oracle=True`` forces the serial per-group reference.
+
+    ``freeze_em`` (optional) enables freezing-aware layouts per depth block:
+    a converged block and its classifier head (plus its bn columns) leave
+    the panel/stream/kernel via ``grouped_round(frozen=...)``."""
     depths = np.array([MM.depth_for_budget(cfg, b) for b in budgets])
     pr = float(np.mean(depths > 0))
     R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
@@ -254,6 +284,19 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
     heads = _init_depth_heads(cfg, R.next_key(), fl.ratio)
     max_trained = int(depths.max()) if pr > 0 else 0
     impl = "serial" if oracle else None
+    tracker, fro, prefixes = None, None, {}
+    if freeze_em is not None:
+        tr0 = {"blocks": list(params["blocks"]), "heads": list(heads)}
+        prefixes = {
+            f"d{i}": (f"['blocks'][{i}]", f"['heads'][{i}]")
+            for i in range(cfg.n_prog_blocks)
+        }
+        tracker = EM.FreezeTracker(freeze_em, {
+            name: np.concatenate([
+                ENG.columns_for_paths(tr0, [p]) for p in pref
+            ])
+            for name, pref in prefixes.items()
+        })
     accs = []
     for _ in range(rounds):
         cand = np.where(depths > 0)[0]
@@ -279,17 +322,28 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
                 fl.lr, fl.local_steps, fl.batch_size,
             ))
         global_tr = {"blocks": list(params["blocks"]), "heads": list(heads)}
-        res = R.engine.grouped_round(plans, global_tr, bn, impl=impl)
+        res = R.engine.grouped_round(plans, global_tr, bn, impl=impl,
+                                     frozen=fro)
         params = dict(params, blocks=res.trainable["blocks"])
         heads = list(res.trainable["heads"])
         bn = res.bn_state
+        if tracker is not None:
+            flat = (res.packed if res.packed is not None
+                    else EM.flatten_params(res.trainable))
+            if tracker.update(flat):
+                pref = [p for nm in tracker.frozen_names
+                        for p in prefixes[nm]]
+                fro = ENG.frozen_columns_for_paths(global_tr, bn, pref)
         accs.append(
             _acc_depth_ensemble(cfg, params, heads, bn, xte, yte,
                                 max_trained, fl.ratio)
         )
     acc = float(np.mean(accs[-10:])) if accs else None
-    return {"acc": acc, "pr": pr, "depths": depths.tolist(), "curve": accs,
-            "params": params, "bn": bn, "heads": heads}
+    out = {"acc": acc, "pr": pr, "depths": depths.tolist(), "curve": accs,
+           "params": params, "bn": bn, "heads": heads}
+    if tracker is not None:
+        out["frozen_blocks"] = tracker.frozen_names
+    return out
 
 
 # ===========================================================================

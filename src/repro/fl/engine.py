@@ -152,6 +152,47 @@ and tests/test_contract.py pins model == measurement.  The single-group
 identity fast path keeps the PR 1 packed/sharded round regardless of
 ``agg`` — its panel has no group structure to column-shard.
 
+Freezing-aware layouts (the ``frozen`` knob)
+--------------------------------------------
+``grouped_round(..., frozen=...)`` takes a frozen-column epoch — a ``[n]``
+bool mask over the global ``[trainable | bn]`` packed space, normally built
+from an effective-movement freeze decision via
+:func:`frozen_columns_for_paths` — and drops those columns from the round
+entirely: the shared panel, ``gmask``/``gmask_sharded``, ``column_shards``,
+``stream_plan``/``stream_buffers``, and the ``fedavg_grouped`` dispatch all
+shrink to the ``n_active`` surviving columns, so per-round aggregation work
+and per-device panel/stream bytes DECAY at each freeze point (the paper's
+peak-memory story; fl/memory_model.py carries the matching
+``n_frozen`` term).  Clients still train their full sub-model locally —
+freezing is an AGGREGATION decision: the server simply stops updating the
+frozen columns, which keep their previous global values.
+
+The re-layout invariant is stable global column ids:
+:attr:`GroupLayout.idx` always records FULL-space column ids and a
+:class:`FrozenColumns` epoch only REMAPS them onto the compressed panel
+(:attr:`GroupLayout.dst`, frozen entries pointing at an out-of-range
+sentinel the scatters drop device-side).  Freeze events therefore never
+renumber columns — EM traces, checkpoints, and block→column maps keyed on
+global ids stay valid across re-layouts.  The frozen-column lifecycle:
+
+1. a freeze decision fires (``core/effective_movement.py::should_freeze``
+   via a :class:`~repro.core.effective_movement.FreezeTracker`, wired
+   through ``fl/server.py::_train_step_t`` and the baselines);
+2. the caller passes the widened mask to ``grouped_round`` →
+   :func:`make_group_layout` keys ``_LAYOUT_CACHE`` on the
+   :class:`FrozenColumns` epoch (digest-hashed — two layouts differing only
+   in frozen columns NEVER collide) and eagerly evicts superseded sibling
+   layouts (same structure, strict-subset frozen mask, including the
+   unfrozen original), dropping their device buffers so the wider panel's
+   gmask/stream/index memory frees at the freeze point, not at LRU
+   pressure;
+3. the new layout rebuilds ``column_shards``/``stream_plan``/
+   ``stream_buffers`` over the ``n_active`` columns — one ``≤ D``-pass
+   shard-local stream per group as before, just narrower — and the round
+   contracts (one logical dispatch, one ``block_until_ready``,
+   replicated ≡ sharded bit-equality) hold unchanged across the
+   transition (tests/test_contract.py's frozen conformance axis).
+
 The serial per-group oracle (``impl="serial"``, default under the ``vmap``
 mode) runs each group through ``client.cohort_round`` and accumulates the
 same num/den host-side; equivalence is asserted in tests/test_engine.py.
@@ -167,6 +208,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import hashlib
 import math
 from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
@@ -348,6 +390,112 @@ def make_pack_spec(tree) -> PackSpec:
         spec = PackSpec(treedef, shapes, dtypes, tuple(offsets), sizes, off)
         _SPEC_CACHE[key] = spec
     return spec
+
+
+# ===========================================================================
+# Frozen-column epochs: the freeze decision in layout space
+# ===========================================================================
+
+
+@dataclass(frozen=True, eq=False)
+class FrozenColumns:
+    """One frozen-column epoch of the global ``[trainable | bn]`` packed
+    coordinate space: ``mask[j]`` is True when global column ``j`` has been
+    frozen by an effective-movement decision and must leave the panel, the
+    stream, and the kernel.
+
+    Column ids are STABLE: a FrozenColumns never renumbers the global
+    space — it only selects which columns survive (``active_idx``) so
+    :func:`make_group_layout` can compress the panel to ``n_active``
+    columns while every consumer keyed on global ids (EM traces,
+    checkpoints, block→column maps) stays valid across freeze events.
+
+    Equality and hash use ``(n, digest)`` — a sha1 prefix of the mask
+    bytes — so epochs can key ``_LAYOUT_CACHE`` without O(n) mask
+    comparisons per lookup, and two layouts differing only in frozen
+    columns can never collide (the PR 6 cache-key bugfix)."""
+
+    n: int
+    mask: np.ndarray  # [n] bool, True = frozen (read-only)
+    active_idx: np.ndarray  # [n_active] int64 global ids of live columns
+    digest: str
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active_idx.size)
+
+    @property
+    def n_frozen(self) -> int:
+        return self.n - self.n_active
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, FrozenColumns)
+                and self.n == other.n and self.digest == other.digest)
+
+    def __hash__(self) -> int:
+        return hash((self.n, self.digest))
+
+    def supersedes(self, other: Optional["FrozenColumns"]) -> bool:
+        """True when this epoch freezes a strict SUPERSET of ``other``'s
+        columns (``other is None`` — the unfrozen layout — is superseded by
+        any epoch).  Freezing is monotone forward over a run, so a layout
+        superseded by a newly built epoch is stale and its device buffers
+        can be dropped at the freeze event."""
+        if other is None:
+            return True
+        return (self.n == other.n and self.n_frozen > other.n_frozen
+                and bool(np.all(other.mask <= self.mask)))
+
+
+def make_frozen_columns(mask) -> Optional[FrozenColumns]:
+    """Build a :class:`FrozenColumns` epoch from a ``[n]`` bool mask
+    (True = frozen).  An all-False mask returns None — the unfrozen layout
+    needs no epoch object, and callers can pass the result straight to
+    ``grouped_round(frozen=...)`` either way."""
+    mask = np.ascontiguousarray(np.asarray(mask), dtype=bool).reshape(-1)
+    if not mask.any():
+        return None
+    mask.setflags(write=False)
+    digest = hashlib.sha1(mask.tobytes()).hexdigest()[:16]
+    active = np.nonzero(~mask)[0].astype(np.int64)
+    return FrozenColumns(int(mask.size), mask, active, digest)
+
+
+def _path_columns(tree, spec: PackSpec, prefixes: Tuple[str, ...]) -> np.ndarray:
+    parts = [
+        np.arange(off, off + size, dtype=np.int64)
+        for (path, _), off, size in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            spec.offsets, spec.sizes,
+        )
+        if any(jax.tree_util.keystr(path).startswith(p) for p in prefixes)
+    ]
+    if not parts:
+        return np.zeros((0,), np.int64)
+    return np.concatenate(parts)
+
+
+def columns_for_paths(tree, prefixes) -> np.ndarray:
+    """Packed column ids (``make_pack_spec(tree)`` order) of every leaf
+    whose ``jax.tree_util.keystr`` path starts with one of ``prefixes`` —
+    the bridge from a block-level freeze decision ("blocks[2] converged")
+    to column coordinates."""
+    return _path_columns(tree, make_pack_spec(tree), tuple(prefixes))
+
+
+def frozen_columns_for_paths(global_trainable, global_bn,
+                             prefixes) -> Optional[FrozenColumns]:
+    """Frozen-column epoch over the ``[trainable | bn]`` global packed
+    space freezing every leaf whose path starts with one of ``prefixes``
+    in EITHER tree — a frozen block takes its BN statistics out of
+    aggregation with it.  Returns None when no leaf matches."""
+    spec_tr = make_pack_spec(global_trainable)
+    spec_bn = make_pack_spec(global_bn)
+    prefixes = tuple(prefixes)
+    mask = np.zeros(spec_tr.n + spec_bn.n, bool)
+    mask[_path_columns(global_trainable, spec_tr, prefixes)] = True
+    mask[spec_tr.n + _path_columns(global_bn, spec_bn, prefixes)] = True
+    return make_frozen_columns(mask)
 
 
 # ===========================================================================
@@ -580,26 +728,40 @@ class StreamPlan:
 
 @dataclass
 class GroupLayout:
-    """Cached scatter plan for one (global trees, group structures) combo:
-    column layout is [trainable columns | bn columns] in global pack order;
-    rows are groups' clients stacked in plan order."""
+    """Cached scatter plan for one (global trees, group structures, frozen
+    epoch) combo: column layout is [trainable columns | bn columns] in
+    global pack order; rows are groups' clients stacked in plan order.
+
+    ``idx`` always records STABLE full-space column ids; when a
+    :class:`FrozenColumns` epoch is attached, ``dst`` remaps them onto the
+    ``n_active``-column compressed panel (frozen entries point at the
+    ``n_active`` sentinel and every scatter drops them device-side).  All
+    panel-space machinery — ``gmask``, ``column_shards``, ``stream_plan``,
+    the shared panel itself — is sized to ``n_active``, so frozen columns
+    cost nothing per round."""
 
     gspec_tr: PackSpec
     gspec_bn: PackSpec
-    n: int  # total columns
+    n: int  # total GLOBAL columns (stable ids, frozen included)
     k_total: int  # total clients (rows)
     rows: Tuple[int, ...]  # per-group row offset
     ks: Tuple[int, ...]  # per-group client count
-    idx: Tuple[np.ndarray, ...]  # per-group global column indices
+    idx: Tuple[np.ndarray, ...]  # per-group STABLE global column indices
     group_specs: Tuple[Tuple[PackSpec, PackSpec], ...]
-    identity: bool  # single group covering every column in order
-    _gmask: Optional[jax.Array] = None  # built lazily, [G, n] f32
-    _legacy_mask: Optional[jax.Array] = None  # built lazily, [k_total, n] f32
-    _idx_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy device indices
+    identity: bool  # single unfrozen group covering every column in order
+    frozen: Optional[FrozenColumns]  # frozen-column epoch (None: all live)
+    n_active: int  # panel width (== n when frozen is None)
+    dst: Tuple[np.ndarray, ...]  # per-group PANEL-space scatter destinations
+    _gmask: Optional[jax.Array] = None  # built lazily, [G, n_active] f32
+    _legacy_mask: Optional[jax.Array] = None  # lazy, [k_total, n_active] f32
+    _idx_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy device dst
     _col_shards: Optional[dict] = None  # (n_shards, tile) -> ColumnShards
     _gmask_sharded: Optional[dict] = None  # mesh device ids -> sharded gmask
     _stream_plans: Optional[dict] = None  # (gi, n_shards, tile) -> StreamPlan
     _stream_dev: Optional[dict] = None  # (gi, mesh key) -> (src, dst) buffers
+    _active_idx_dev: Optional[jax.Array] = None  # lazy [n_active] global ids
+    _frozen_mask_dev: Optional[jax.Array] = None  # lazy [n] bool
+    _live_pos_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy live cols
 
     @property
     def n_groups(self) -> int:
@@ -607,32 +769,81 @@ class GroupLayout:
 
     @property
     def idx_dev(self) -> Tuple[jax.Array, ...]:
-        """Per-group global column indices on device — staged once per
-        layout so the per-round jitted scatters don't re-upload O(n_g)
-        index vectors every round."""
+        """Per-group PANEL-space scatter destinations on device — staged
+        once per layout so the per-round jitted scatters don't re-upload
+        O(n_g) index vectors every round.  For a frozen layout only the
+        LIVE destinations are staged (ordered to match
+        :attr:`live_pos_dev`'s column selection): the replicated scatter
+        consumes the already-narrowed group panel."""
         if self._idx_dev is None:
-            self._idx_dev = tuple(jnp.asarray(ix) for ix in self.idx)
+            if self.frozen is None:
+                self._idx_dev = tuple(jnp.asarray(d) for d in self.dst)
+            else:
+                self._idx_dev = tuple(
+                    jnp.asarray(self.group_active_cols(gi))
+                    for gi in range(self.n_groups)
+                )
         return self._idx_dev
 
     @property
+    def live_pos_dev(self) -> Tuple[jax.Array, ...]:
+        """Per-group positions (columns of the local ``[K_g, n_g]`` panel)
+        that survive freezing, staged UNCOMMITTED so the source-side
+        ``_live_take`` gather runs wherever the group panel lives — frozen
+        columns are dropped before the panel streams anywhere."""
+        if self._live_pos_dev is None:
+            assert self.frozen is not None
+            self._live_pos_dev = tuple(
+                jnp.asarray(np.nonzero(d < self.n_active)[0])
+                for d in self.dst
+            )
+        return self._live_pos_dev
+
+    @property
+    def active_idx_dev(self) -> jax.Array:
+        """``[n_active]`` stable global ids of the surviving panel columns,
+        staged on device — the gather/expand map between the full ``prev``
+        vector and the compressed kernel space (frozen layouts only)."""
+        if self._active_idx_dev is None:
+            assert self.frozen is not None
+            self._active_idx_dev = jnp.asarray(self.frozen.active_idx)
+        return self._active_idx_dev
+
+    @property
+    def frozen_mask_dev(self) -> jax.Array:
+        """``[n]`` bool frozen mask on device (frozen layouts only) — the
+        serial oracle's stop-updating overwrite reads it."""
+        if self._frozen_mask_dev is None:
+            assert self.frozen is not None
+            self._frozen_mask_dev = jnp.asarray(self.frozen.mask)
+        return self._frozen_mask_dev
+
+    def group_active_cols(self, gi: int) -> np.ndarray:
+        """Panel-space columns group ``gi`` actually writes — its ``dst``
+        entries below ``n_active`` (all of them when nothing is frozen)."""
+        d = self.dst[gi]
+        return d[d < self.n_active]
+
+    @property
     def gmask(self) -> jax.Array:
-        """[G, n] per-GROUP membership (one row per structure group) —
-        materialized on first use so the serial/identity paths (which never
-        read it) pay nothing.  This is the only membership array the fused
-        path stages: K_total/G smaller than the per-client mask."""
+        """[G, n_active] per-GROUP membership (one row per structure
+        group) — materialized on first use so the serial/identity paths
+        (which never read it) pay nothing.  This is the only membership
+        array the fused path stages: K_total/G smaller than the per-client
+        mask.  Frozen columns have no panel slot, hence no mask entry."""
         if self._gmask is None:
             if self.identity:
                 self._gmask = jnp.ones((1, self.n), jnp.float32)
             else:
-                m = np.zeros((self.n_groups, self.n), np.float32)
-                for gi, ix in enumerate(self.idx):
-                    m[gi, ix] = 1.0
+                m = np.zeros((self.n_groups, self.n_active), np.float32)
+                for gi in range(self.n_groups):
+                    m[gi, self.group_active_cols(gi)] = 1.0
                 self._gmask = jnp.asarray(m)
         return self._gmask
 
     @property
     def legacy_mask(self) -> jax.Array:
-        """[k_total, n] per-CLIENT membership — escape hatch for the
+        """[k_total, n_active] per-CLIENT membership — escape hatch for the
         ``fedavg_masked`` oracle/benchmark path only; the fused round never
         materializes it (the group rows just repeat within each group)."""
         if self._legacy_mask is None:
@@ -640,22 +851,24 @@ class GroupLayout:
                 self._legacy_mask = jnp.ones((self.k_total, self.n),
                                              jnp.float32)
             else:
-                m = np.zeros((self.k_total, self.n), np.float32)
-                for r, k, ix in zip(self.rows, self.ks, self.idx):
-                    m[r : r + k, ix] = 1.0
+                m = np.zeros((self.k_total, self.n_active), np.float32)
+                for gi, (r, k) in enumerate(zip(self.rows, self.ks)):
+                    m[r : r + k, self.group_active_cols(gi)] = 1.0
                 self._legacy_mask = jnp.asarray(m)
         return self._legacy_mask
 
     def column_shards(self, n_shards: int, tile: int = AGG_TILE) -> ColumnShards:
-        """Cached tile-aligned column partition of this layout's ``n``
-        columns over ``n_shards`` devices (host metadata only — the offsets
-        the sharded scatter and the memory model both key off)."""
+        """Cached tile-aligned column partition of this layout's
+        ``n_active`` PANEL columns over ``n_shards`` devices (host metadata
+        only — the offsets the sharded scatter and the memory model both
+        key off).  A freeze event builds a NEW layout, so the partition
+        shrinks with the panel and per-device column counts decay."""
         if self._col_shards is None:
             self._col_shards = {}
         key = (n_shards, tile)
         cs = self._col_shards.get(key)
         if cs is None:
-            n_cols = -(-max(self.n, 1) // n_shards)
+            n_cols = -(-max(self.n_active, 1) // n_shards)
             n_shard = -(-n_cols // tile) * tile
             cs = ColumnShards(
                 n_shards, tile, n_shard, n_shard * n_shards,
@@ -680,7 +893,9 @@ class GroupLayout:
         gm = self._gmask_sharded.get(key)
         if gm is None:
             cs = self.column_shards(mesh.shape["model"])
-            padded = jnp.pad(self.gmask, ((0, 0), (0, cs.n_padded - self.n)))
+            padded = jnp.pad(
+                self.gmask, ((0, 0), (0, cs.n_padded - self.n_active))
+            )
             gm = jax.device_put(padded, NamedSharding(mesh, P(None, "model")))
             self._gmask_sharded[key] = gm
         return gm
@@ -688,26 +903,38 @@ class GroupLayout:
     def stream_plan(self, gi: int, n_shards: int,
                     tile: int = AGG_TILE) -> StreamPlan:
         """Cached :class:`StreamPlan` for group ``gi`` over ``n_shards``
-        column shards (host metadata only): partition the group's global
-        column indices by destination shard and chunk each shard's share to
-        at most ``m_chunk`` columns per pass."""
+        column shards (host metadata only): partition the group's LIVE
+        panel-space columns by destination shard and chunk each shard's
+        share to at most ``m_chunk`` columns per pass.  Frozen columns are
+        absent from the plan entirely — they are never gathered off the
+        source device, never transferred, never scattered — and ``m_chunk``
+        is sized from the live count, so the per-pass stream bound decays
+        with the frozen fraction."""
         if self._stream_plans is None:
             self._stream_plans = {}
         key = (gi, n_shards, tile)
         sp = self._stream_plans.get(key)
         if sp is None:
             cs = self.column_shards(n_shards, tile)
-            ix = self.idx[gi]
-            n_g = int(ix.size)
-            even = -(-n_g // n_shards)  # ceil(n_g / D)
-            m_chunk = min(n_g, -(-even // tile) * tile)
-            if m_chunk == 0:  # empty group tree: nothing to stream
+            d_full = self.dst[gi]
+            n_g = int(d_full.size)  # group panel width (frozen cols incl.)
+            if self.frozen is None:
+                pos, cols = None, d_full
+            else:
+                # positions within the group panel that survive, and the
+                # panel-space columns they land on
+                pos = np.nonzero(d_full < self.n_active)[0]
+                cols = d_full[pos]
+            n_live = int(cols.size)
+            even = -(-n_live // n_shards) if n_live else 0  # ceil(n/D)
+            m_chunk = min(n_live, -(-even // tile) * tile) if n_live else 0
+            if m_chunk == 0:  # empty or fully frozen group: nothing streams
                 sp = StreamPlan(n_shards, 0, 0,
                                 np.zeros((0, n_shards, 0), np.int32),
                                 np.zeros((0, n_shards, 0), np.int32))
             else:
                 sels = [
-                    np.nonzero((ix >= off) & (ix < off + cs.n_shard))[0]
+                    np.nonzero((cols >= off) & (cols < off + cs.n_shard))[0]
                     for off in cs.offsets
                 ]
                 n_chunks = max(-(-s.size // m_chunk) for s in sels)
@@ -717,8 +944,9 @@ class GroupLayout:
                 for d, sel in enumerate(sels):
                     for c in range(-(-sel.size // m_chunk)):
                         part = sel[c * m_chunk:(c + 1) * m_chunk]
-                        src[c, d, : part.size] = part
-                        dst[c, d, : part.size] = ix[part] - cs.offsets[d]
+                        spart = part if pos is None else pos[part]
+                        src[c, d, : part.size] = spart
+                        dst[c, d, : part.size] = cols[part] - cs.offsets[d]
                 sp = StreamPlan(n_shards, m_chunk, n_chunks, src, dst)
             self._stream_plans[key] = sp
         return sp
@@ -758,6 +986,9 @@ class GroupLayout:
         self._idx_dev = None
         self._gmask_sharded = None
         self._stream_dev = None
+        self._active_idx_dev = None
+        self._frozen_mask_dev = None
+        self._live_pos_dev = None
 
 
 _LAYOUT_CACHE: BoundedCache = BoundedCache(
@@ -802,7 +1033,20 @@ def _group_submeshes(mesh: Mesh, ks: Tuple[int, ...]):
 
 
 def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
-                      global_bn) -> GroupLayout:
+                      global_bn, frozen=None) -> GroupLayout:
+    """Cached :class:`GroupLayout` for ``plans`` against the global trees,
+    optionally compressed by a frozen-column epoch (``frozen``: a
+    :class:`FrozenColumns`, or a raw ``[n]`` bool mask normalized through
+    :func:`make_frozen_columns`).
+
+    The cache key includes the epoch (digest-hashed), so two layouts
+    identical up to frozen columns NEVER collide; building a frozen layout
+    eagerly evicts superseded siblings — same structural key, strict-subset
+    frozen mask (the unfrozen original included) — and drops their device
+    buffers, so each freeze event releases the wider panel's
+    gmask/stream/index memory instead of waiting for LRU pressure.
+    (Un-freezing isn't a thing mid-run; an out-of-order epoch just rebuilds
+    its layout from host metadata.)"""
     gspec_tr = make_pack_spec(global_trainable)
     gspec_bn = make_pack_spec(global_bn)
     group_specs = tuple(
@@ -810,26 +1054,52 @@ def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
         for p in plans
     )
     ks = tuple(int(p.xs.shape[0]) for p in plans)
-    key = (gspec_tr, gspec_bn, group_specs, ks)
+    n = gspec_tr.n + gspec_bn.n
+    if frozen is not None and not isinstance(frozen, FrozenColumns):
+        frozen = make_frozen_columns(frozen)
+    if frozen is not None and frozen.n != n:
+        raise ValueError(
+            f"frozen mask covers {frozen.n} columns, layout has {n}"
+        )
+    skey = (gspec_tr, gspec_bn, group_specs, ks)
+    key = skey + (frozen,)
     layout = _LAYOUT_CACHE.get(key)
     if layout is not None:
         return layout
 
-    n = gspec_tr.n + gspec_bn.n
-    # identity (every ProFL round): group specs ARE the global specs, so the
-    # scatter is arange(n) — skip building the O(n) index arrays entirely
-    identity = len(plans) == 1 and group_specs[0] == (gspec_tr, gspec_bn)
-    idx, rows, row = [], [], 0
+    if frozen is not None:
+        # freeze-event invalidation (see docstring)
+        for stale_key in [k for k, v in list(_LAYOUT_CACHE.items())
+                          if k[:4] == skey and frozen.supersedes(v.frozen)]:
+            _LAYOUT_CACHE.get(stale_key).drop_device_buffers()
+            del _LAYOUT_CACHE[stale_key]
+
+    # identity (every unfrozen ProFL round): group specs ARE the global
+    # specs, so the scatter is arange(n) — skip building the O(n) index
+    # arrays entirely.  A frozen epoch always needs the index machinery.
+    identity = (frozen is None and len(plans) == 1
+                and group_specs[0] == (gspec_tr, gspec_bn))
+    n_active = n if frozen is None else frozen.n_active
+    if frozen is None:
+        col_map = None
+    else:
+        # global id -> compressed panel column; frozen ids -> the n_active
+        # sentinel every scatter drops device-side
+        col_map = np.full(n, n_active, np.int64)
+        col_map[frozen.active_idx] = np.arange(n_active, dtype=np.int64)
+    idx, dst, rows, row = [], [], [], 0
     for plan in plans:
         if not identity:
             idx_tr = _scatter_index(global_trainable, gspec_tr, plan.trainable)
             idx_bn = _scatter_index(global_bn, gspec_bn, plan.bn_state)
-            idx.append(np.concatenate([idx_tr, gspec_tr.n + idx_bn]))
+            ix = np.concatenate([idx_tr, gspec_tr.n + idx_bn])
+            idx.append(ix)
+            dst.append(ix if col_map is None else col_map[ix])
         rows.append(row)
         row += plan.xs.shape[0]
     layout = GroupLayout(
         gspec_tr, gspec_bn, n, row, tuple(rows), ks, tuple(idx), group_specs,
-        identity,
+        identity, frozen, n_active, tuple(dst),
     )
     _LAYOUT_CACHE[key] = layout
     return layout
@@ -879,14 +1149,18 @@ def _grouped_unpack(layout: GroupLayout, flat, losses_w, w_total):
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_group_panel(panel, gpanel, ix, row):
     """Scatter one group's [K_g, n_g] panel into its contiguous row block of
-    the shared [K_total, n] panel, entirely under jit: the group columns
-    gather-scatter into a zeroed row block, ``dynamic_update_slice`` lands
-    the rows.  The shared panel buffer is DONATED so XLA can update it in
-    place instead of copying K_total·n floats per group, and nothing here
+    the shared [K_total, n_active] panel, entirely under jit: the group
+    columns gather-scatter into a zeroed row block, ``dynamic_update_slice``
+    lands the rows.  The shared panel buffer is DONATED so XLA can update it
+    in place instead of copying K_total·n floats per group, and nothing here
     touches the host — the per-group scatters pipeline behind the local-SGD
-    dispatches."""
+    dispatches.  ``ix`` is the layout's PANEL-space destination set
+    (``idx_dev`` — live columns only under a frozen epoch, matching the
+    ``_live_take``-narrowed ``gpanel``); ``mode='drop'`` guards any
+    out-of-range index instead of jax's default CLAMP onto the last live
+    column."""
     block = jnp.zeros((gpanel.shape[0], panel.shape[1]), panel.dtype)
-    block = block.at[:, ix].set(gpanel)
+    block = block.at[:, ix].set(gpanel, mode="drop")
     return jax.lax.dynamic_update_slice(panel, block, (row, 0))
 
 
@@ -928,6 +1202,16 @@ def _sharded_zeros_fn(shape: Tuple[int, ...], sharding: NamedSharding):
 
 
 @jax.jit
+def _live_take(gpanel, pos):
+    """Source-side gather of a group panel's live columns (frozen layouts,
+    replicated agg): runs wherever the ``[K_g, n_g]`` panel already lives,
+    so only the narrowed ``[K_g, n_live]`` panel ever streams to the
+    aggregation device and the downstream scatter never sees a frozen
+    column."""
+    return jnp.take(gpanel, pos, axis=1)
+
+
+@jax.jit
 def _stream_gather(gpanel, src):
     """Source-side slice of one group's ``[K_g, n_g]`` panel for ONE stream
     pass: row ``d`` of the ``[D, K_g, m]`` result holds exactly the group
@@ -960,6 +1244,12 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     device(s) so each agg device only ever receives its own columns,
     scatters are shard-local, and the one logical dispatch lowers to one
     shard-local kernel launch per device (see the module docstring).
+
+    A frozen layout runs the SAME pipeline over the ``n_active``-column
+    compressed panel: the kernel sees ``prev`` gathered to the live columns
+    and its output is expanded back to the stable full space (frozen
+    columns keep their previous values) BEFORE the one aggregation
+    barrier — still exactly one logical dispatch and one sync.
     """
     if layout.identity:
         # degenerate single-group round (every ProFL round): the mask is all
@@ -996,7 +1286,7 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
             NamedSharding(agg_mesh, P(None, "model")),
         )()
     else:
-        panel = jnp.zeros((layout.k_total, layout.n), jnp.float32)
+        panel = jnp.zeros((layout.k_total, layout.n_active), jnp.float32)
     group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
     losses = []
     stream_elems = 0  # max per-device footprint of any streamed group buffer
@@ -1017,6 +1307,10 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                 plan.loss_fn, tr_g, fro_g, bn_g, xs_g, ys_g, rngs_g,
                 mesh=gmesh, **kw,
             )
+            if not sharded and layout.frozen is not None:
+                # drop frozen columns ON THE SOURCE device(s): the stream
+                # to the aggregation device only carries live columns
+                gpanel = _live_take(gpanel, layout.live_pos_dev[gi])
             if submeshes is not None and not sharded:
                 # stream the finished group panel off its sub-mesh onto the
                 # aggregation device — device_put is async dispatch, so this
@@ -1030,6 +1324,8 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                 plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
                 plan.xs, plan.ys, plan.rngs, **kw,
             )
+            if not sharded and layout.frozen is not None:
+                gpanel = _live_take(gpanel, layout.live_pos_dev[gi])
         if sharded:
             # shard-local stream: slice the finished [K_g, n_g] panel per
             # column shard ON ITS SOURCE device(s), land each pass's
@@ -1059,11 +1355,15 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     w = jnp.concatenate(group_w)
     wsum = jnp.stack([jnp.sum(gw) for gw in group_w])
     prev = _grouped_prev(layout, global_trainable, global_bn)
+    # compressed-space prev for the kernel: frozen columns never reach it
+    prev_act = (prev if layout.frozen is None
+                else jnp.take(prev, layout.active_idx_dev))
     AGG_STATS.clear()
     AGG_STATS.update(
         agg=agg, kernel=kernel, n=layout.n, k_total=layout.k_total,
+        n_active=layout.n_active, n_frozen=layout.n - layout.n_active,
         n_shards=cs.n_shards if sharded else 1,
-        n_padded=cs.n_padded if sharded else layout.n,
+        n_padded=cs.n_padded if sharded else layout.n_active,
         per_device_panel_elems=math.prod(
             panel.sharding.shard_shape(panel.shape)
         ),
@@ -1076,9 +1376,13 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
         per_device_stream_elems=stream_elems,
         stream_chunks=stream_chunks,
     )
-    if sharded:
-        pad = cs.n_padded - layout.n
-        prev_p = jnp.pad(prev, (0, pad)) if pad else prev
+    if layout.n_active == 0:
+        # fully frozen layout: nothing left to aggregate — the round's
+        # output is prev verbatim (local SGD still ran for the loss)
+        flat = prev
+    elif sharded:
+        pad = cs.n_padded - layout.n_active
+        prev_p = jnp.pad(prev_act, (0, pad)) if pad else prev_act
         prev_p = jax.device_put(prev_p, NamedSharding(agg_mesh, P("model")))
         if kernel == "grouped":
             flat = ops.fedavg_grouped_sharded(
@@ -1092,14 +1396,20 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
             )
             flat = ops.fedavg_masked_sharded(panel, w, lmask, prev_p,
                                              mesh=agg_mesh)
-        # the round OUTPUT is the [n] aggregate, not the panel: gather it to
-        # the default device (async) so the next round's single-device local
-        # SGD jits see the same placement as the replicated path
-        flat = jax.device_put(flat[: layout.n], jax.devices()[0])
+        # the round OUTPUT is the [n_active] aggregate, not the panel:
+        # gather it to the default device (async) so the next round's
+        # single-device local SGD jits see the same placement as the
+        # replicated path
+        flat = jax.device_put(flat[: layout.n_active], jax.devices()[0])
     elif kernel == "grouped":
-        flat = ops.fedavg_grouped(panel, w, layout.gmask, wsum, prev)
+        flat = ops.fedavg_grouped(panel, w, layout.gmask, wsum, prev_act)
     else:
-        flat = ops.fedavg_masked(panel, w, layout.legacy_mask, prev)
+        flat = ops.fedavg_masked(panel, w, layout.legacy_mask, prev_act)
+    if layout.frozen is not None and layout.n_active > 0:
+        # expand back to the stable full coordinate space: frozen columns
+        # keep their previous global values untouched.  Async dispatch —
+        # the round still syncs exactly once, below.
+        flat = prev.at[layout.active_idx_dev].set(flat)
     losses_w = sum(
         jnp.sum(gw * l) for gw, l in zip(group_w, losses)
     )
@@ -1148,6 +1458,10 @@ def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout):
         w_total = w_total + wsum
     prev = _grouped_prev(layout, global_trainable, global_bn)
     flat = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
+    if layout.frozen is not None:
+        # the oracle semantics of a frozen column: the server simply stops
+        # updating it, whatever the clients sent
+        flat = jnp.where(layout.frozen_mask_dev, prev, flat)
     new_tr, new_bn, loss = _grouped_unpack(layout, flat, losses_w, w_total)
     return GroupedResult(new_tr, new_bn, loss, None)
 
@@ -1232,6 +1546,7 @@ class CohortEngine:
         *,
         impl: Optional[str] = None,
         agg: Optional[str] = None,
+        frozen=None,
     ) -> GroupedResult:
         """One heterogeneous round over ``plans`` (see module docstring).
 
@@ -1249,7 +1564,14 @@ class CohortEngine:
         ``model`` axis — the panel never materializes on a single device),
         or ``"auto"``/``None`` for the engine default (``auto`` resolves to
         sharded exactly when the agg mesh has a multi-device ``model``
-        axis).  The serial oracle ignores ``agg``."""
+        axis).  The serial oracle ignores ``agg``.
+
+        ``frozen`` is an optional frozen-column epoch (a
+        :class:`FrozenColumns` or a raw ``[n]`` bool mask over the global
+        ``[trainable | bn]`` packed space): frozen columns leave the
+        panel, the stream, and the kernel, and keep their previous global
+        values — see the module docstring's freezing-aware-layouts
+        section."""
         if not plans:
             raise ValueError("grouped_round needs at least one GroupPlan")
         if impl is None:
@@ -1262,7 +1584,8 @@ class CohortEngine:
                    and self.agg_mesh.shape["model"] > 1 else "replicated")
         if agg not in ("replicated", "sharded"):
             raise ValueError(f"unknown agg {agg!r} (one of {AGG_MODES})")
-        layout = make_group_layout(plans, global_trainable, global_bn)
+        layout = make_group_layout(plans, global_trainable, global_bn,
+                                   frozen=frozen)
         if impl == "serial":
             return _grouped_serial(plans, global_trainable, global_bn, layout)
         mesh = self.mesh if self.mode == "sharded" else None

@@ -174,50 +174,70 @@ AGG_TILE = 128
 
 def agg_columns_per_device(n: int, *, n_devices: int = 1,
                            agg: str = "replicated",
-                           tile: int = AGG_TILE) -> int:
-    """Columns of the shared ``[K_total, n]`` panel resident on ONE device
-    under the given aggregation placement: all ``n`` when replicated, the
-    tile-aligned ``ceil(ceil(n / D) / tile) · tile`` column block when
-    column-sharded over a ``D``-device ``model`` axis (fl/engine.py::
-    GroupLayout.column_shards uses the same rounding)."""
+                           tile: int = AGG_TILE,
+                           n_frozen: int = 0) -> int:
+    """Columns of the shared ``[K_total, n_active]`` panel resident on ONE
+    device under the given aggregation placement: all ``n_active`` when
+    replicated, the tile-aligned ``ceil(ceil(n_active / D) / tile) · tile``
+    column block when column-sharded over a ``D``-device ``model`` axis
+    (fl/engine.py::GroupLayout.column_shards uses the same rounding over
+    ``max(n_active, 1)``).
+
+    ``n_frozen`` is the freezing-aware-layouts term: columns the engine's
+    frozen-column epoch (fl/engine.py::FrozenColumns) dropped from the
+    panel entirely, so ``n_active = n - n_frozen`` and the per-device
+    figure DECAYS at each freeze point — the server-side half of the
+    paper's peak-memory-decay claim."""
+    if not 0 <= n_frozen <= n:
+        raise ValueError(f"n_frozen={n_frozen} outside [0, {n}]")
+    n_act = n - n_frozen
     if agg == "replicated":
-        return n
+        return n_act
     if agg != "sharded":
         raise ValueError(f"unknown agg mode {agg!r}")
-    n_cols = -(-max(n, 1) // n_devices)
+    n_cols = -(-max(n_act, 1) // n_devices)
     return -(-n_cols // tile) * tile
 
 
 def agg_stream_cols_per_device(n_g: int, *, n_devices: int = 1,
                                agg: str = "replicated",
-                               tile: int = AGG_TILE) -> int:
-    """Columns of one group's ``[K_g, n_g]`` panel transiently resident on
-    ONE agg device PER STREAM PASS while the group streams into the shared
-    panel: all ``n_g`` when replicated (the whole panel lands on the
-    aggregation device), the tile-aligned even share
-    ``min(n_g, ⌈⌈n_g/D⌉/tile⌉·tile)`` under the shard-local stream
+                               tile: int = AGG_TILE,
+                               n_frozen: int = 0) -> int:
+    """Columns of one group's ``[K_g, n_live]`` panel transiently resident
+    on ONE agg device PER STREAM PASS while the group streams into the
+    shared panel: all ``n_live`` when replicated (the whole panel lands on
+    the aggregation device), the tile-aligned even share
+    ``min(n_live, ⌈⌈n_live/D⌉/tile⌉·tile)`` under the shard-local stream
     (fl/engine.py::GroupLayout.stream_plan uses the same ``m_chunk`` — a
     concentrated group streams in ≤ D passes of that width instead of one
     wide slice; the engine's module docstring records the transfer-pacing
-    caveat on multiple passes being resident at once)."""
+    caveat on multiple passes being resident at once).
+
+    ``n_frozen`` counts THIS GROUP'S columns dropped by the frozen-column
+    epoch — stream_plan gathers only the live columns before staging, so
+    ``n_live = n_g - n_frozen`` and frozen columns never cross the wire."""
+    if not 0 <= n_frozen <= n_g:
+        raise ValueError(f"n_frozen={n_frozen} outside [0, {n_g}]")
+    n_live = n_g - n_frozen
     if agg == "replicated":
-        return n_g
+        return n_live
     if agg != "sharded":
         raise ValueError(f"unknown agg mode {agg!r}")
-    even = -(-max(n_g, 0) // n_devices)
-    return min(n_g, -(-even // tile) * tile)
+    even = -(-max(n_live, 0) // n_devices)
+    return min(n_live, -(-even // tile) * tile)
 
 
 def agg_stream_elems_per_device(k_g: int, n_g: int, *, n_devices: int = 1,
                                 agg: str = "replicated",
-                                tile: int = AGG_TILE) -> int:
+                                tile: int = AGG_TILE,
+                                n_frozen: int = 0) -> int:
     """Per-device transient elements of one group's stream buffer —
     ``K_g`` rows × :func:`agg_stream_cols_per_device` columns.  The engine
     records the measured counterpart in ``engine.AGG_STATS
     ["per_device_stream_elems"]`` (max over the round's groups, from the
     real transfer sharding); tests/test_contract.py pins the two equal."""
     return k_g * agg_stream_cols_per_device(
-        n_g, n_devices=n_devices, agg=agg, tile=tile
+        n_g, n_devices=n_devices, agg=agg, tile=tile, n_frozen=n_frozen
     )
 
 
@@ -231,6 +251,7 @@ def server_aggregation_peak_bytes(
     groups: Optional[List[tuple]] = None,
     tile: int = AGG_TILE,
     elem_bytes: int = 4,
+    n_frozen: int = 0,
 ) -> int:
     """Per-DEVICE peak bytes of the fused grouped aggregation
     (fl/engine.py::_grouped_fused with the ``fedavg_grouped`` kernel):
@@ -256,12 +277,25 @@ def server_aggregation_peak_bytes(
     column shard on their source devices, so a near-full-width majority
     group can no longer transiently re-approach ``K·n`` on one agg device
     the way the PR 4 replicated stream allowed.  Without ``groups`` the
-    figure covers the persistent buffers only (the PR 4 behavior)."""
-    n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg, tile=tile)
+    figure covers the persistent buffers only (the PR 4 behavior).
+
+    Freezing-aware layouts: ``n_frozen`` columns dropped by the engine's
+    frozen-column epoch shrink EVERY term — panel, gmask, scratch, and
+    stream all size over ``n_active = n - n_frozen`` (the engine rebuilds
+    ``column_shards``/``stream_plan``/``stream_buffers`` over the
+    compressed panel at each freeze event; fl/engine.py module docstring,
+    "Freezing-aware layouts").  ``groups`` entries may carry a per-group
+    frozen count as an optional third element ``(K_g, n_g, frozen_g)`` —
+    omitted, a group is assumed fully live.  Per-device bytes therefore
+    DECAY at each freeze point, and tests/test_contract.py pins this
+    figure to the measured ``AGG_STATS`` across a freeze transition."""
+    n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg, tile=tile,
+                                   n_frozen=n_frozen)
     stream = max(
-        (agg_stream_elems_per_device(kg, ng, n_devices=n_devices, agg=agg,
-                                     tile=tile)
-         for kg, ng in groups),
+        (agg_stream_elems_per_device(g[0], g[1], n_devices=n_devices, agg=agg,
+                                     tile=tile,
+                                     n_frozen=g[2] if len(g) > 2 else 0)
+         for g in groups),
         default=0,
     ) if groups else 0
     return elem_bytes * (

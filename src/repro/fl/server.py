@@ -48,6 +48,11 @@ class FLConfig:
     # cohort engine: auto (default: sharded on multi-device, packed otherwise)
     # | vmap (the reference oracle) | packed | sharded
     engine: str = "auto"
+    # freezing-aware layouts: track per-proxy effective movement and drop
+    # converged proxies' columns from the aggregation panel/stream/kernel
+    # (fl/engine.py::grouped_round(frozen=...)).  The step-termination EM
+    # over the whole trainable tree is unaffected by this knob.
+    freeze_layouts: bool = True
 
 
 class ProFLServer:
@@ -131,6 +136,21 @@ class ProFLServer:
         info = {"stage": stage, "t": t, "rounds": 0, "pr": 0.0}
         uplink = sum(x.size for x in jax.tree.leaves(trainable))
 
+        # freezing-aware layouts: a per-PROXY FreezeTracker over stable
+        # packed column ids.  Proxies that converge before the active block
+        # leave the panel, the stream, and the kernel for the rest of the
+        # step (grouped_round(frozen=...)) — the whole-tree em_state above
+        # still decides when the STEP ends, engine-invariantly.
+        tracker, fro_cols = None, None
+        if fl.freeze_layouts and trainable["op"]["proxies"]:
+            blocks = {
+                f"['op']['proxies'][{i}]": ENG.columns_for_paths(
+                    trainable, [f"['op']['proxies'][{i}]"]
+                )
+                for i in range(len(trainable["op"]["proxies"]))
+            }
+            tracker = EM.FreezeTracker(fl.em, blocks)
+
         for rnd in range(fl.max_rounds_per_step):
             sel, pr = self._select(need_mb)
             info["pr"] = pr
@@ -144,19 +164,24 @@ class ProFLServer:
                 loss_fn, trainable, frozen, self.bn_state, xs, ys, rngs, w,
                 fl.lr, fl.local_steps, fl.batch_size,
             )
-            res = self.engine.grouped_round([plan], trainable, self.bn_state)
+            res = self.engine.grouped_round([plan], trainable, self.bn_state,
+                                            frozen=fro_cols)
             trainable, self.bn_state, loss = res.trainable, res.bn_state, res.loss
             self.total_uplink_params += uplink * len(sel)
             info["rounds"] = rnd + 1
             # packed engines hand back the flat aggregated vector — feed EM
             # directly, skipping the per-round tree re-flatten
-            if res.packed is not None:
-                em_val = EM.em_update_flat(fl.em, em_state, res.packed)
-            else:
-                em_val = EM.em_update(fl.em, em_state, trainable)
+            flat = (res.packed if res.packed is not None
+                    else EM.flatten_params(trainable))
+            em_val = EM.em_update_flat(fl.em, em_state, flat)
+            if tracker is not None and tracker.update(flat):
+                fro_cols = ENG.frozen_columns_for_paths(
+                    trainable, self.bn_state, tracker.frozen_names
+                )
             rec = {
                 "stage": stage, "t": t, "round": rnd, "loss": float(loss),
                 "em": em_val, "pr": pr,
+                "n_frozen": 0 if fro_cols is None else fro_cols.n_frozen,
             }
             if (rnd + 1) % fl.eval_every == 0:
                 rec["sub_acc"] = self.eval_submodel(frozen, trainable, t)

@@ -29,6 +29,14 @@ column-sharded aggregation + shard-local group-panel streaming in one
 round, bit-equal to the replicated path, with n not divisible by the shard
 count and a wide-group case where the stream slice is strictly smaller
 than the full group panel).
+
+The FROZEN-column axis (ISSUE 6) re-runs the conformance idea against a
+freezing-aware layout: ``grouped_round(frozen=...)`` must be identical to
+simply not updating the frozen columns (bit-equal passthrough, live
+columns vs the unfrozen oracle), keep every round contract over the
+shrunken panel, and make the measured per-device panel/stream figures
+decay by the frozen fraction exactly as the memory model's
+``n_frozen`` term predicts — including on the composed mesh.
 """
 import os
 import subprocess
@@ -275,6 +283,190 @@ def test_sharded_agg_bit_equal_to_replicated(mixed_world):
                     jax.tree.leaves(got_s.trainable)):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# frozen-column layouts: the freeze-at-round-r conformance axis
+# ---------------------------------------------------------------------------
+
+# the leaf frozen in the mixed fixture (both blocks[1] trainable columns;
+# no bn leaf matches, so the epoch is trainable-only here)
+_FROZEN_PREFIX = "['blocks'][1]"
+
+# tier-1 allowlist for the frozen axis; everything else runs in the slow job
+FROZEN_TIER1 = {
+    ("vmap", "serial", "replicated"),
+    ("packed", "serial", "replicated"),
+    ("packed", "fused", "replicated"),
+    ("packed", "fused", "sharded"),
+    ("packed", "fused_masked", "replicated"),
+    ("sharded", "fused", "sharded"),
+}
+
+
+@pytest.fixture(scope="module")
+def mixed_frozen(mixed_world):
+    plans, gtr, gbn, want = mixed_world
+    fro = ENG.frozen_columns_for_paths(gtr, gbn, [_FROZEN_PREFIX])
+    assert fro is not None and 0 < fro.n_frozen < fro.n
+    return plans, gtr, gbn, want, fro
+
+
+def _frozen_matrix():
+    for mode in MODES:
+        for impl in IMPLS:
+            for agg in AGGS:
+                marks = ()
+                if (mode, impl, agg) not in FROZEN_TIER1:
+                    marks = (pytest.mark.slow,)
+                yield pytest.param(mode, impl, agg, marks=marks,
+                                   id=f"{mode}-{impl}-{agg}")
+
+
+@pytest.mark.parametrize("mode,impl,agg", list(_frozen_matrix()))
+def test_frozen_contract(mode, impl, agg, mixed_frozen):
+    """Freezing columns must be IDENTICAL to simply not updating them: the
+    frozen leaf passes through BIT-equal to the round's input, live leaves
+    match the unfrozen vmap oracle, and the packed fast-path vector still
+    re-packs the returned tree exactly."""
+    plans, gtr, gbn, want, fro = mixed_frozen
+    got = ENG.make_engine(mode).grouped_round(
+        plans, gtr, gbn, impl=impl, agg=agg, frozen=fro
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.trainable["blocks"][1]), np.asarray(gtr["blocks"][1])
+    )
+    oracle = {
+        "w": want.trainable["w"],
+        "b": want.trainable["b"],
+        "blocks": [want.trainable["blocks"][0], gtr["blocks"][1]],
+    }
+    _tree_close(oracle, got.trainable)
+    _tree_close(want.bn_state, got.bn_state)
+    np.testing.assert_allclose(float(want.loss), float(got.loss), atol=1e-5)
+    if impl != "serial":
+        assert got.packed is not None
+        np.testing.assert_array_equal(
+            np.asarray(got.packed),
+            np.asarray(ENG.make_pack_spec(gtr).pack(got.trainable)),
+        )
+
+
+def test_frozen_bit_equal_replicated_vs_sharded(mixed_frozen):
+    """The frozen epoch preserves the exactness contract: column-sharded
+    aggregation over the SHRUNKEN panel is bit-equal to replicated."""
+    plans, gtr, gbn, _, fro = mixed_frozen
+    eng = ENG.make_engine("packed")
+    got_r = eng.grouped_round(plans, gtr, gbn, agg="replicated", frozen=fro)
+    got_s = eng.grouped_round(plans, gtr, gbn, agg="sharded", frozen=fro)
+    for a, b in zip(jax.tree.leaves(got_r.trainable),
+                    jax.tree.leaves(got_s.trainable)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_frozen_round_contracts_hold(mixed_frozen):
+    """The round contracts survive a freeze transition: still exactly one
+    logical ``fedavg_grouped`` dispatch and one ``block_until_ready`` with
+    the compressed panel."""
+    plans, gtr, gbn, _, fro = mixed_frozen
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded", frozen=fro)  # warm
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    OPS.reset_dispatches()
+    jax.block_until_ready = counting
+    try:
+        ENG.reset_syncs()
+        eng.grouped_round(plans, gtr, gbn, agg="sharded", frozen=fro)
+    finally:
+        jax.block_until_ready = real
+    assert OPS.DISPATCHES["fedavg_grouped"] == 1
+    assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+    assert ENG.SYNCS["aggregation_barrier"] == 1
+    ENG.reset_syncs()
+    OPS.reset_dispatches()
+
+
+def test_frozen_agg_stats_decay_and_match_model(mixed_frozen):
+    """After the freeze event the measured per-device panel and stream
+    figures still equal the analytic model WITH its frozen-fraction term,
+    and they decay versus the unfrozen round wherever the model says they
+    must (replicated always; sharded up to tile padding)."""
+    plans, gtr, gbn, _, fro = mixed_frozen
+    eng = ENG.make_engine("packed")
+    layout = ENG.make_group_layout(plans, gtr, gbn, frozen=fro)
+    g_n = [int(ix.size) for ix in layout.idx]
+    g_f = [int(np.sum(d >= layout.n_active)) for d in layout.dst]
+    for agg in AGGS:
+        eng.grouped_round(plans, gtr, gbn, agg=agg)
+        st0 = dict(ENG.AGG_STATS)
+        eng.grouped_round(plans, gtr, gbn, agg=agg, frozen=fro)
+        st1 = dict(ENG.AGG_STATS)
+        assert st1["n_frozen"] == fro.n_frozen
+        assert st1["n_active"] == fro.n_active
+        D = st1["n_shards"]
+        panel_model = st1["k_total"] * MM.agg_columns_per_device(
+            layout.n, n_devices=D, agg=agg, n_frozen=fro.n_frozen
+        )
+        stream_model = max(
+            MM.agg_stream_elems_per_device(k, n_g, n_devices=D, agg=agg,
+                                           n_frozen=f)
+            for k, n_g, f in zip(layout.ks, g_n, g_f)
+        )
+        assert st1["per_device_panel_elems"] == panel_model
+        assert st1["per_device_stream_elems"] == stream_model
+        # decay exactly when the model (tile padding included) decays; the
+        # replicated figures have no padding, so they must strictly drop
+        panel_model0 = st0["k_total"] * MM.agg_columns_per_device(
+            layout.n, n_devices=D, agg=agg
+        )
+        assert (st1["per_device_panel_elems"] < st0["per_device_panel_elems"]) \
+            == (panel_model < panel_model0)
+        if agg == "replicated":
+            assert st1["per_device_panel_elems"] < st0["per_device_panel_elems"]
+            assert st1["per_device_stream_elems"] < st0["per_device_stream_elems"]
+
+
+def test_em_tracking_keeps_single_host_sync(mixed_world):
+    """EM bookkeeping riding a fused round (the server's fast path feeds
+    ``res.packed`` straight into ``em_update_flat``) adds ZERO host syncs
+    mid-window: still one ``block_until_ready`` per round, at the
+    aggregation barrier — the regression the per-round ``float()`` syncs
+    used to cause."""
+    from repro.core import effective_movement as EM
+
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    cfg = EM.EMConfig(window_h=10)  # the window never closes in this test
+    res = eng.grouped_round(plans, gtr, gbn)  # warm engine compiles
+    st = EM.em_init(gtr)
+    EM.em_update_flat(cfg, st, res.packed)  # warm the EM kernel
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        ENG.reset_syncs()
+        r = eng.grouped_round(plans, gtr, gbn)
+        # the guard turns ANY implicit device↔host transfer (the old
+        # per-round float() syncs) into an error, both directions
+        with jax.transfer_guard("disallow"):
+            assert EM.em_update_flat(cfg, st, r.packed) is None
+    finally:
+        jax.block_until_ready = real
+    assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+    assert ENG.SYNCS["aggregation_barrier"] == 1
+    ENG.reset_syncs()
 
 
 # ---------------------------------------------------------------------------
@@ -647,6 +839,47 @@ assert st_w["per_device_stream_elems"] < full_w, (st_w, full_w)
 from repro.kernels.fedavg import AGG_TILE
 assert model_w <= max(k * (n_g / 2 + AGG_TILE) for k, n_g in kns_w)
 print("STREAM_SHARDED_OK", st_w["per_device_stream_elems"], "<", full_w)
+
+# FROZEN epoch on the composed mesh: a random half-frozen mask must keep
+# replicated and sharded bit-equal over the SHRUNKEN panel, pass frozen
+# columns through untouched, and make the measured per-device panel AND
+# stream figures decay below the unfrozen round while still matching the
+# memory model's frozen-fraction term — the paper's decay claim, measured
+# on the real 2-shard mesh
+st_w = dict(st_w)  # snapshot before the next round clears AGG_STATS
+mask = np.zeros(layout_w.n, bool)
+mask[np.random.default_rng(7).choice(layout_w.n, layout_w.n // 2,
+                                     replace=False)] = True
+fro = ENG.make_frozen_columns(mask)
+got_fr = eng.grouped_round(plans_w, tr_w, {}, agg="replicated", frozen=fro)
+got_fs = eng.grouped_round(plans_w, tr_w, {}, agg="sharded", frozen=fro)
+st_f = dict(ENG.AGG_STATS)
+for a, b in zip(jax.tree.leaves(got_fr.trainable),
+                jax.tree.leaves(got_fs.trainable)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+spec_w = ENG.make_pack_spec(tr_w)
+prev_w = np.asarray(spec_w.pack(tr_w))
+out_w = np.asarray(spec_w.pack(got_fs.trainable))
+np.testing.assert_array_equal(out_w[mask], prev_w[mask])
+assert not np.array_equal(out_w[~mask], prev_w[~mask])  # live cols moved
+layout_f = ENG.make_group_layout(plans_w, tr_w, {}, frozen=fro)
+g_n = [int(ix.size) for ix in layout_f.idx]
+g_f = [int(np.sum(d >= layout_f.n_active)) for d in layout_f.dst]
+panel_model = st_f["k_total"] * MM.agg_columns_per_device(
+    layout_f.n, n_devices=2, agg="sharded", n_frozen=fro.n_frozen)
+stream_model = max(
+    MM.agg_stream_elems_per_device(k, n_g, n_devices=2, agg="sharded",
+                                   n_frozen=f)
+    for k, n_g, f in zip(layout_f.ks, g_n, g_f))
+assert st_f["n_frozen"] == fro.n_frozen, st_f
+assert st_f["per_device_panel_elems"] == panel_model, (st_f, panel_model)
+assert st_f["per_device_stream_elems"] == stream_model, (st_f, stream_model)
+assert st_f["per_device_panel_elems"] < st_w["per_device_panel_elems"], (
+    st_f, st_w)
+assert st_f["per_device_stream_elems"] < st_w["per_device_stream_elems"], (
+    st_f, st_w)
+print("FROZEN_OK", st_w["per_device_panel_elems"], "->",
+      st_f["per_device_panel_elems"])
 """
 
 
@@ -668,3 +901,4 @@ def test_composed_mesh_sharded_agg_subprocess():
     assert "SECOND_ROUND_OK" in out.stdout
     assert "GMASK_KEYING_OK" in out.stdout
     assert "STREAM_SHARDED_OK" in out.stdout
+    assert "FROZEN_OK" in out.stdout

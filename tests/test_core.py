@@ -122,6 +122,108 @@ def test_freezing_does_not_fire_while_improving():
         assert not EM.should_freeze(cfg, st)
 
 
+def test_em_mid_window_updates_issue_no_host_sync():
+    """A mid-window em_update_flat performs no device↔host transfer in
+    EITHER direction (path accumulates as a device scalar) and never calls
+    block_until_ready; the one explicit device_get happens at window
+    close."""
+    cfg = EM.EMConfig(window_h=3)
+    p = jnp.arange(64.0)
+    ups = [p + float(k) for k in range(1, 4)]
+    warm = EM.em_init(p)
+    EM.em_update_flat(cfg, warm, ups[0])  # warm the fused EM kernel
+    st = EM.em_init(p)
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        with jax.transfer_guard("disallow"):
+            assert EM.em_update_flat(cfg, st, ups[0]) is None
+            assert EM.em_update_flat(cfg, st, ups[1]) is None
+    finally:
+        jax.block_until_ready = real
+    assert calls == []
+    em = EM.em_update_flat(cfg, st, ups[2])  # window close: the one sync
+    assert em is not None and abs(em - 1.0) < 1e-5
+
+
+def test_em_history_is_bounded():
+    """A long run cannot grow the EM history past what slope/should_freeze
+    actually read: max(fit_points, 2) entries."""
+    cfg = EM.EMConfig(window_h=1, fit_points=4)
+    p = jnp.arange(6.0)
+    st = EM.em_init(p)
+    for k in range(1, 41):
+        EM.em_update_flat(cfg, st, p + float(k))
+    assert len(st.history) == max(cfg.fit_points, 2) == 4
+    # the survivors are the LAST windows' values, in order
+    assert st.history == pytest.approx([1.0] * 4)
+
+
+def test_em_state_checkpoint_roundtrip(tmp_path):
+    """below/history/k/prev survive a save/load, so a freeze decision with
+    patience already accumulated continues where it left off instead of
+    resetting — both replicas must freeze on the same later round."""
+    from repro.train import checkpoint as CK
+
+    cfg = EM.EMConfig(window_h=2, slope_phi=0.05, patience_w=3, fit_points=3,
+                      em_level=0.5, min_rounds=2)
+    n = 16
+    st = EM.em_init({"w": jnp.zeros((n,))})
+
+    def osc(r):  # oscillating updates: EM -> 0, slope flat
+        return jnp.full((n,), 0.1 if r % 2 == 0 else 0.0)
+
+    rounds = 0
+    while st.below == 0:  # accumulate some patience, then checkpoint
+        EM.em_update_flat(cfg, st, osc(rounds))
+        if st.history and EM.should_freeze(cfg, st):
+            pytest.fail("froze before the checkpoint point")
+        rounds += 1
+    CK.save(str(tmp_path / "em.npz"), EM.em_state_to_tree(st))
+    st2 = EM.em_state_from_tree(CK.load(str(tmp_path / "em.npz")))
+    assert st2.below == st.below > 0
+    assert st2.k == st.k and st2.rounds == st.rounds
+    assert st2.history == pytest.approx(st.history)
+    np.testing.assert_array_equal(np.asarray(st2.prev), np.asarray(st.prev))
+    # identical continuations freeze on the SAME round
+    for r in range(rounds, rounds + 20):
+        e1 = EM.em_update_flat(cfg, st, osc(r))
+        e2 = EM.em_update_flat(cfg, st2, osc(r))
+        assert (e1 is None) == (e2 is None)
+        if e1 is not None:
+            assert e1 == pytest.approx(e2)
+            f1, f2 = EM.should_freeze(cfg, st), EM.should_freeze(cfg, st2)
+            assert f1 == f2
+            if f1:
+                break
+    else:
+        pytest.fail("freeze never fired after restore")
+
+
+def test_freeze_tracker_freezes_converged_block_only():
+    """Per-block EM over stable packed column ids: the oscillating block
+    freezes, the still-moving block does not, and the first update is a
+    baseline only."""
+    cfg = EM.EMConfig(window_h=2, slope_phi=0.05, patience_w=2, fit_points=3,
+                      em_level=0.5, min_rounds=2)
+    tracker = EM.FreezeTracker(cfg, {"a": np.arange(0, 4),
+                                     "b": np.arange(4, 8)})
+    newly = []
+    for r in range(16):
+        a = jnp.full((4,), 0.1 if r % 2 == 0 else 0.0)  # oscillates
+        b = jnp.full((4,), float(r))  # moves steadily: EM == 1
+        newly += tracker.update(jnp.concatenate([a, b]))
+    assert newly == ["a"]
+    assert tracker.frozen_names == ["a"]
+    assert not tracker.frozen["b"]
+
+
 # ---------------------------------------------------------------------------
 # output modules
 # ---------------------------------------------------------------------------

@@ -440,6 +440,52 @@ def test_grouped_layout_cached_and_validates():
         ENG.make_group_layout([orphan], gtr, gbn)
 
 
+def test_layout_cache_keys_on_frozen_epoch():
+    """The regression ISSUE 6 guards against: two plan lists identical up
+    to frozen columns must produce DISTINCT layouts (the seed cache keyed
+    on treedef + shapes only, so the first freeze event would silently get
+    the stale full-width layout), the same epoch re-derived from an equal
+    mask must still HIT the cache, and aggregates stay bit-correct per
+    epoch."""
+    plans, gtr, gbn = _width_world()
+    base = ENG.make_group_layout(plans, gtr, gbn)
+    n = base.n
+    m1 = np.zeros(n, bool)
+    m1[:3] = True
+    l1 = ENG.make_group_layout(plans, gtr, gbn,
+                               frozen=ENG.make_frozen_columns(m1))
+    assert l1 is not base
+    assert l1.n_active == n - 3 and l1.gmask.shape == (l1.n_groups, n - 3)
+    assert base.n_active == n
+    # an equal mask re-derived elsewhere is the SAME epoch: cache hit
+    assert ENG.make_group_layout(
+        plans, gtr, gbn, frozen=ENG.make_frozen_columns(m1.copy())
+    ) is l1
+    # raw-mask callers are normalized onto the same epoch
+    assert ENG.make_group_layout(plans, gtr, gbn, frozen=m1) is l1
+    # a WIDER epoch supersedes: the narrower sibling (and the unfrozen
+    # layout) are eagerly evicted and their device buffers dropped —
+    # freeze-event cache invalidation, not LRU pressure
+    _ = l1.gmask
+    m2 = m1.copy()
+    m2[3:5] = True
+    l2 = ENG.make_group_layout(plans, gtr, gbn,
+                               frozen=ENG.make_frozen_columns(m2))
+    assert l2.n_active == n - 5
+    assert l1._gmask is None
+    assert all(v is not l1 and v is not base
+               for v in ENG._LAYOUT_CACHE.values())
+    # aggregates are bit-correct for whichever epoch a round uses
+    eng = ENG.make_engine("packed")
+    prev = np.asarray(ENG.make_pack_spec(gtr).pack(gtr))
+    p1 = np.asarray(eng.grouped_round(plans, gtr, gbn, frozen=m1).packed)
+    p2 = np.asarray(eng.grouped_round(plans, gtr, gbn, frozen=m2).packed)
+    np.testing.assert_array_equal(p1[:3], prev[:3])
+    np.testing.assert_array_equal(p2[:5], prev[:5])
+    assert not np.array_equal(p1[3:5], prev[3:5])  # live under m1, moved
+    np.testing.assert_array_equal(p1[5:], p2[5:])  # live both: identical
+
+
 def test_clear_caches_resets_spec_and_layout():
     plans, gtr, gbn = _width_world()
     ENG.make_group_layout(plans, gtr, gbn)

@@ -294,6 +294,94 @@ def test_stream_plan_partitions_and_bounds(seed, widths, n_shards):
         np.testing.assert_array_equal(flat, want)
 
 
+@given(
+    st.integers(0, 2**31 - 1),
+    st.lists(st.integers(1, 8), min_size=2, max_size=4),  # per-group widths
+    st.integers(1, 4),  # shard count
+    st.floats(0.0, 1.0),  # frozen fraction
+)
+@settings(max_examples=20, deadline=None)
+def test_frozen_layout_pack_scatter_stream_roundtrip(seed, widths, n_shards,
+                                                     frac):
+    """Fuzz random frozen masks through the layout machinery: stable global
+    column ids are UNCHANGED versus the unfrozen layout, ``dst`` remaps them
+    through the compressed column map, the gmask marks exactly the live
+    destinations, values round-trip through the compressed scatter, and the
+    stream plan routes every LIVE column to its owning shard exactly once —
+    frozen columns appear in no panel, mask, or stream structure at all."""
+    from repro.fl import engine as ENG
+    from repro.kernels.fedavg import AGG_TILE
+
+    d, out = 8, 3
+    rng = jax.random.PRNGKey(seed)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    plans = []
+    for gi, f in enumerate(widths):
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jnp.zeros((2, 4, d))
+        ys = jnp.zeros((2, 4))
+        rngs = jax.random.split(jax.random.fold_in(rng, gi), 2)
+        plans.append(ENG.GroupPlan(
+            lambda tr, fro, bn, xb, yb: (jnp.zeros(()), bn),
+            sub, {}, {}, xs, ys, rngs, jnp.ones((2,)), 0.1, 1, 4,
+        ))
+    base = ENG.make_group_layout(plans, gtr, {})
+    nprng = np.random.default_rng(seed)
+    fro = ENG.make_frozen_columns(nprng.random(base.n) < frac)
+    if fro is None:  # all-live mask: nothing to compress
+        return
+    layout = ENG.make_group_layout(plans, gtr, {}, frozen=fro)
+    assert layout.n_active == fro.n_active == base.n - fro.n_frozen
+    col_map = np.full(layout.n, layout.n_active, np.int64)
+    col_map[fro.active_idx] = np.arange(layout.n_active)
+    cs = layout.column_shards(n_shards)
+    for gi in range(layout.n_groups):
+        ix = layout.idx[gi]
+        # stable ids: identical to the unfrozen layout's indices
+        np.testing.assert_array_equal(ix, base.idx[gi])
+        np.testing.assert_array_equal(layout.dst[gi], col_map[ix])
+        live = layout.group_active_cols(gi)
+        assert np.all(live < layout.n_active)
+        indicator = np.zeros(layout.n_active, np.float32)
+        indicator[live] = 1.0
+        np.testing.assert_array_equal(np.asarray(layout.gmask[gi]), indicator)
+        # value round-trip through the compressed scatter: live positions
+        # land on their dst columns and gather back exactly
+        pos = np.nonzero(layout.dst[gi] < layout.n_active)[0]
+        vec = nprng.normal(size=ix.size).astype(np.float32)
+        flat = np.zeros(layout.n_active, np.float32)
+        flat[layout.dst[gi][pos]] = vec[pos]
+        np.testing.assert_array_equal(flat[layout.dst[gi][pos]], vec[pos])
+        # stream plan: every live column exactly once, onto its owning
+        # shard, with m_chunk sized from the LIVE count
+        sp = layout.stream_plan(gi, n_shards)
+        n_live = int(live.size)
+        even = -(-n_live // n_shards) if n_live else 0
+        want_chunk = (min(n_live, -(-even // AGG_TILE) * AGG_TILE)
+                      if n_live else 0)
+        assert sp.m_chunk == want_chunk
+        placed = []
+        for c in range(sp.n_chunks):
+            for d_ in range(n_shards):
+                src, dstv = sp.src[c, d_], sp.dst[c, d_]
+                valid = dstv < cs.n_shard
+                assert np.all(src[valid] < ix.size)
+                # every streamed source position is LIVE...
+                assert np.all(layout.dst[gi][src[valid]] < layout.n_active)
+                # ...and lands on exactly the shard that owns its column
+                np.testing.assert_array_equal(
+                    cs.offsets[d_] + dstv[valid],
+                    layout.dst[gi][src[valid]],
+                )
+                placed.append(src[valid])
+        placed = (np.concatenate(placed) if placed
+                  else np.zeros(0, np.int64))
+        assert placed.size == n_live  # each live column streamed once
+        np.testing.assert_array_equal(
+            np.sort(layout.dst[gi][placed]), np.sort(live)
+        )
+
+
 # ---------------------------------------------------------------------------
 # block partitioning invariants
 # ---------------------------------------------------------------------------
