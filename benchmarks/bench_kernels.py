@@ -38,6 +38,17 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     must equal ``memory_model.agg_stream_elems_per_device`` and stay within
     ``max_g K_g·(n_g/D + AGG_TILE)``; re-replicating the group panels
     across the agg mesh fails this gate.
+  * NEW (PR 7): the ``transport`` record runs the gate cell's sharded
+    round once per wire dtype (``stream_dtype`` ∈ f32/bf16/int8) and
+    records the measured interconnect bytes (``AGG_STATS["wire_bytes"]``,
+    asserted equal to ``memory_model.agg_wire_bytes`` — plan metadata, no
+    sync) plus round wall clock.  Gated (deterministic, always): the int8
+    wire must stay ≤ 0.30× the f32 wire at the gate cell (4-bit packed
+    scale exponents + per-group bf16 base keep the scale side-channel
+    under 5% of payload).  The record also carries the analytic
+    ragged-vs-uniform wire ratio for a DepthFL-style concentrated cohort
+    at 4 column shards — the saving the ragged per-shard transfer buys
+    over the old uniform axis-0 split.
   * NEW (PR 6): the ``freeze_decay`` record replays the grouped round at
     the gate cell under growing frozen-column prefixes
     (``FREEZE_FRACS`` — the Table-4 schedule order: leading blocks
@@ -135,6 +146,7 @@ def bench(ctx: dict, full: bool = False, record: dict = None):
                                                sink=record),
         "agg_compare": _bench_agg_compare(smoke=False, sink=record),
         "freeze_decay": _bench_freeze_decay(smoke=False, sink=record),
+        "transport": _bench_transport(smoke=False, sink=record),
     }
 
 
@@ -440,6 +452,107 @@ def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
     return res
 
 
+# int8-wire gate at the gate cell: quantized payload (1 B/elem) + packed
+# 4-bit scale exponents (0.5 B/col) + per-group bf16 base must land at or
+# under 0.30x the f32 wire
+WIRE_INT8_RATIO = 0.30
+
+
+def _wire_model_groups(layout, n_shards: int):
+    """Per-group ``(K_g, live-per-shard)`` entries for the sharded wire
+    model: the live column histogram over the layout's column-shard
+    ranges — the same accounting the engine's measured ``wire_bytes`` uses
+    (tests/test_contract.py pins engine == model)."""
+    cs = layout.column_shards(n_shards)
+    gs = []
+    for gi, k in enumerate(layout.ks):
+        live = layout.group_active_cols(gi)
+        gs.append((int(k), [
+            int(np.sum((live >= o) & (live < o + cs.n_shard)))
+            for o in cs.offsets
+        ]))
+    return gs
+
+
+def _bench_transport(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
+    """Quantized/ragged/paced panel-stream transport record (ISSUE 7) at
+    the gate cell: one sharded round per wire dtype, interconnect bytes
+    from ``AGG_STATS`` (asserted equal to ``memory_model.agg_wire_bytes``
+    — both are plan metadata, no device sync) and round wall clock.  The
+    int8 wire gates at ≤ ``WIRE_INT8_RATIO``× the f32 wire, always — it is
+    a deterministic byte figure, not a timing.  Also records the analytic
+    ragged-vs-uniform ratio for a DepthFL-style concentrated cohort at 4
+    column shards (pure plan metadata, so the 1-device CI runner measures
+    the same number multi-device hardware would).  ``sink`` receives the
+    result dict before any gate can fire."""
+    from repro.fl import engine as ENG
+    from repro.fl import memory_model as MM
+
+    d = 128 if smoke else 1024
+    G, kpg = GATE_CELL
+    plans, gtr = _make_width_plans(d, G, kpg)
+    layout = ENG.make_group_layout(plans, gtr, {})
+    res = {"G": G, "k_total": G * kpg, "n": layout.n,
+           "n_local_devices": len(jax.devices()), "dtypes": {}}
+    if sink is not None:
+        sink["transport"] = res
+    for sd in ENG.STREAM_DTYPES:
+        eng = ENG.make_engine("packed", agg="sharded", stream_dtype=sd)
+        eng.grouped_round(plans, gtr, {})  # warm compiles (+ seeds int8 EF)
+        st = dict(ENG.AGG_STATS)
+        groups = _wire_model_groups(layout, st["n_shards"])
+        model_w = MM.agg_wire_bytes(groups, agg="sharded", stream_dtype=sd)
+        assert st["wire_bytes"] == model_w, (
+            f"transport: measured {sd} wire bytes {st['wire_bytes']} != "
+            f"analytic model {model_w} (memory_model.agg_wire_bytes drifted "
+            f"from the engine's ragged stream)"
+        )
+        assert st["wire_bytes_uniform"] == MM.agg_wire_bytes_uniform(
+            groups, agg="sharded", stream_dtype=sd
+        )
+        us = C.time_call(
+            lambda: eng.grouped_round(plans, gtr, {}).loss, iters=iters
+        )
+        res["dtypes"][sd] = {
+            "wire_bytes": st["wire_bytes"],
+            "wire_bytes_uniform": st["wire_bytes_uniform"],
+            "per_device_panel_bytes": st["per_device_panel_bytes"],
+            "per_device_scales_bytes": st["per_device_scales_bytes"],
+            "round_us": us,
+        }
+        C.emit(f"kernels/transport_round_{sd}", us,
+               f"wire_bytes={st['wire_bytes']} "
+               f"uniform={st['wire_bytes_uniform']} "
+               f"panel_bytes={st['per_device_panel_bytes']}")
+    wire_f32 = res["dtypes"]["f32"]["wire_bytes"]
+    wire_int8 = res["dtypes"]["int8"]["wire_bytes"]
+    res["int8_over_f32_wire"] = wire_int8 / wire_f32
+    assert wire_int8 <= WIRE_INT8_RATIO * wire_f32, (
+        f"wire regression: int8 stream put {wire_int8} bytes on the wire, "
+        f"over {WIRE_INT8_RATIO}x the f32 wire ({wire_f32}) at "
+        f"G={G}, K={G * kpg} — the scale side-channel must stay packed"
+    )
+    # DepthFL-style concentrated cohort at 4 column shards: the narrow
+    # prefix groups leave the trailing shards with zero live columns, so
+    # the ragged transfer ships them nothing while the uniform axis-0
+    # split pays a full m_chunk pad row per shard per pass
+    conc_plans, conc_gtr = _make_width_plans(d, 2, kpg)
+    conc_layout = ENG.make_group_layout(conc_plans, conc_gtr, {})
+    groups4 = _wire_model_groups(conc_layout, 4)
+    ragged = MM.agg_wire_bytes(groups4, agg="sharded")
+    uniform = MM.agg_wire_bytes_uniform(groups4, agg="sharded")
+    res["concentrated"] = {
+        "n_shards": 4, "wire_bytes_ragged": ragged,
+        "wire_bytes_uniform": uniform,
+        "ragged_over_uniform": ragged / uniform,
+    }
+    assert ragged < uniform, (
+        f"ragged transfer saved nothing on the concentrated cohort "
+        f"({ragged} vs {uniform})"
+    )
+    return res
+
+
 # freeze-decay schedule: fraction of PANEL columns frozen at each freeze
 # point.  Leading columns freeze first (leading blocks converge first —
 # the order the Table 4 freezing benchmark's EM determination produces on
@@ -632,6 +745,10 @@ COMPARE_DECAY_KEYS = ("per_device_panel_bytes_replicated",
                       "per_device_panel_bytes_sharded",
                       "per_device_stream_bytes_replicated",
                       "per_device_stream_bytes_sharded")
+# transport gate (ISSUE 7): wire bytes are deterministic plan metadata, so
+# they gate tight at x1.5 per wire dtype; the per-dtype round wall clock
+# gates at the wall factor like every other timing
+COMPARE_TRANSPORT_KEYS = (("wire_bytes", False), ("round_us", True))
 
 
 def compare_trajectories(new: dict, seed: dict,
@@ -729,6 +846,21 @@ def compare_trajectories(new: dict, seed: dict,
         for mkey in COMPARE_DECAY_KEYS:
             check(f"freeze_decay[n_frozen={p.get('n_frozen')}].{mkey}",
                   p.get(mkey), s.get(mkey), False)
+    # transport gate (ISSUE 7): wire bytes per dtype gate deterministic at
+    # x1.5, wall clocks at x3; a transport section present in the seed and
+    # missing from the fresh record fails like any other gated metric, and
+    # so does a wire-dtype entry that disappears
+    ntr, str_ = new.get("transport", {}), seed.get("transport", {})
+    if str_ and not ntr:
+        fails.append("transport: section missing from the fresh record")
+    for sd, s_ent in str_.get("dtypes", {}).items():
+        n_ent = ntr.get("dtypes", {}).get(sd, {})
+        for mkey, wall in COMPARE_TRANSPORT_KEYS:
+            check(f"transport.{sd}.{mkey}", n_ent.get(mkey),
+                  s_ent.get(mkey), wall)
+    sc, nc = str_.get("concentrated", {}), ntr.get("concentrated", {})
+    check("transport.concentrated.wire_bytes_ragged",
+          nc.get("wire_bytes_ragged"), sc.get("wire_bytes_ragged"), False)
     return fails, checked[0]
 
 
@@ -769,6 +901,7 @@ def main() -> None:
                                  sink=record)
             _bench_agg_compare(smoke=True, sink=record)
             _bench_freeze_decay(smoke=True, sink=record)
+            _bench_transport(smoke=True, sink=record)
         else:
             bench({}, full=args.full, record=record)
     finally:

@@ -121,19 +121,51 @@ columns concentrate on few shards (a DepthFL prefix group lives entirely in
 the leading shards), the stream is split into ≤ D passes of ``m`` columns
 instead of one wide slice, so each PASS stages at most ``K_g·m`` elements
 per device regardless of how the layout distributes — that per-pass figure
-is what ``AGG_STATS`` measures and the memory model pins.  The passes are
-async-dispatched like everything else (the round still syncs once) and
-each device consumes its scatters in enqueue order, freeing a pass's
-buffer as its scatter retires; transfers are not host-paced, though, so a
-multi-pass stream whose transfers race far ahead of the scatter chain can
-transiently hold several passes' buffers at once (worst case back to
-``≈ K_g·n_g`` on the owning device — still never on every device the way
-the replicated stream was).  Two knowingly-accepted trade-offs of the
-uniform axis-0-split transfer, revisit on real multi-chip hardware (see
-ROADMAP): that pacing race, and the fact that every pass ships a (pad)
-row to every shard, so a fully concentrated group moves up to D× its
-useful bytes in aggregate — balanced groups (HeteroFL widths, the common
-case) take one pass at ~full utilization and pay neither cost.
+is what ``AGG_STATS`` measures and the memory model pins.
+
+The transfers themselves are RAGGED: :class:`StreamPlan` records the
+tile-aligned live width of every ``(pass, shard)`` slice (``widths``) and
+``launch/mesh.py::put_model_ragged`` ships exactly those columns, zero-
+padding back to the uniform ``m`` on the DESTINATION device — shards with
+no live columns in a pass receive nothing at all (their slice is zeros
+born on-device), so a fully concentrated group no longer broadcasts a pad
+row to every shard and its aggregate interconnect traffic drops from
+``D×`` useful bytes to ``≈ 1×``.  Balanced groups (HeteroFL widths) hit
+the all-widths-equal fast path: one uniform async ``device_put``, exactly
+the old transfer.  The device-side buffers keep the uniform
+``[D, K_g, m]`` shape/sharding either way, so the per-pass staging bound
+above is unchanged.
+
+Successive passes are PACED by data-dependency tokens, not by the host:
+each shard-local scatter returns, alongside the updated panel, a tiny
+``[D]`` token sliced from the per-shard blocks it just consumed.  The
+engine keeps the last ``inflight`` tokens in a deque; once it is full, the
+next pass's SOURCE-side gather is gated on the oldest token via
+``jax.lax.optimization_barrier`` (the token is device_put back to the
+gather's placement — an async transfer, no sync).  A pass's transfer
+therefore cannot launch until the pass ``inflight`` before it has retired
+its scatter, bounding transient residency to ``inflight`` passes'
+buffers per device while the round still issues exactly one
+``block_until_ready``.  ``inflight`` is an engine knob (default 2 —
+double-buffering: one pass in flight while the previous one drains).
+
+Panels can be COMPRESSED on the wire via the ``stream_dtype`` engine knob
+(``"f32"`` | ``"bf16"`` | ``"int8"``, default ``"f32"`` — bit-exact):
+the finished group panel is quantized at the source, streamed and
+scattered at the narrow dtype, and the shared panel itself is BORN at
+that dtype — no agg device ever materializes an f32 group panel.  Under
+``"int8"`` each column gets a power-of-two scale against a per-group bf16
+base (``kernels/ref.py::quantize_columns``): the 4-bit scale exponents
+travel packed two-per-byte beside the panel (~0.5 B/column,
+``launch/mesh.py::put_scales_ragged``), are decoded to bf16 scale rows on
+the destination shards, and dequantization happens INSIDE the fused
+Pallas kernel (``fedavg_grouped_dequant``) — same single logical
+dispatch.  A per-group error-feedback residual (carried across rounds on
+the engine) makes the quantization unbiased over time.  ``"bf16"`` simply
+halves the wire/panel bytes; the kernel accumulates in f32 either way and
+the round output is always f32.  ``fused_masked`` has no dequant variant
+and rejects ``stream_dtype != "f32"``; the serial oracle and the identity
+fast path have no transport and ignore the knob.
 
 The one-logical-dispatch / one-``block_until_ready`` contract is agg-mode
 independent: ``DISPATCHES["fedavg_grouped"]`` still counts 1 per round, and
@@ -146,9 +178,20 @@ sharding METADATA only (no device sync), plus the transient-stream fields:
 ``stream`` (placement mode), ``per_device_stream_elems`` (max per-device
 footprint of any streamed group buffer, read from the real transfer
 sharding — ``max_g K_g·n_g`` replicated, ``≤ max_g K_g·(⌈n_g/D⌉
-tile-aligned)`` sharded), and ``stream_chunks`` (total scatter passes).
-``fl/memory_model.py::agg_stream_elems_per_device`` models the same bound
-and tests/test_contract.py pins model == measurement.  The single-group
+tile-aligned)`` sharded), and ``stream_chunks`` (total PANEL scatter
+passes — the int8 scale-row companion scatters are not counted).  The
+transport fields make interconnect traffic a first-class metric, all
+derived from plan metadata (never a sync): ``stream_dtype``, ``inflight``,
+``panel_elem_bytes``, ``per_device_panel_bytes`` /
+``per_device_scales_bytes`` (resident footprint at the wire dtype),
+``per_device_stream_bytes``, and ``wire_bytes`` — the logical bytes the
+round's panel stream put on the interconnect (ragged widths × element
+bytes, plus packed scale slices under int8) — beside
+``wire_bytes_uniform``, the counterfactual cost of the pre-ragged uniform
+axis-0-split transfer at the same dtype.
+``fl/memory_model.py::agg_stream_elems_per_device`` (and the wire-byte
+twins ``agg_wire_bytes`` / ``agg_wire_bytes_uniform``) model the same
+figures and tests/test_contract.py pins model == measurement.  The single-group
 identity fast path keeps the PR 1 packed/sharded round regardless of
 ``agg`` — its panel has no group structure to column-shard.
 
@@ -221,10 +264,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.fl import client as CL
 from repro.kernels import ops
+from repro.kernels import ref as _kref
 from repro.kernels.fedavg import AGG_TILE
 
 MODES = ("vmap", "packed", "sharded", "auto")
 AGG_MODES = ("auto", "replicated", "sharded")
+
+# Wire dtypes the fused group-panel stream can travel at (module docstring,
+# "Panels can be COMPRESSED on the wire").  Element bytes drive the logical
+# wire/panel byte accounting in AGG_STATS and fl/memory_model.py.
+STREAM_DTYPES = ("f32", "bf16", "int8")
+STREAM_ELEM_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+_STREAM_JNP = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 # Host-sync accounting for the pipelined fused path: every block_until_ready
 # the engine issues goes through _barrier and increments this counter.  The
@@ -717,13 +768,27 @@ class StreamPlan:
     shard ``d`` receives in pass ``c``; ``dst[c, d]`` the matching local
     columns inside shard ``d``'s block.  Unused slots are padded with
     ``n_g`` / ``n_shard`` respectively — the scatter drops them device-side
-    (``mode="drop"``)."""
+    (``mode="drop"``).
+
+    The plan is RAGGED on the wire: ``chunk_counts[d]`` is how many passes
+    shard ``d`` actually receives data in (``≤ n_chunks``; 0 for a shard
+    with no live columns of this group) and ``widths[c, d]`` the tile-
+    aligned live width of pass ``c``'s slice for shard ``d`` (0 = nothing
+    ships).  ``launch/mesh.py::put_model_ragged`` transfers exactly
+    ``widths[c, d]`` columns to shard ``d`` and zero-pads back to the
+    uniform ``m_chunk`` ON the destination, so the device-side buffers (and
+    the per-pass per-device staging bound) keep the uniform shape while the
+    interconnect carries only ``Σ_c widths[c, d] =
+    min-capped ⌈live_d/tile⌉·tile`` bytes per shard — a concentrated
+    DepthFL group no longer broadcasts a pad row to every shard."""
 
     n_shards: int
     m_chunk: int
     n_chunks: int
     src: np.ndarray  # [n_chunks, D, m_chunk] int32, pad = n_g
     dst: np.ndarray  # [n_chunks, D, m_chunk] int32, pad = n_shard
+    chunk_counts: Tuple[int, ...] = ()  # per-shard live pass counts
+    widths: np.ndarray = np.zeros((0, 0), np.int32)  # [n_chunks, D] wire cols
 
 
 @dataclass
@@ -762,6 +827,7 @@ class GroupLayout:
     _active_idx_dev: Optional[jax.Array] = None  # lazy [n_active] global ids
     _frozen_mask_dev: Optional[jax.Array] = None  # lazy [n] bool
     _live_pos_dev: Optional[Tuple[jax.Array, ...]] = None  # lazy live cols
+    _gsel: Optional[jax.Array] = None  # lazy [k_total, G] row->group one-hot
 
     @property
     def n_groups(self) -> int:
@@ -840,6 +906,21 @@ class GroupLayout:
                     m[gi, self.group_active_cols(gi)] = 1.0
                 self._gmask = jnp.asarray(m)
         return self._gmask
+
+    @property
+    def gsel(self) -> jax.Array:
+        """``[k_total, G]`` row→group one-hot selector, staged lazily — the
+        dequant kernel variants (``stream_dtype="int8"``) contract it
+        against the ``[G, n]`` per-group scale rows to recover each row's
+        per-column scale without a gather (an MXU-friendly matmul inside
+        the Pallas kernel).  Rows of group ``gi`` are ``rows[gi] …
+        rows[gi]+ks[gi]-1`` by layout construction."""
+        if self._gsel is None:
+            m = np.zeros((self.k_total, self.n_groups), np.float32)
+            for gi, (r, k) in enumerate(zip(self.rows, self.ks)):
+                m[r : r + k, gi] = 1.0
+            self._gsel = jnp.asarray(m)
+        return self._gsel
 
     @property
     def legacy_mask(self) -> jax.Array:
@@ -931,7 +1012,9 @@ class GroupLayout:
             if m_chunk == 0:  # empty or fully frozen group: nothing streams
                 sp = StreamPlan(n_shards, 0, 0,
                                 np.zeros((0, n_shards, 0), np.int32),
-                                np.zeros((0, n_shards, 0), np.int32))
+                                np.zeros((0, n_shards, 0), np.int32),
+                                (0,) * n_shards,
+                                np.zeros((0, n_shards), np.int32))
             else:
                 sels = [
                     np.nonzero((cols >= off) & (cols < off + cs.n_shard))[0]
@@ -941,13 +1024,20 @@ class GroupLayout:
                 src = np.full((n_chunks, n_shards, m_chunk), n_g, np.int32)
                 dst = np.full((n_chunks, n_shards, m_chunk), cs.n_shard,
                               np.int32)
+                widths = np.zeros((n_chunks, n_shards), np.int32)
                 for d, sel in enumerate(sels):
                     for c in range(-(-sel.size // m_chunk)):
                         part = sel[c * m_chunk:(c + 1) * m_chunk]
                         spart = part if pos is None else pos[part]
                         src[c, d, : part.size] = spart
                         dst[c, d, : part.size] = cols[part] - cs.offsets[d]
-                sp = StreamPlan(n_shards, m_chunk, n_chunks, src, dst)
+                        widths[c, d] = min(
+                            m_chunk, -(-int(part.size) // tile) * tile
+                        )
+                sp = StreamPlan(
+                    n_shards, m_chunk, n_chunks, src, dst,
+                    tuple(-(-int(s.size) // m_chunk) for s in sels), widths,
+                )
             self._stream_plans[key] = sp
         return sp
 
@@ -989,6 +1079,7 @@ class GroupLayout:
         self._active_idx_dev = None
         self._frozen_mask_dev = None
         self._live_pos_dev = None
+        self._gsel = None
 
 
 _LAYOUT_CACHE: BoundedCache = BoundedCache(
@@ -1193,12 +1284,16 @@ def _align_for_mesh(mesh: Mesh, tree):
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_zeros_fn(shape: Tuple[int, ...], sharding: NamedSharding):
+def _sharded_zeros_fn(shape: Tuple[int, ...], sharding: NamedSharding,
+                      dtype: str = "float32"):
     """Jitted zeros with explicit ``out_shardings``: the shared panel is
     BORN column-sharded — the full ``[K_total, n_padded]`` buffer never
-    exists on any single device, not even at initialization."""
-    return jax.jit(lambda: jnp.zeros(shape, jnp.float32),
-                   out_shardings=sharding)
+    exists on any single device, not even at initialization.  ``dtype``
+    (a string, for the cache key) follows the stream dtype: a quantized
+    round's shared panel is born int8/bf16, so no device ever holds the
+    panel at f32 width."""
+    dt = jnp.dtype(dtype)
+    return jax.jit(lambda: jnp.zeros(shape, dt), out_shardings=sharding)
 
 
 @jax.jit
@@ -1225,10 +1320,60 @@ def _stream_gather(gpanel, src):
     return jnp.take(gpanel, src, axis=1, mode="clip").transpose(1, 0, 2)
 
 
+@jax.jit
+def _stream_gather_paced(gpanel, src, tok):
+    """:func:`_stream_gather` gated on a pacing token: the gather (and so
+    the pass's transfer) cannot execute until ``tok`` — a ``[D]`` slice of
+    the per-shard panel blocks an EARLIER pass's scatter produced — has
+    been computed and moved here.  ``optimization_barrier`` makes the
+    dependency opaque to XLA (a ``0·sum(tok)`` arithmetic tie would be
+    constant-folded away); no host sync anywhere."""
+    gpanel, _ = jax.lax.optimization_barrier((gpanel, tok))
+    return jnp.take(gpanel, src, axis=1, mode="clip").transpose(1, 0, 2)
+
+
+@jax.jit
+def _quantize_panel_ef(gpanel, ef):
+    """Source-side int8 quantization of a finished ``[K_g, n_g]`` group
+    panel with error feedback: the residual ``ef`` from this group's
+    previous round is folded in before quantizing, and the new residual
+    (what this round's wire dtype could not carry) is returned to be
+    carried forward — over rounds the quantization error telescopes
+    instead of accumulating.  Runs wherever the panel lives; only the int8
+    panel and the packed scale exponents ever leave the device."""
+    t = gpanel + ef
+    q, scale, e, gbase = _kref.quantize_columns(t)
+    return q, scale, e, gbase, t - _kref.dequantize_columns(q, scale)
+
+
+@jax.jit
+def _to_bf16(x):
+    return x.astype(jnp.bfloat16)
+
+
+@jax.jit
+def _live_take_vec(v, pos):
+    """Per-column vector counterpart of :func:`_live_take` (frozen layouts,
+    replicated agg): narrows a group's ``[n_g]`` scale row to the live
+    columns on the source device."""
+    return jnp.take(v, pos)
+
+
+@jax.jit
+def _gather_exponents(e, src):
+    """Source-side gather of per-column scale exponents for one stream
+    pass: ``[n_g]`` int8 exponents → ``[D, m]`` matching ``src``'s column
+    selection.  Pad slots clip-gather garbage that never ships —
+    ``put_scales_ragged`` packs only each row's live prefix."""
+    return jnp.take(e, src, axis=0, mode="clip")
+
+
 def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                    mesh: Optional[Mesh], *, kernel: str = "grouped",
                    agg: str = "replicated",
-                   agg_mesh: Optional[Mesh] = None):
+                   agg_mesh: Optional[Mesh] = None,
+                   stream_dtype: str = "f32", inflight: int = 2,
+                   ef_state: Optional[dict] = None):
     """Pipelined fused path: EVERY group's local-SGD dispatch launches
     without host blocking (jax async dispatch), each finished [K_g, n_g]
     panel streams into the shared panel via jitted donated-buffer scatters,
@@ -1250,6 +1395,13 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     and its output is expanded back to the stable full space (frozen
     columns keep their previous values) BEFORE the one aggregation
     barrier — still exactly one logical dispatch and one sync.
+
+    ``stream_dtype`` picks the wire/panel dtype (module docstring,
+    "Panels can be COMPRESSED on the wire"), ``inflight`` the token-paced
+    transient pass residency of the sharded stream, and ``ef_state`` the
+    engine-held per-group error-feedback residuals for ``"int8"`` (keyed
+    ``(gi, panel shape)`` so a freeze epoch restarts the residual with the
+    panel it applies to).
     """
     if layout.identity:
         # degenerate single-group round (every ProFL round): the mask is all
@@ -1272,28 +1424,53 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     sharded = agg == "sharded"
     if sharded and agg_mesh is None:
         raise ValueError("agg='sharded' needs an agg_mesh with a 'model' axis")
+    if stream_dtype not in STREAM_DTYPES:
+        raise ValueError(f"unknown stream_dtype {stream_dtype!r} "
+                         f"(one of {STREAM_DTYPES})")
+    if kernel != "grouped" and stream_dtype != "f32":
+        raise ValueError("the masked kernel has no dequant variant: "
+                         "fused_masked supports stream_dtype='f32' only")
+    if inflight < 1:
+        raise ValueError("inflight must be >= 1")
+    pdt = _STREAM_JNP[stream_dtype]
+    eb = STREAM_ELEM_BYTES[stream_dtype]
+    quant = stream_dtype == "int8"
     submeshes = _group_submeshes(mesh, layout.ks) if mesh is not None else None
     dev0 = mesh.devices.reshape(-1)[0] if submeshes is not None else None
+    scales_panel = None
     if sharded:
-        from repro.launch.mesh import put_model_sharded
+        from repro.launch.mesh import (put_model_ragged, put_scales_ragged)
 
         cs = layout.column_shards(agg_mesh.shape["model"])
         # replication sharding for the tiny [K_g] loss vectors ONLY — the
         # group panels themselves are never replicated across the agg mesh
         repl = NamedSharding(agg_mesh, P())
+        col_sh = NamedSharding(agg_mesh, P(None, "model"))
+        # the shared panel is born AT the wire dtype: with a quantized
+        # stream no agg device ever holds an f32 panel block
         panel = _sharded_zeros_fn(
-            (layout.k_total, cs.n_padded),
-            NamedSharding(agg_mesh, P(None, "model")),
+            (layout.k_total, cs.n_padded), col_sh, jnp.dtype(pdt).name,
         )()
+        if quant:
+            scales_panel = _sharded_zeros_fn(
+                (layout.n_groups, cs.n_padded), col_sh, "bfloat16",
+            )()
     else:
-        panel = jnp.zeros((layout.k_total, layout.n_active), jnp.float32)
+        panel = jnp.zeros((layout.k_total, layout.n_active), pdt)
+        if quant:
+            scales_panel = jnp.zeros((layout.n_groups, layout.n_active),
+                                     jnp.bfloat16)
     group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
     losses = []
     stream_elems = 0  # max per-device footprint of any streamed group buffer
     stream_chunks = 0
+    wire_bytes = 0  # logical interconnect payload (plan metadata, no sync)
+    wire_bytes_uniform = 0  # counterfactual: the uniform axis-0 split
+    tokens: collections.deque = collections.deque()  # pacing (sharded only)
     for gi, plan in enumerate(plans):
         kw = dict(lr=plan.lr, local_steps=plan.local_steps,
                   batch_size=plan.batch_size)
+        gmesh = None
         if mesh is not None:
             # disjoint clients-axis slice per group when the mesh is large
             # enough: different structures train CONCURRENTLY on different
@@ -1307,15 +1484,6 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                 plan.loss_fn, tr_g, fro_g, bn_g, xs_g, ys_g, rngs_g,
                 mesh=gmesh, **kw,
             )
-            if not sharded and layout.frozen is not None:
-                # drop frozen columns ON THE SOURCE device(s): the stream
-                # to the aggregation device only carries live columns
-                gpanel = _live_take(gpanel, layout.live_pos_dev[gi])
-            if submeshes is not None and not sharded:
-                # stream the finished group panel off its sub-mesh onto the
-                # aggregation device — device_put is async dispatch, so this
-                # transfer pipelines behind the other groups' local SGD
-                gpanel = jax.device_put(gpanel, dev0)
             if submeshes is not None:
                 loss = jax.device_put(loss, dev0 if not sharded
                                       else repl)
@@ -1324,33 +1492,107 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                 plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
                 plan.xs, plan.ys, plan.rngs, **kw,
             )
-            if not sharded and layout.frozen is not None:
-                gpanel = _live_take(gpanel, layout.live_pos_dev[gi])
+        # wire-dtype conversion at the SOURCE, on the FULL [K_g, n_g]
+        # panel — before any frozen-column narrowing, so the int8
+        # error-feedback residual keeps one stable shape per group
+        scale_row = e8 = gbase = None
+        if quant:
+            ekey = (gi, gpanel.shape)
+            ef = None if ef_state is None else ef_state.get(ekey)
+            if ef is None:
+                ef = jnp.zeros(gpanel.shape, jnp.float32)
+            elif ef.sharding != gpanel.sharding:
+                # the group moved (a different sub-mesh split this
+                # round): follow it — async device_put, no sync
+                ef = jax.device_put(ef, gpanel.sharding)
+            gpanel, scale_row, e8, gbase, ef_new = _quantize_panel_ef(
+                gpanel, ef
+            )
+            if ef_state is not None:
+                ef_state[ekey] = ef_new
+        elif stream_dtype == "bf16":
+            gpanel = _to_bf16(gpanel)
+        if not sharded and layout.frozen is not None:
+            # drop frozen columns ON THE SOURCE device(s): the stream
+            # to the aggregation device only carries live columns
+            gpanel = _live_take(gpanel, layout.live_pos_dev[gi])
+            if quant:
+                scale_row = _live_take_vec(scale_row,
+                                           layout.live_pos_dev[gi])
+        if not sharded and submeshes is not None:
+            # stream the finished group panel off its sub-mesh onto the
+            # aggregation device — device_put is async dispatch, so this
+            # transfer pipelines behind the other groups' local SGD
+            gpanel = jax.device_put(gpanel, dev0)
+            if quant:
+                scale_row = jax.device_put(scale_row, dev0)
         if sharded:
             # shard-local stream: slice the finished [K_g, n_g] panel per
             # column shard ON ITS SOURCE device(s), land each pass's
-            # [D, K_g, m] selection axis-0-sharded over the agg mesh (one
-            # async device_put; each agg device receives ONLY its own
-            # columns — never a full group-panel replica), then scatter
-            # shard-locally.  All passes pipeline behind the other groups'
-            # local SGD like the old replicated stream did.
+            # [D, K_g, m] selection axis-0-sharded over the agg mesh
+            # RAGGED (launch/mesh.py::put_model_ragged — only each shard's
+            # tile-aligned live width crosses the interconnect; each agg
+            # device receives ONLY its own columns, never a full
+            # group-panel replica), then scatter shard-locally.  All
+            # passes pipeline behind the other groups' local SGD, with
+            # successive passes token-paced to at most ``inflight``
+            # resident (module docstring) — still no host sync anywhere.
+            sp = layout.stream_plan(gi, agg_mesh.shape["model"])
             src_bufs, dst_bufs = layout.stream_buffers(gi, agg_mesh)
-            for src_c, dst_c in zip(src_bufs, dst_bufs):
-                sel = put_model_sharded(_stream_gather(gpanel, src_c),
-                                        agg_mesh)
+            tok_dst = (NamedSharding(gmesh, P()) if gmesh is not None
+                       else jax.devices()[0])
+            k_g = gpanel.shape[0]
+            for c, (src_c, dst_c) in enumerate(zip(src_bufs, dst_bufs)):
+                if len(tokens) >= inflight:
+                    tok = jax.device_put(tokens.popleft(), tok_dst)
+                    gathered = _stream_gather_paced(gpanel, src_c, tok)
+                else:
+                    gathered = _stream_gather(gpanel, src_c)
+                widths = sp.widths[c]
+                sel = put_model_ragged(gathered, widths, agg_mesh)
                 stream_elems = max(stream_elems, math.prod(
                     sel.sharding.shard_shape(sel.shape)
                 ))
                 stream_chunks += 1
-                panel = ops.scatter_stream_sharded(
+                live_w = [int(wd) for wd in widths]
+                wire_bytes += k_g * sum(live_w) * eb
+                wire_bytes_uniform += k_g * sp.n_shards * sp.m_chunk * eb
+                panel, tok_out = ops.scatter_stream_sharded(
                     panel, sel, dst_c, layout.rows[gi], mesh=agg_mesh
                 )
+                tokens.append(tok_out)
+                if quant:
+                    # companion scale stream: packed 4-bit exponents plus
+                    # the 2-byte group base per live slice, decoded to
+                    # bf16 scale rows on the destination shards and
+                    # scattered with the SAME dst plan into [G, n_padded]
+                    egather = _gather_exponents(e8, src_c)
+                    esel = put_scales_ragged(egather, gbase, widths,
+                                             agg_mesh)
+                    scales_panel, _ = ops.scatter_stream_sharded(
+                        scales_panel, esel, dst_c, gi, mesh=agg_mesh
+                    )
+                    wire_bytes += sum(
+                        -(-wd // 2) + 2 for wd in live_w if wd
+                    )
+                    wire_bytes_uniform += sp.n_shards * (
+                        -(-sp.m_chunk // 2) + 2
+                    )
         else:
             stream_elems = max(stream_elems,
                                gpanel.shape[0] * gpanel.shape[1])
             stream_chunks += 1
+            wire_bytes += gpanel.shape[0] * gpanel.shape[1] * eb
+            wire_bytes_uniform += gpanel.shape[0] * gpanel.shape[1] * eb
             panel = _scatter_group_panel(panel, gpanel, layout.idx_dev[gi],
                                          layout.rows[gi])
+            if quant:
+                # the bf16 scale row travels beside the int8 panel
+                wire_bytes += 2 * gpanel.shape[1]
+                wire_bytes_uniform += 2 * gpanel.shape[1]
+                scales_panel = _scatter_group_panel(
+                    scales_panel, scale_row[None], layout.idx_dev[gi], gi
+                )
         losses.append(loss)
     w = jnp.concatenate(group_w)
     wsum = jnp.stack([jnp.sum(gw) for gw in group_w])
@@ -1358,23 +1600,40 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     # compressed-space prev for the kernel: frozen columns never reach it
     prev_act = (prev if layout.frozen is None
                 else jnp.take(prev, layout.active_idx_dev))
+    panel_dev_elems = math.prod(panel.sharding.shard_shape(panel.shape))
     AGG_STATS.clear()
     AGG_STATS.update(
         agg=agg, kernel=kernel, n=layout.n, k_total=layout.k_total,
         n_active=layout.n_active, n_frozen=layout.n - layout.n_active,
         n_shards=cs.n_shards if sharded else 1,
         n_padded=cs.n_padded if sharded else layout.n_active,
-        per_device_panel_elems=math.prod(
-            panel.sharding.shard_shape(panel.shape)
-        ),
+        per_device_panel_elems=panel_dev_elems,
         # transient-stream telemetry, from transfer-sharding metadata only:
         # the largest per-device footprint any streamed group buffer had
-        # while scattering into the shared panel, and the number of scatter
-        # passes it took (sharded streams of a concentrated group split
-        # into multiple m_chunk-column passes to keep the bound)
+        # while scattering into the shared panel, and the number of PANEL
+        # scatter passes it took (sharded streams of a concentrated group
+        # split into multiple m_chunk-column passes to keep the bound; the
+        # int8 scale-row companion scatters are not counted)
         stream="sharded" if sharded else "replicated",
         per_device_stream_elems=stream_elems,
         stream_chunks=stream_chunks,
+        # transport telemetry (module docstring): everything below comes
+        # from plan metadata + sharding metadata — never a device sync.
+        # per_device_panel_bytes is the RESIDENT panel footprint at the
+        # wire dtype: a quantized round's shared panel is born narrow, so
+        # this shrinks by 4/eb versus f32 (the never-an-f32-panel claim
+        # tests pin against the memory model).
+        stream_dtype=stream_dtype,
+        inflight=inflight,
+        panel_elem_bytes=eb,
+        per_device_panel_bytes=panel_dev_elems * eb,
+        per_device_scales_bytes=(
+            math.prod(scales_panel.sharding.shard_shape(scales_panel.shape))
+            * 2 if quant else 0
+        ),
+        per_device_stream_bytes=stream_elems * eb,
+        wire_bytes=wire_bytes,
+        wire_bytes_uniform=wire_bytes_uniform,
     )
     if layout.n_active == 0:
         # fully frozen layout: nothing left to aggregate — the round's
@@ -1384,27 +1643,43 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
         pad = cs.n_padded - layout.n_active
         prev_p = jnp.pad(prev_act, (0, pad)) if pad else prev_act
         prev_p = jax.device_put(prev_p, NamedSharding(agg_mesh, P("model")))
-        if kernel == "grouped":
-            flat = ops.fedavg_grouped_sharded(
-                panel, w, layout.gmask_sharded(agg_mesh), wsum, prev_p,
-                mesh=agg_mesh,
-            )
-        else:
+        if kernel != "grouped":
             lmask = jnp.pad(layout.legacy_mask, ((0, 0), (0, pad)))
             lmask = jax.device_put(
                 lmask, NamedSharding(agg_mesh, P(None, "model"))
             )
             flat = ops.fedavg_masked_sharded(panel, w, lmask, prev_p,
                                              mesh=agg_mesh)
+        elif quant:
+            # dequantization happens INSIDE the shard-local Pallas kernel:
+            # the f32 panel never exists on any agg device
+            flat = ops.fedavg_grouped_dequant_sharded(
+                panel, w, layout.gmask_sharded(agg_mesh), wsum,
+                layout.gsel, scales_panel, prev_p, mesh=agg_mesh,
+            )
+        else:
+            flat = ops.fedavg_grouped_sharded(
+                panel, w, layout.gmask_sharded(agg_mesh), wsum, prev_p,
+                mesh=agg_mesh,
+                out_dtype="float32" if stream_dtype == "bf16" else None,
+            )
         # the round OUTPUT is the [n_active] aggregate, not the panel:
         # gather it to the default device (async) so the next round's
         # single-device local SGD jits see the same placement as the
         # replicated path
         flat = jax.device_put(flat[: layout.n_active], jax.devices()[0])
-    elif kernel == "grouped":
-        flat = ops.fedavg_grouped(panel, w, layout.gmask, wsum, prev_act)
-    else:
+    elif kernel != "grouped":
         flat = ops.fedavg_masked(panel, w, layout.legacy_mask, prev_act)
+    elif quant:
+        flat = ops.fedavg_grouped_dequant(
+            panel, w, layout.gmask, wsum, layout.gsel, scales_panel,
+            prev_act,
+        )
+    else:
+        flat = ops.fedavg_grouped(
+            panel, w, layout.gmask, wsum, prev_act,
+            out_dtype="float32" if stream_dtype == "bf16" else None,
+        )
     if layout.frozen is not None and layout.n_active > 0:
         # expand back to the stable full coordinate space: frozen columns
         # keep their previous global values untouched.  Async dispatch —
@@ -1476,10 +1751,20 @@ class CohortEngine:
     axis the column-sharded aggregation splits over; it defaults to the
     engine mesh when that mesh carries a ``model`` axis (the composed
     ``clients × model`` mesh from ``launch/mesh.py::make_fl_cohort_mesh``),
-    else to a 1-D ``model`` mesh over every local device."""
+    else to a 1-D ``model`` mesh over every local device.
+
+    ``stream_dtype`` sets the default wire/panel dtype of the fused
+    group-panel stream (one of STREAM_DTYPES; ``"f32"`` is bit-exact,
+    ``"bf16"``/``"int8"`` compress the transport — module docstring) and
+    ``inflight`` the token-paced transient pass residency of the sharded
+    stream (default 2, double-buffering).  Under ``"int8"`` the engine
+    carries per-group error-feedback residuals across rounds in
+    ``_ef_state`` (:meth:`reset_ef` drops them) — it is otherwise
+    stateless apart from the meshes."""
 
     def __init__(self, mode: str = "vmap", mesh: Optional[Mesh] = None, *,
-                 agg: str = "auto", agg_mesh: Optional[Mesh] = None):
+                 agg: str = "auto", agg_mesh: Optional[Mesh] = None,
+                 stream_dtype: str = "f32", inflight: int = 2):
         if mode == "auto":
             mode = "sharded" if len(jax.devices()) > 1 else "packed"
         if mode not in ("vmap", "packed", "sharded"):
@@ -1499,8 +1784,20 @@ class CohortEngine:
                 from repro.launch.mesh import make_model_mesh
 
                 agg_mesh = make_model_mesh()
+        if stream_dtype not in STREAM_DTYPES:
+            raise ValueError(f"unknown stream_dtype {stream_dtype!r} "
+                             f"(one of {STREAM_DTYPES})")
+        if inflight < 1:
+            raise ValueError("inflight must be >= 1")
         self.mode, self.mesh = mode, mesh
         self.agg, self.agg_mesh = agg, agg_mesh
+        self.stream_dtype, self.inflight = stream_dtype, inflight
+        self._ef_state: dict = {}
+
+    def reset_ef(self) -> None:
+        """Drop the per-group int8 error-feedback residuals (e.g. between
+        independent experiments sharing one engine)."""
+        self._ef_state.clear()
 
     def round(
         self,
@@ -1547,6 +1844,8 @@ class CohortEngine:
         impl: Optional[str] = None,
         agg: Optional[str] = None,
         frozen=None,
+        stream_dtype: Optional[str] = None,
+        inflight: Optional[int] = None,
     ) -> GroupedResult:
         """One heterogeneous round over ``plans`` (see module docstring).
 
@@ -1571,13 +1870,31 @@ class CohortEngine:
         ``[trainable | bn]`` packed space): frozen columns leave the
         panel, the stream, and the kernel, and keep their previous global
         values — see the module docstring's freezing-aware-layouts
-        section."""
+        section.
+
+        ``stream_dtype`` / ``inflight`` override the engine defaults for
+        this round (see the class docstring and the module docstring's
+        transport section).  ``fused_masked`` has no dequant kernel
+        variant and rejects ``stream_dtype != "f32"``; the serial oracle
+        and the single-group identity fast path have no transport and
+        ignore both knobs."""
         if not plans:
             raise ValueError("grouped_round needs at least one GroupPlan")
         if impl is None:
             impl = "serial" if self.mode == "vmap" else "fused"
         if impl not in ("serial", "fused", "fused_masked"):
             raise ValueError(f"unknown grouped impl {impl!r}")
+        stream_dtype = (self.stream_dtype if stream_dtype is None
+                        else stream_dtype)
+        if stream_dtype not in STREAM_DTYPES:
+            raise ValueError(f"unknown stream_dtype {stream_dtype!r} "
+                             f"(one of {STREAM_DTYPES})")
+        inflight = self.inflight if inflight is None else inflight
+        if inflight < 1:
+            raise ValueError("inflight must be >= 1")
+        if impl == "fused_masked" and stream_dtype != "f32":
+            raise ValueError("the masked kernel has no dequant variant: "
+                             "fused_masked supports stream_dtype='f32' only")
         agg = self.agg if agg is None else agg
         if agg == "auto":
             agg = ("sharded" if self.agg_mesh is not None
@@ -1598,10 +1915,14 @@ class CohortEngine:
             plans, global_trainable, global_bn, layout, mesh,
             kernel="masked" if impl == "fused_masked" else "grouped",
             agg=agg, agg_mesh=agg_mesh,
+            stream_dtype=stream_dtype, inflight=inflight,
+            ef_state=self._ef_state if stream_dtype == "int8" else None,
         )
 
 
 def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None, *,
-                agg: str = "auto",
-                agg_mesh: Optional[Mesh] = None) -> CohortEngine:
-    return CohortEngine(mode, mesh, agg=agg, agg_mesh=agg_mesh)
+                agg: str = "auto", agg_mesh: Optional[Mesh] = None,
+                stream_dtype: str = "f32",
+                inflight: int = 2) -> CohortEngine:
+    return CohortEngine(mode, mesh, agg=agg, agg_mesh=agg_mesh,
+                        stream_dtype=stream_dtype, inflight=inflight)

@@ -171,6 +171,10 @@ def depth_for_budget(
 # cross-check test in tests/test_contract.py pins the two constants equal)
 AGG_TILE = 128
 
+# mirrors fl/engine.py::STREAM_ELEM_BYTES (wire dtypes of the group-panel
+# stream; same cross-check test pins the two maps equal)
+STREAM_ELEM_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
 
 def agg_columns_per_device(n: int, *, n_devices: int = 1,
                            agg: str = "replicated",
@@ -241,6 +245,101 @@ def agg_stream_elems_per_device(k_g: int, n_g: int, *, n_devices: int = 1,
     )
 
 
+def _ragged_wire_cols(live: int, m_chunk: int, tile: int) -> int:
+    """Interconnect columns one shard receives over a group's whole ragged
+    stream: ``⌊live/m⌋`` full passes of ``m_chunk`` columns plus a final
+    tile-aligned remainder slice (capped at ``m_chunk``) — exactly the
+    per-shard sum of ``StreamPlan.widths`` the engine transfers
+    (fl/engine.py; launch/mesh.py::put_model_ragged)."""
+    full, rem = divmod(live, m_chunk)
+    cols = full * m_chunk
+    if rem:
+        cols += min(m_chunk, -(-rem // tile) * tile)
+    return cols
+
+
+def agg_wire_bytes(groups, *, agg: str = "replicated", tile: int = AGG_TILE,
+                   stream_dtype: str = "f32") -> int:
+    """Logical interconnect bytes one fused grouped round's panel stream
+    puts on the wire — the analytic twin of ``engine.AGG_STATS
+    ["wire_bytes"]`` (tests/test_contract.py pins the two equal).
+
+    ``groups`` is a sequence of per-group entries:
+
+    * ``agg="replicated"`` — ``(K_g, n_live)``: the whole live group panel
+      lands on the aggregation device, ``K_g · n_live`` elements (plus the
+      ``[n_live]`` bf16 scale row, 2 B/column, under ``"int8"``).
+    * ``agg="sharded"`` — ``(K_g, live_per_shard)`` with ``live_per_shard``
+      the per-column-shard live column counts (length D): each shard
+      receives its ragged :func:`_ragged_wire_cols` share of the ≤ D
+      ``m_chunk``-column passes, and under ``"int8"`` each live slice adds
+      its packed 4-bit scale exponents (``⌈width/2⌉`` bytes) plus the
+      2-byte bf16 group base.
+
+    Everything is plan metadata — this module stays jax-free and the
+    engine's measured counterpart never syncs a device."""
+    eb = STREAM_ELEM_BYTES[stream_dtype]
+    total = 0
+    for k_g, live in groups:
+        if agg == "replicated":
+            n_live = int(live)
+            total += k_g * n_live * eb
+            if stream_dtype == "int8":
+                total += 2 * n_live
+            continue
+        if agg != "sharded":
+            raise ValueError(f"unknown agg mode {agg!r}")
+        per_shard = [int(x) for x in live]
+        n_live = sum(per_shard)
+        m_chunk = agg_stream_cols_per_device(
+            n_live, n_devices=len(per_shard), agg="sharded", tile=tile
+        )
+        if m_chunk == 0:
+            continue
+        for ld in per_shard:
+            total += k_g * _ragged_wire_cols(ld, m_chunk, tile) * eb
+            if stream_dtype == "int8" and ld:
+                full, rem = divmod(ld, m_chunk)
+                total += full * (-(-m_chunk // 2) + 2)
+                if rem:
+                    w = min(m_chunk, -(-rem // tile) * tile)
+                    total += -(-w // 2) + 2
+    return total
+
+
+def agg_wire_bytes_uniform(groups, *, agg: str = "replicated",
+                           tile: int = AGG_TILE,
+                           stream_dtype: str = "f32") -> int:
+    """Counterfactual wire bytes of the PRE-ragged uniform axis-0-split
+    transfer at the same dtype — every pass ships an ``m_chunk``-column
+    (pad) row to EVERY shard.  Analytic twin of ``engine.AGG_STATS
+    ["wire_bytes_uniform"]``; the ragged/uniform ratio it enables is the
+    benchmark's concentrated-group transport headline."""
+    eb = STREAM_ELEM_BYTES[stream_dtype]
+    total = 0
+    for k_g, live in groups:
+        if agg == "replicated":
+            n_live = int(live)
+            total += k_g * n_live * eb
+            if stream_dtype == "int8":
+                total += 2 * n_live
+            continue
+        if agg != "sharded":
+            raise ValueError(f"unknown agg mode {agg!r}")
+        per_shard = [int(x) for x in live]
+        n_shards = len(per_shard)
+        m_chunk = agg_stream_cols_per_device(
+            sum(per_shard), n_devices=n_shards, agg="sharded", tile=tile
+        )
+        if m_chunk == 0:
+            continue
+        n_chunks = max(-(-ld // m_chunk) for ld in per_shard)
+        total += n_chunks * k_g * n_shards * m_chunk * eb
+        if stream_dtype == "int8":
+            total += n_chunks * n_shards * (-(-m_chunk // 2) + 2)
+    return total
+
+
 def server_aggregation_peak_bytes(
     k_total: int,
     n: int,
@@ -252,6 +351,7 @@ def server_aggregation_peak_bytes(
     tile: int = AGG_TILE,
     elem_bytes: int = 4,
     n_frozen: int = 0,
+    stream_dtype: Optional[str] = None,
 ) -> int:
     """Per-DEVICE peak bytes of the fused grouped aggregation
     (fl/engine.py::_grouped_fused with the ``fedavg_grouped`` kernel):
@@ -288,7 +388,16 @@ def server_aggregation_peak_bytes(
     frozen count as an optional third element ``(K_g, n_g, frozen_g)`` —
     omitted, a group is assumed fully live.  Per-device bytes therefore
     DECAY at each freeze point, and tests/test_contract.py pins this
-    figure to the measured ``AGG_STATS`` across a freeze transition."""
+    figure to the measured ``AGG_STATS`` across a freeze transition.
+
+    ``stream_dtype`` sizes the panel and stream terms at the engine's wire
+    dtype (fl/engine.py ``stream_dtype`` knob): the shared panel is BORN
+    at that dtype, so its resident per-device bytes shrink by the same
+    factor as the wire, and ``"int8"`` adds the resident ``[G, n_dev]``
+    bf16 dequantization-scale panel.  ``None`` (default) keeps the uniform
+    ``elem_bytes`` sizing — the pre-transport behavior, bit-compatible
+    with existing callers.  The gmask/scratch/weight terms stay f32 either
+    way (the kernel accumulates in f32)."""
     n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg, tile=tile,
                                    n_frozen=n_frozen)
     stream = max(
@@ -298,10 +407,12 @@ def server_aggregation_peak_bytes(
          for g in groups),
         default=0,
     ) if groups else 0
-    return elem_bytes * (
-        k_total * n_dev + n_groups * n_dev + 4 * n_dev + k_total + n_groups
-        + stream
-    )
+    panel_eb = (elem_bytes if stream_dtype is None
+                else STREAM_ELEM_BYTES[stream_dtype])
+    scales = 2 * n_groups * n_dev if stream_dtype == "int8" else 0
+    return panel_eb * (k_total * n_dev + stream) + elem_bytes * (
+        n_groups * n_dev + 4 * n_dev + k_total + n_groups
+    ) + scales
 
 
 def _depthfl_memory_mb(cfg: C.CNNConfig, depth: int, *, batch: int) -> float:

@@ -157,7 +157,9 @@ def _fedavg_grouped_kernel(p_ref, w_ref, gm_ref, ws_ref, prev_ref, o_ref):
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("bt", "interpret", "out_dtype")
+)
 def fedavg_grouped(
     params: jax.Array,  # [K, n] stacked client vectors (zero outside groups)
     weights: jax.Array,  # [K] raw (NOT normalized) weights
@@ -167,18 +169,24 @@ def fedavg_grouped(
     *,
     bt: int = 65536,
     interpret: Optional[bool] = None,
+    out_dtype: Optional[str] = None,  # result dtype; None = params.dtype
 ) -> jax.Array:
     """Group-compressed ``fedavg_masked``: per grid step stage the [K, bt]
     panel plus only a [G, bt] group-mask block and emit
     ``Σ_k w_k·p_kj / Σ_g wsum_g·gmask_gj``, falling back to ``prev`` where no
     group covers a column.  Requires the panel to be zero outside each
-    group's columns — exactly what the cohort engine's scatter produces."""
+    group's columns — exactly what the cohort engine's scatter produces.
+
+    ``out_dtype`` (a dtype name string, static) decouples the result dtype
+    from the panel's wire dtype: a bf16-streamed panel still aggregates to an
+    f32 server vector (the kernel accumulates in f32 regardless)."""
     if interpret is None:
         interpret = default_interpret()
     K, n = params.shape
     G = gmask.shape[0]
+    od = jnp.dtype(params.dtype if out_dtype is None else out_dtype)
     if prev is None:
-        prev = jnp.zeros((n,), params.dtype)
+        prev = jnp.zeros((n,), od)
     bt = min(bt, n)
     pad = (-n) % bt
     if pad:
@@ -198,7 +206,84 @@ def fedavg_grouped(
             pl.BlockSpec((bt,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n + pad,), params.dtype),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), od),
         interpret=interpret,
     )(params, weights, gmask, wsum, prev)
+    return out[:n]
+
+
+def _fedavg_grouped_dequant_kernel(
+    p_ref, w_ref, gm_ref, ws_ref, gs_ref, sc_ref, prev_ref, o_ref
+):
+    p = p_ref[...].astype(jnp.float32)  # [K, bt] int8 wire values
+    w = w_ref[...].astype(jnp.float32)  # [K]
+    gm = gm_ref[...].astype(jnp.float32)  # [G, bt]
+    ws = ws_ref[...].astype(jnp.float32)  # [G]
+    gsel = gs_ref[...].astype(jnp.float32)  # [K, G] one-hot row→group
+    sc = sc_ref[...].astype(jnp.float32)  # [G, bt] per-column scales
+    prev = prev_ref[...].astype(jnp.float32)  # [bt]
+    # Dequant prologue fused into the contraction: per-row scales via the
+    # one-hot matmul (MXU-friendly, no gather), f32 only in registers/VMEM.
+    ps = jnp.dot(gsel, sc)  # [K, bt]
+    num = jnp.einsum("k,kn->n", w, p * ps)
+    den = jnp.einsum("g,gn->n", ws, gm)
+    out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bt", "interpret", "out_dtype")
+)
+def fedavg_grouped_dequant(
+    params: jax.Array,  # [K, n] int8 panel (zero outside groups)
+    weights: jax.Array,  # [K] raw (NOT normalized) weights
+    gmask: jax.Array,  # [G, n] per-GROUP column membership
+    wsum: jax.Array,  # [G] per-group weight sums
+    gsel: jax.Array,  # [K, G] one-hot row→group selector
+    scales: jax.Array,  # [G, n] per-group per-column bf16 scales
+    prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
+    *,
+    bt: int = 65536,
+    interpret: Optional[bool] = None,
+    out_dtype: Optional[str] = "float32",
+) -> jax.Array:
+    """:func:`fedavg_grouped` over a QUANTIZED int8 panel: each grid step
+    stages the [K, bt] int8 block plus a [G, bt] bf16 scale block and
+    reconstructs f32 values inside the contraction (``p · (gsel @ scales)``),
+    so the f32 group panel never exists as an HBM buffer — per-tile VMEM
+    registers only.  Oracle: kernels/ref.py::fedavg_grouped_dequant.
+    Shard-local like every kernel here (no cross-column coupling): the same
+    pallas_call runs on a column shard inside shard_map."""
+    if interpret is None:
+        interpret = default_interpret()
+    K, n = params.shape
+    G = gmask.shape[0]
+    od = jnp.dtype(params.dtype if out_dtype is None else out_dtype)
+    if prev is None:
+        prev = jnp.zeros((n,), od)
+    bt = min(bt, n)
+    pad = (-n) % bt
+    if pad:
+        # padded gmask columns are zero -> den 0 -> prev padding (also zero)
+        params = jnp.pad(params, ((0, 0), (0, pad)))
+        gmask = jnp.pad(gmask, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad)))
+        prev = jnp.pad(prev, (0, pad))
+    nt = (n + pad) // bt
+    out = pl.pallas_call(
+        _fedavg_grouped_dequant_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((K, bt), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((G, bt), lambda i: (0, i)),
+            pl.BlockSpec((G,), lambda i: (0,)),
+            pl.BlockSpec((K, G), lambda i: (0, 0)),
+            pl.BlockSpec((G, bt), lambda i: (0, i)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), od),
+        interpret=interpret,
+    )(params, weights, gmask, wsum, gsel, scales, prev)
     return out[:n]

@@ -26,12 +26,26 @@ kernel launches that one logical dispatch lowers to (one per device of the
 fan-out without weakening the one-dispatch assertion.  The shard-local
 group-panel stream scatters (``scatter_stream_sharded``) are counted under
 ``stream_scatter``/``stream_scatter_shards`` — data movement, never part of
-the one-aggregation-dispatch contract.  ``STAGED`` counts
+the one-aggregation-dispatch contract.  Each scatter also RETURNS a tiny
+per-shard pacing token alongside the updated panel: a ``[D]`` slice of the
+written block that the engine threads into a later pass's source-side
+gather through ``jax.lax.optimization_barrier``, so at most ``inflight``
+stream passes can be resident on the agg devices at once — a pure
+data-dependency, no host sync (the one-``block_until_ready`` round
+contract is untouched).  ``STAGED`` counts
 membership metadata elements staged per aggregation kernel (the dense
 ``[K, n]`` mask for ``fedavg_masked``; the compact ``[G, n]`` group mask +
 ``[G]`` weight sums for ``fedavg_grouped``, padded-to-tile for the sharded
-variants) — the benchmark smoke gate asserts the grouped path stays within
-``G·n + K`` elements against it.
+variants; gmask + wsum + the ``[K, G]`` one-hot selector + the ``[G, n]``
+scale rows for the dequantizing variants) — the benchmark smoke gate
+asserts the grouped path stays within ``G·n + K`` elements against it.
+
+The dequantizing variants (``fedavg_grouped_dequant`` /
+``fedavg_grouped_dequant_sharded``) take an int8 panel plus per-group
+per-column bf16 scales and reconstruct f32 INSIDE the kernel contraction —
+they count under the SAME ``fedavg_grouped`` DISPATCHES key because they
+are the same logical aggregation dispatch, just over the compressed wire
+format (``stream_dtype="int8"``).
 """
 from __future__ import annotations
 
@@ -239,19 +253,58 @@ def fedavg_grouped(
     prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
     *,
     impl: Impl = "auto",
+    out_dtype: Optional[str] = None,  # result dtype; None = params.dtype
 ):
     """Group-compressed masked average: ``Σ_k w·p / Σ_g wsum·gmask`` with a
     zero-denominator passthrough to ``prev``.  Same math as ``fedavg_masked``
     when mask rows repeat within structure groups (they always do for the
     cohort engine), but stages ``G·n + G`` membership elements instead of
-    ``K·n`` — a K/G cut in mask HBM traffic per dispatch."""
+    ``K·n`` — a K/G cut in mask HBM traffic per dispatch.  ``out_dtype``
+    decouples the result dtype from the panel's wire dtype (a bf16-streamed
+    panel still aggregates to an f32 server vector)."""
     DISPATCHES["fedavg_grouped"] += 1
     STAGED["fedavg_grouped"] += int(gmask.size) + int(wsum.size)
     if impl == "auto":
         impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
     if impl == "pallas":
-        return _fedavg.fedavg_grouped(params, weights, gmask, wsum, prev)
-    return _ref.fedavg_grouped(params, weights, gmask, wsum, prev)
+        return _fedavg.fedavg_grouped(
+            params, weights, gmask, wsum, prev, out_dtype=out_dtype
+        )
+    return _ref.fedavg_grouped(
+        params, weights, gmask, wsum, prev, out_dtype=out_dtype
+    )
+
+
+def fedavg_grouped_dequant(
+    params,  # [K, n] int8 panel, zero outside each group's columns
+    weights,  # [K] raw weights
+    gmask,  # [G, n] per-GROUP column membership
+    wsum,  # [G] per-group weight sums
+    gsel,  # [K, G] one-hot row→group selector
+    scales,  # [G, n] per-group per-column bf16 scales
+    prev: Optional[jax.Array] = None,  # [n] passthrough for uncovered columns
+    *,
+    impl: Impl = "auto",
+    out_dtype: Optional[str] = "float32",
+):
+    """``fedavg_grouped`` over a quantized int8 panel with the dequant fused
+    into the kernel contraction (``p · (gsel @ scales)``) — the f32 panel
+    never materializes as a buffer.  Same logical dispatch, same DISPATCHES
+    key as ``fedavg_grouped``; the extra scale/selector staging is counted."""
+    DISPATCHES["fedavg_grouped"] += 1
+    STAGED["fedavg_grouped"] += (
+        int(gmask.size) + int(wsum.size) + int(gsel.size) + int(scales.size)
+    )
+    if impl == "auto":
+        impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
+    if impl == "pallas":
+        return _fedavg.fedavg_grouped_dequant(
+            params, weights, gmask, wsum, gsel, scales, prev,
+            out_dtype=out_dtype,
+        )
+    return _ref.fedavg_grouped_dequant(
+        params, weights, gmask, wsum, gsel, scales, prev
+    ).astype(jnp.dtype(out_dtype or jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -260,15 +313,33 @@ def fedavg_grouped(
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_agg_call(mesh: Mesh, kind: str, impl: str):
+def _sharded_agg_call(mesh: Mesh, kind: str, impl: str, out_dtype=None):
     """Cached jitted shard_map of a shard-local aggregation kernel over the
     ``model`` mesh axis.  The kernels are shard-local by construction (the
     per-column ratio has no cross-column coupling), so each device runs the
-    UNCHANGED kernel on its ``[K, n/D]`` column block — no collectives."""
+    UNCHANGED kernel on its ``[K, n/D]`` column block — no collectives.
+    ``out_dtype`` (a dtype name string, part of the cache key) is forwarded
+    to the grouped kernels so quantized/bf16 panels aggregate to f32."""
     if kind == "grouped":
         fn = (_fedavg.fedavg_grouped if impl == "pallas"
               else _ref.fedavg_grouped)
+        fn = functools.partial(fn, out_dtype=out_dtype)
         in_specs = (P(None, "model"), P(), P(None, "model"), P(), P("model"))
+    elif kind == "grouped_dequant":
+        if impl == "pallas":
+            fn = functools.partial(
+                _fedavg.fedavg_grouped_dequant, out_dtype=out_dtype
+            )
+        else:
+            od = jnp.dtype(out_dtype or jnp.float32)
+
+            def fn(*a, _od=od):
+                return _ref.fedavg_grouped_dequant(*a).astype(_od)
+
+        in_specs = (
+            P(None, "model"), P(), P(None, "model"), P(), P(),
+            P(None, "model"), P("model"),
+        )
     else:
         fn = (_fedavg.fedavg_masked if impl == "pallas"
               else _ref.fedavg_masked)
@@ -290,17 +361,24 @@ def _stream_scatter_call(mesh: Mesh):
             # pass; dl [1, m]: their local columns inside this shard's
             # block (pad = n_shard -> dropped).  Read-modify-write of the
             # group's row block so multi-pass streams compose — the donated
-            # panel makes it an in-place update.
+            # panel makes it an in-place update.  The returned token is a
+            # one-element slice of the WRITTEN block: anything data-dependent
+            # on it (the engine barriers a later pass's gather on it) cannot
+            # start before this shard's landing completed — the pacing
+            # primitive, with zero transfer cost (one element per shard).
             blk = jax.lax.dynamic_slice(
                 pnl, (rowl, 0), (gp.shape[1], pnl.shape[1])
             )
             blk = blk.at[:, dl[0]].set(gp[0], mode="drop")
-            return jax.lax.dynamic_update_slice(pnl, blk, (rowl, 0))
+            return (
+                jax.lax.dynamic_update_slice(pnl, blk, (rowl, 0)),
+                blk[0, :1],
+            )
 
         return shard_map(
             shard, mesh=mesh,
             in_specs=(P(None, "model"), P("model"), P("model"), P()),
-            out_specs=P(None, "model"), check_rep=False,
+            out_specs=(P(None, "model"), P("model")), check_rep=False,
         )(panel, sel, dst, row)
 
     # only the panel is donated: sel has no matching output to alias into
@@ -323,7 +401,14 @@ def scatter_stream_sharded(
     lands them at ``dst`` inside its own block — no ``[K_g, n_g]`` replica
     ever exists on an agg device.  The panel is donated (in-place update);
     ``dst`` is the layout's cached per-mesh index buffer and must NOT be
-    donated.  Accounting: one ``stream_scatter`` entry
+    donated.
+
+    Returns ``(panel, token)``: ``token`` is a ``[D]`` pacing carry (one
+    element per shard, sliced from the written row block) that the engine
+    feeds back into a later pass's source-side gather via
+    ``jax.lax.optimization_barrier`` — a pure device-side data dependency
+    that caps the number of in-flight stream passes without any host sync.
+    Accounting: one ``stream_scatter`` entry
     per pass plus ``stream_scatter_shards`` += D for the per-shard updates
     (scatters are data movement, not aggregation dispatches — the
     one-``fedavg_grouped``-dispatch round contract does not count them)."""
@@ -348,6 +433,7 @@ def fedavg_grouped_sharded(
     *,
     mesh: Mesh,
     impl: Impl = "auto",
+    out_dtype: Optional[str] = None,
 ):
     """Column-sharded ``fedavg_grouped``: ONE logical aggregation dispatch
     that lowers to one shard-local kernel launch per device of ``mesh``'s
@@ -365,8 +451,40 @@ def fedavg_grouped_sharded(
     if impl == "auto":
         impl = ("pallas" if (_on_tpu() or params.shape[-1] // d >= 4096)
                 else "naive")
-    return _sharded_agg_call(mesh, "grouped", impl)(
+    return _sharded_agg_call(mesh, "grouped", impl, out_dtype)(
         params, weights, gmask, wsum, prev
+    )
+
+
+def fedavg_grouped_dequant_sharded(
+    params,  # [K, n_padded] int8 panel, column-sharded P(None, "model")
+    weights,  # [K] raw weights
+    gmask,  # [G, n_padded] group mask, column-sharded P(None, "model")
+    wsum,  # [G] per-group weight sums
+    gsel,  # [K, G] one-hot row→group selector (replicated)
+    scales,  # [G, n_padded] bf16 scales, column-sharded P(None, "model")
+    prev,  # [n_padded] passthrough, column-sharded P("model")
+    *,
+    mesh: Mesh,
+    impl: Impl = "auto",
+    out_dtype: Optional[str] = "float32",
+):
+    """Column-sharded :func:`fedavg_grouped_dequant`: each device
+    dequantizes and contracts its own ``[K, n_padded/D]`` int8 block against
+    its ``[G, n_padded/D]`` scale block — neither the f32 panel nor the full
+    int8 panel ever exists on a single device.  Same DISPATCHES key and
+    round contract as :func:`fedavg_grouped_sharded`."""
+    d = mesh.shape["model"]
+    DISPATCHES["fedavg_grouped"] += 1
+    DISPATCHES["fedavg_grouped_shards"] += d
+    STAGED["fedavg_grouped"] += (
+        int(gmask.size) + int(wsum.size) + int(gsel.size) + int(scales.size)
+    )
+    if impl == "auto":
+        impl = ("pallas" if (_on_tpu() or params.shape[-1] // d >= 4096)
+                else "naive")
+    return _sharded_agg_call(mesh, "grouped_dequant", impl, out_dtype)(
+        params, weights, gmask, wsum, gsel, scales, prev
     )
 
 

@@ -111,6 +111,8 @@ def fedavg_grouped(
     gmask: jax.Array,  # [G, n] per-GROUP column membership
     wsum: jax.Array,  # [G] per-group weight sums
     prev: jax.Array | None = None,  # [n] passthrough where nobody covers a col
+    *,
+    out_dtype=None,  # result dtype; None = params.dtype (wire dtype ≠ result)
 ) -> jax.Array:
     """Group-compressed ``fedavg_masked``: membership is identical within a
     structure group, so the per-client ``[K, n]`` mask collapses to a
@@ -122,7 +124,9 @@ def fedavg_grouped(
         out[j] = prev[j] (or 0 if prev is None)        otherwise
 
     Accumulated in f32; equals ``fedavg_masked`` with the expanded per-client
-    mask up to f32 reduction order."""
+    mask up to f32 reduction order.  ``out_dtype`` decouples the result dtype
+    from the panel's: a bf16-streamed panel (stream_dtype="bf16") still
+    aggregates to an f32 server vector."""
     w = weights.astype(jnp.float32)
     num = jnp.einsum("k,kn->n", w, params.astype(jnp.float32))
     den = jnp.einsum(
@@ -130,7 +134,109 @@ def fedavg_grouped(
     )
     base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
     out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
-    return out.astype(params.dtype)
+    return out.astype(params.dtype if out_dtype is None else out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized panel transport (the stream_dtype="int8" wire format)
+# ---------------------------------------------------------------------------
+#
+# The cohort engine streams group panels int8 with PER-COLUMN scales carried
+# as 4-bit power-of-two exponents against one bf16 per-group base:
+#
+#     scale_j = gbase · 2^(-e_j),   e_j ∈ [0, 15],   gbase = max_j a_j / 127
+#
+# with a_j the column absmax of the (error-feedback-corrected) panel.  The
+# exponent row packs two columns per byte, so the whole scale side costs
+# ~0.5 B/column on the wire — the int8 stream stays ≤ 0.30× the f32 wire
+# bytes even at 4 clients per group, where a 2-byte bf16 scale row would
+# blow the budget.  Quantization error per column is ≤ scale_j (the
+# power-of-two ceiling doubles the exact-absmax step at worst); the
+# error-feedback residual carried across rounds makes it unbiased in time.
+# These functions are the semantics of record: the engine's jitted
+# source-side quantizer and the Pallas dequant kernel both compose them, so
+# source dequant (for the residual) and agg dequant are bitwise identical.
+
+
+def quantize_columns(t: jax.Array):
+    """Per-column int8 quantization of a ``[K, n]`` f32 panel.
+
+    Returns ``(q, scale, e, gbase)``: int8 values, the DECODED per-column
+    bf16 scales (``gbase · 2^-e``, exactly what :func:`decode_scale_exponents`
+    reconstructs on the receiving shard), the 4-bit exponents (int8, values
+    0..15), and the per-group bf16 base.  ``q`` is clipped to ±127, so a
+    bf16 down-rounding of ``gbase`` can never overflow int8."""
+    t = t.astype(jnp.float32)
+    a = jnp.max(jnp.abs(t), axis=0)  # [n] column absmax
+    gbase = (jnp.max(a) / 127.0).astype(jnp.bfloat16)
+    gb = gbase.astype(jnp.float32)
+    ratio = jnp.where(a > 0, gb / jnp.maximum(a / 127.0, 1e-38), 1.0)
+    e = jnp.clip(
+        jnp.floor(jnp.log2(jnp.maximum(ratio, 1.0))), 0, 15
+    ).astype(jnp.int8)
+    scale = decode_scale_exponents(e, gbase)
+    sf = scale.astype(jnp.float32)
+    q = jnp.clip(
+        jnp.round(t / jnp.where(sf > 0, sf, 1.0)), -127, 127
+    ).astype(jnp.int8)
+    return q, scale, e, gbase
+
+
+def dequantize_columns(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 reconstruction ``q · scale`` — the exact expression the fused
+    dequant prologue evaluates inside the kernel."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def decode_scale_exponents(e: jax.Array, gbase: jax.Array) -> jax.Array:
+    """``[n]`` bf16 per-column scales from 4-bit exponents + group base."""
+    return (
+        gbase.astype(jnp.float32) * jnp.exp2(-e.astype(jnp.float32))
+    ).astype(jnp.bfloat16)
+
+
+def pack_scale_exponents(e: jax.Array) -> jax.Array:
+    """Pack an EVEN-length ``[n]`` exponent row (values 0..15) two columns
+    per byte: ``out[i] = e[2i] | e[2i+1] << 4`` — the 0.5 B/column wire
+    format of the scale side of the int8 stream."""
+    ei = e.astype(jnp.int32)
+    return (ei[0::2] | (ei[1::2] << 4)).astype(jnp.int8)
+
+
+def unpack_scale_exponents(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_scale_exponents` (exact for 4-bit values)."""
+    pi = packed.astype(jnp.int32) & 0xFF
+    return jnp.stack([pi & 0xF, (pi >> 4) & 0xF], axis=1).reshape(-1)
+
+
+def fedavg_grouped_dequant(
+    params: jax.Array,  # [K, n] int8 panel, zero outside groups
+    weights: jax.Array,  # [K] raw weights
+    gmask: jax.Array,  # [G, n] per-group column membership
+    wsum: jax.Array,  # [G] per-group weight sums
+    gsel: jax.Array,  # [K, G] one-hot row→group selector
+    scales: jax.Array,  # [G, n] per-group per-column bf16 scales
+    prev: jax.Array | None = None,  # [n] f32 passthrough
+) -> jax.Array:
+    """Dequantizing :func:`fedavg_grouped`: the panel arrives int8 and the
+    f32 values are reconstructed INSIDE the contraction — row ``k`` of group
+    ``g`` dequantizes with ``scales[g]``, selected by the one-hot
+    ``gsel @ scales`` matmul:
+
+        out[j] = Σ_k w_k·(p_kj·scales[g(k), j]) / Σ_g wsum_g·gmask_gj
+
+    (zero-denominator passthrough to ``prev`` as ever).  The f32 panel never
+    exists as a buffer — only per-tile registers inside the kernel this
+    oracle specifies.  Output is f32 (the aggregate, not the wire dtype)."""
+    w = weights.astype(jnp.float32)
+    ps = jnp.dot(gsel.astype(jnp.float32), scales.astype(jnp.float32))
+    num = jnp.einsum("k,kn->n", w, params.astype(jnp.float32) * ps)
+    den = jnp.einsum(
+        "g,gn->n", wsum.astype(jnp.float32), gmask.astype(jnp.float32)
+    )
+    base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
+    out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
+    return out
 
 
 def fedavg_grouped_sharded(
@@ -142,6 +248,7 @@ def fedavg_grouped_sharded(
     *,
     n_shards: int = 1,
     tile: int = 128,
+    out_dtype=None,
 ) -> jax.Array:
     """Column-shard decomposition oracle for the sharded aggregation
     (kernels/ops.py::fedavg_grouped_sharded / fl/engine.py): pad ``n`` up to
@@ -162,7 +269,7 @@ def fedavg_grouped_sharded(
     outs = [
         fedavg_grouped(
             p[:, o : o + n_shard], weights, gm[:, o : o + n_shard], wsum,
-            pv[o : o + n_shard],
+            pv[o : o + n_shard], out_dtype=out_dtype,
         )
         for o in range(0, n_shard * n_shards, n_shard)
     ]

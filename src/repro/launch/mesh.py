@@ -7,7 +7,11 @@ init; smoke tests and benches must keep seeing 1 device.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -87,6 +91,124 @@ def put_model_sharded(x, mesh):
     slice straight to its owning device, so the buffer is never replicated
     across the aggregation mesh the way a ``P()`` placement would."""
     return jax.device_put(x, model_stream_sharding(mesh, x.ndim))
+
+
+@functools.lru_cache(maxsize=64)
+def _model_device_grid(mesh):
+    """``[R, D]`` device grid of ``mesh`` with the ``model`` axis last:
+    column ``d`` lists every device holding model shard ``d`` (R = the
+    product of the other axes — shard replicas on a composed
+    ``clients × model`` mesh)."""
+    ax = mesh.axis_names.index("model")
+    d = mesh.shape["model"]
+    return np.moveaxis(np.asarray(mesh.devices), ax, -1).reshape(-1, d)
+
+
+@functools.lru_cache(maxsize=512)
+def _zeros_on(shape, dtype, device):
+    """Cached jitted zeros-constructor pinned to one device: an empty ragged
+    shard is BORN on its destination, zero interconnect bytes."""
+    from jax.sharding import SingleDeviceSharding
+
+    return jax.jit(
+        lambda: jnp.zeros(shape, dtype), out_shardings=SingleDeviceSharding(device)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _pad_stream_slice(x, *, width):
+    """``[K, w] -> [1, K, width]`` zero-pad, executed ON the slice's own
+    (destination) device — the pad columns never cross the interconnect."""
+    return jnp.pad(x, ((0, 0), (0, width - x.shape[1])))[None]
+
+
+def put_model_ragged(sel, widths, mesh):
+    """Ragged counterpart of :func:`put_model_sharded` for one stream pass:
+    ``sel`` is the source-side uniform ``[D, K, m]`` gather, but shard ``d``
+    only has ``widths[d]`` live (tile-aligned) columns this pass — the rest
+    is clip-gather pad the destination sentinel drops anyway.  Instead of
+    shipping the uniform split (a pad row to EVERY shard, up to D× useful
+    bytes for a concentrated DepthFL group), transfer exactly
+    ``sel[d, :, :widths[d]]`` to each of shard ``d``'s devices, zero-pad
+    back to ``m`` on the destination, and assemble the global ``[D, K, m]``
+    axis-0-sharded array via ``jax.make_array_from_single_device_arrays`` —
+    identical shape/sharding/values to the uniform transfer (bit-equal
+    landing data), ragged WIRE bytes.  A ``widths[d] == 0`` shard receives
+    nothing at all (its slice is zeros born on-device).  When every width
+    equals ``m`` this degenerates to the single uniform ``device_put``."""
+    D, K, m = sel.shape
+    if all(int(w) >= m for w in widths):
+        return jax.device_put(sel, model_stream_sharding(mesh, 3))
+    grid = _model_device_grid(mesh)
+    shards = [None] * grid.size
+    movers, targets, slots = [], [], []
+    for d in range(D):
+        w = int(widths[d])
+        for r in range(grid.shape[0]):
+            i = r * D + d
+            if w == 0:
+                shards[i] = _zeros_on((1, K, m), jnp.dtype(sel.dtype), grid[r, d])()
+            else:
+                movers.append(sel[d, :, :w] if w < m else sel[d])
+                targets.append(grid[r, d])
+                slots.append(i)
+    if movers:
+        for i, mv in zip(slots, jax.device_put(movers, targets)):
+            shards[i] = _pad_stream_slice(mv, width=m)
+    return jax.make_array_from_single_device_arrays(
+        (D, K, m), model_stream_sharding(mesh, 3), shards
+    )
+
+
+@jax.jit
+def _pack_scale_slice(e):
+    from repro.kernels import ref as _ref
+
+    if e.shape[0] % 2:
+        e = jnp.pad(e, (0, 1))
+    return _ref.pack_scale_exponents(e)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _decode_scale_slice(pk, gbase, *, m):
+    from repro.kernels import ref as _ref
+
+    e = _ref.unpack_scale_exponents(pk)
+    sc = _ref.decode_scale_exponents(e, gbase)[:m]
+    return jnp.pad(sc, (0, m - sc.shape[0]))[None, None]
+
+
+def put_scales_ragged(egather, gbase, widths, mesh):
+    """Scale-row companion of :func:`put_model_ragged` for the int8 stream:
+    ``egather`` is the source-side ``[D, m]`` gather of 4-bit per-column
+    scale exponents (``kernels/ref.py::quantize_columns``), ``gbase`` the
+    group's scalar bf16 base.  Each live slice is PACKED two exponents per
+    byte on the source (~0.5 B/column on the wire), shipped with the 2-byte
+    base, then unpacked and decoded to bf16 scales on the destination
+    device.  Returns the global ``[D, 1, m]`` bf16 axis-0-sharded scale
+    slices, ready for the same shard-local scatter as the panel."""
+    D, m = egather.shape
+    grid = _model_device_grid(mesh)
+    shards = [None] * grid.size
+    movers, targets, slots = [], [], []
+    for d in range(D):
+        w = int(widths[d])
+        packed = None if w == 0 else _pack_scale_slice(egather[d, :w])
+        for r in range(grid.shape[0]):
+            i = r * D + d
+            if w == 0:
+                shards[i] = _zeros_on((1, 1, m), jnp.dtype(jnp.bfloat16), grid[r, d])()
+            else:
+                movers.extend([packed, gbase])
+                targets.extend([grid[r, d]] * 2)
+                slots.append(i)
+    if movers:
+        moved = jax.device_put(movers, targets)
+        for j, i in enumerate(slots):
+            shards[i] = _decode_scale_slice(moved[2 * j], moved[2 * j + 1], m=m)
+    return jax.make_array_from_single_device_arrays(
+        (D, 1, m), model_stream_sharding(mesh, 3), shards
+    )
 
 
 def make_fl_production_mesh(*, n_client_shards: int = 16, n_model: int = 16):

@@ -30,6 +30,16 @@ round, bit-equal to the replicated path, with n not divisible by the shard
 count and a wide-group case where the stream slice is strictly smaller
 than the full group panel).
 
+The TRANSPORT axis (ISSUE 7) extends the conformance idea to the wire:
+``stream_dtype="f32"`` (any ``inflight``) must be BIT-equal to the default
+round on both aggregation placements, the quantized wire dtypes
+(``"bf16"``/``"int8"``) must stay within their documented tolerance of the
+f32 oracle on every fixture, and the engine's measured transport telemetry
+(``AGG_STATS``'s ``wire_bytes`` / ``wire_bytes_uniform`` / per-device byte
+fields) must equal ``memory_model``'s analytic twins exactly — including on
+the composed mesh, where a DepthFL-style concentrated group pins the
+ragged-vs-uniform saving and the quantized panel's never-f32 residency.
+
 The FROZEN-column axis (ISSUE 6) re-runs the conformance idea against a
 freezing-aware layout: ``grouped_round(frozen=...)`` must be identical to
 simply not updating the frozen columns (bit-equal passthrough, live
@@ -880,6 +890,74 @@ assert st_f["per_device_stream_elems"] < st_w["per_device_stream_elems"], (
     st_f, st_w)
 print("FROZEN_OK", st_w["per_device_panel_elems"], "->",
       st_f["per_device_panel_elems"])
+
+# TRANSPORT (ISSUE 7) on the real 2-shard mesh, back on the small world:
+# with AGG_TILE=128 every one of the 19 columns lives in shard 0, so BOTH
+# groups are DepthFL-style concentrated — the ragged transfer ships shard 1
+# nothing at all while the uniform axis-0 split would send it a full pad
+# row per pass (2x the wire).  Measured wire == the memory model's analytic
+# twin, per wire dtype; the quantized panel/stream/scales reside at the
+# wire dtype on every agg device (never f32).
+from repro.fl import memory_model as MM2
+cs2 = layout.column_shards(2)
+
+def wire_groups(agg):
+    if agg == "replicated":
+        return [(k, int(layout.group_active_cols(gi).size))
+                for gi, k in enumerate(layout.ks)]
+    return [
+        (k, [int(np.sum((layout.group_active_cols(gi) >= o)
+                        & (layout.group_active_cols(gi) < o + cs2.n_shard)))
+             for o in cs2.offsets])
+        for gi, k in enumerate(layout.ks)
+    ]
+
+g_sh = wire_groups("sharded")
+assert all(per[1] == 0 for _, per in g_sh), g_sh  # concentrated: shard 1 idle
+for sd in ("f32", "bf16", "int8"):
+    got_t = eng.grouped_round(plans, tr, {}, agg="sharded", stream_dtype=sd)
+    st_t = dict(ENG.AGG_STATS)
+    eb = ENG.STREAM_ELEM_BYTES[sd]
+    assert st_t["stream_dtype"] == sd and st_t["n_shards"] == 2, st_t
+    want_w = MM2.agg_wire_bytes(g_sh, agg="sharded", stream_dtype=sd)
+    want_u = MM2.agg_wire_bytes_uniform(g_sh, agg="sharded", stream_dtype=sd)
+    assert st_t["wire_bytes"] == want_w, (sd, st_t["wire_bytes"], want_w)
+    assert st_t["wire_bytes_uniform"] == want_u, (sd, st_t, want_u)
+    assert st_t["wire_bytes"] <= want_u // 2, (sd, want_w, want_u)
+    assert st_t["panel_elem_bytes"] == eb, st_t
+    assert st_t["per_device_panel_bytes"] == \
+        st_t["per_device_panel_elems"] * eb, st_t
+    assert st_t["per_device_stream_bytes"] == \
+        st_t["per_device_stream_elems"] * eb, st_t
+    assert st_t["per_device_scales_bytes"] == \
+        (2 * layout.n_groups * cs2.n_shard if sd == "int8" else 0), st_t
+    if sd == "f32":  # the ragged+paced f32 wire is the replicated result, bit-for-bit
+        for a, b in zip(jax.tree.leaves(got_r.trainable),
+                        jax.tree.leaves(got_t.trainable)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:  # quantized wire: documented tolerance of the f32 result
+        for a, b in zip(jax.tree.leaves(got_r.trainable),
+                        jax.tree.leaves(got_t.trainable)):
+            aa, bb = np.asarray(a, np.float32), np.asarray(b, np.float32)
+            tol = max(1.0, float(np.max(np.abs(aa)))) / (
+                32.0 if sd == "int8" else 128.0)
+            np.testing.assert_allclose(bb, aa, atol=tol)
+
+# pacing tokens are pure dependency sequencing: any inflight depth is the
+# default f32 round bit-for-bit
+for infl in (1, 3):
+    got_p = eng.grouped_round(plans, tr, {}, agg="sharded", inflight=infl)
+    for a, b in zip(jax.tree.leaves(got_r.trainable),
+                    jax.tree.leaves(got_p.trainable)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# int8 round 2: the EF residual (committed to the agg mesh) rides the next
+# round's quantization without disturbing the round contracts
+got_q2 = eng.grouped_round(plans, tr, {}, agg="sharded", stream_dtype="int8")
+assert all(bool(jnp.all(jnp.isfinite(l)))
+           for l in jax.tree.leaves(got_q2.trainable))
+print("TRANSPORT_OK", MM2.agg_wire_bytes(g_sh, agg="sharded"), "ragged vs",
+      MM2.agg_wire_bytes_uniform(g_sh, agg="sharded"), "uniform")
 """
 
 
@@ -902,3 +980,242 @@ def test_composed_mesh_sharded_agg_subprocess():
     assert "GMASK_KEYING_OK" in out.stdout
     assert "STREAM_SHARDED_OK" in out.stdout
     assert "FROZEN_OK" in out.stdout
+    assert "TRANSPORT_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# transport axis (ISSUE 7): stream_dtype × agg conformance, wire accounting
+# ---------------------------------------------------------------------------
+
+# tier-1 allowlist for the quantized-dtype cells per heavy fixture; the
+# mixed fixture runs its full (dtype × agg) square in tier-1
+STREAM_TIER1 = {
+    "mixed": None,
+    "cnn": {("int8", "sharded")},
+    "transformer": {("int8", "sharded")},
+}
+
+
+def _wire_groups(layout, n_shards, agg):
+    """Per-group wire-model entries for ``MM.agg_wire_bytes``: ``(K_g,
+    n_live)`` replicated, ``(K_g, live-per-shard)`` sharded (the live
+    column histogram over the layout's column-shard ranges)."""
+    if agg == "replicated":
+        return [(k, int(layout.group_active_cols(gi).size))
+                for gi, k in enumerate(layout.ks)]
+    cs = layout.column_shards(n_shards)
+    out = []
+    for gi, k in enumerate(layout.ks):
+        live = layout.group_active_cols(gi)
+        out.append((k, [int(np.sum((live >= o) & (live < o + cs.n_shard)))
+                        for o in cs.offsets]))
+    return out
+
+
+def test_stream_elem_bytes_maps_pinned():
+    """The engine's wire-dtype table and the memory model's mirror must
+    never drift apart — every byte-accounting cross-check rests on it."""
+    assert ENG.STREAM_DTYPES == ("f32", "bf16", "int8")
+    assert ENG.STREAM_ELEM_BYTES == MM.STREAM_ELEM_BYTES
+    assert ENG.STREAM_ELEM_BYTES == {"f32": 4, "bf16": 2, "int8": 1}
+
+
+def test_stream_dtype_f32_bit_equal_to_default(mixed_world):
+    """Explicit ``stream_dtype="f32"`` — at ANY inflight depth — is the
+    default path: bit-equal results on both aggregation placements (the
+    ragged transfer lands identical values and the pacing token is pure
+    dependency sequencing, so no knob may perturb a single bit)."""
+    plans, gtr, gbn, _ = mixed_world
+    base_eng = ENG.make_engine("packed")
+    for agg in AGGS:
+        base = base_eng.grouped_round(plans, gtr, gbn, agg=agg)
+        for inflight in (1, 3):
+            got = ENG.make_engine(
+                "packed", stream_dtype="f32", inflight=inflight
+            ).grouped_round(plans, gtr, gbn, agg=agg)
+            for a, b in zip(jax.tree.leaves(base.trainable),
+                            jax.tree.leaves(got.trainable)):
+                np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                              np.asarray(b, np.float32))
+
+
+def _stream_matrix():
+    for fixture in FIXTURES:
+        fast = STREAM_TIER1[fixture]
+        for sd in ("bf16", "int8"):
+            for agg in AGGS:
+                marks = ()
+                if fast is not None and (sd, agg) not in fast:
+                    marks = (pytest.mark.slow,)
+                yield pytest.param(fixture, sd, agg, marks=marks,
+                                   id=f"{fixture}-{sd}-{agg}")
+
+
+@pytest.mark.parametrize("fixture,sd,agg", list(_stream_matrix()))
+def test_stream_dtype_contract(fixture, sd, agg, request):
+    """Quantized wire dtypes vs the f32 oracle at the DOCUMENTED tolerance:
+    ``bf16`` rounds each panel entry to 8 mantissa bits (aggregate within
+    ``absmax/128`` — one bf16 ulp at the panel's magnitude, with margin);
+    ``int8`` errs at most one per-column scale per entry, and the scale is
+    at most ``2·colmax/127`` (aggregate within ``absmax/16``, 4× margin for
+    panel entries above the aggregate's absmax).  The loss is computed from
+    local SGD BEFORE the wire, so it must match at the matrix tolerance."""
+    plans, gtr, gbn, want = request.getfixturevalue(fixture + "_world")
+    got = ENG.make_engine("packed", stream_dtype=sd).grouped_round(
+        plans, gtr, gbn, agg=agg
+    )
+    ref_flat = np.asarray(ENG.make_pack_spec(gtr).pack(want.trainable),
+                          np.float32)
+    got_flat = np.asarray(got.packed, np.float32)
+    absmax = max(float(np.max(np.abs(ref_flat))), 1e-3)
+    tol = absmax / (128.0 if sd == "bf16" else 16.0)
+    np.testing.assert_allclose(got_flat, ref_flat, atol=tol + 1e-5)
+    np.testing.assert_allclose(float(got.loss), float(want.loss), atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+@pytest.mark.parametrize("sd", ENG.STREAM_DTYPES)
+def test_wire_bytes_match_model(mixed_world, sd, agg):
+    """The measured transport telemetry equals the analytic memory model
+    EXACTLY, per wire dtype and placement: ``wire_bytes`` (ragged payload +
+    int8's packed scale exponents), the uniform counterfactual, and every
+    per-device resident-bytes field at the wire dtype — no agg device holds
+    an f32 panel when the wire is quantized."""
+    plans, gtr, gbn, _ = mixed_world
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    eng = ENG.make_engine("packed", stream_dtype=sd)
+    eng.grouped_round(plans, gtr, gbn, agg=agg)
+    st = dict(ENG.AGG_STATS)
+    eb = ENG.STREAM_ELEM_BYTES[sd]
+    assert st["stream_dtype"] == sd and st["inflight"] == 2
+    assert st["panel_elem_bytes"] == eb
+    groups = _wire_groups(layout, st["n_shards"], agg)
+    assert st["wire_bytes"] == MM.agg_wire_bytes(
+        groups, agg=agg, stream_dtype=sd
+    )
+    assert st["wire_bytes_uniform"] == MM.agg_wire_bytes_uniform(
+        groups, agg=agg, stream_dtype=sd
+    )
+    assert st["wire_bytes"] <= st["wire_bytes_uniform"]
+    assert st["per_device_panel_bytes"] == st["per_device_panel_elems"] * eb
+    assert st["per_device_stream_bytes"] == st["per_device_stream_elems"] * eb
+    if sd == "int8":
+        n_dev_cols = (st["n_padded"] // st["n_shards"]
+                      if agg == "sharded" else st["n_active"])
+        assert st["per_device_scales_bytes"] == 2 * layout.n_groups * n_dev_cols
+        # the quantized wire is strictly cheaper than the f32 wire
+        assert st["wire_bytes"] < MM.agg_wire_bytes(
+            groups, agg=agg, stream_dtype="f32"
+        )
+    else:
+        assert st["per_device_scales_bytes"] == 0
+
+
+def test_stream_dtype_int8_single_dispatch_single_sync(mixed_world):
+    """The quantized round keeps BOTH fused-path contracts: exactly one
+    logical ``fedavg_grouped`` dispatch (the dequant variant shares the
+    counter key) and exactly one host sync — quantization, EF update, scale
+    packing/decoding, and the ragged stream are all async."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed", stream_dtype="int8")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded")  # warm + seed EF
+    OPS.reset_dispatches()
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        ENG.reset_syncs()
+        eng.grouped_round(plans, gtr, gbn, agg="sharded")
+    finally:
+        jax.block_until_ready = real
+    assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+    assert ENG.SYNCS["aggregation_barrier"] == 1
+    assert OPS.DISPATCHES["fedavg_grouped"] == 1
+    assert OPS.DISPATCHES["fedavg_grouped_shards"] == \
+        ENG.AGG_STATS["n_shards"]
+    ENG.reset_syncs()
+    OPS.reset_dispatches()
+
+
+def test_stream_dtype_knob_validation(mixed_world):
+    plans, gtr, gbn, _ = mixed_world
+    with pytest.raises(ValueError):
+        ENG.make_engine("packed", stream_dtype="fp8")
+    with pytest.raises(ValueError):
+        ENG.make_engine("packed", inflight=0)
+    eng = ENG.make_engine("packed")
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, stream_dtype="f16")
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, inflight=0)
+    # the legacy dense-mask kernel has no dequant variant: quantized wire
+    # dtypes are rejected, not silently upcast
+    for sd in ("bf16", "int8"):
+        with pytest.raises(ValueError):
+            eng.grouped_round(plans, gtr, gbn, impl="fused_masked",
+                              stream_dtype=sd)
+    # the serial oracle never touches the wire: knobs are accepted, ignored
+    want = eng.grouped_round(plans, gtr, gbn, impl="serial")
+    got = eng.grouped_round(plans, gtr, gbn, impl="serial",
+                            stream_dtype="int8", inflight=1)
+    for a, b in zip(jax.tree.leaves(want.trainable),
+                    jax.tree.leaves(got.trainable)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_int8_ef_state_lifecycle(mixed_world):
+    """Error-feedback residuals live on the ENGINE across rounds: seeded by
+    the first int8 round (one entry per group), carried into the next round
+    (which therefore differs from the first on identical inputs), dropped by
+    ``reset_ef`` (restoring the first round bit-for-bit), and never touched
+    by f32 rounds."""
+    plans, gtr, gbn, _ = mixed_world
+    layout = ENG.make_group_layout(plans, gtr, gbn)
+    eng = ENG.make_engine("packed", stream_dtype="int8")
+    assert not eng._ef_state
+    r1 = eng.grouped_round(plans, gtr, gbn, agg="replicated")
+    assert len(eng._ef_state) == layout.n_groups
+    r2 = eng.grouped_round(plans, gtr, gbn, agg="replicated")
+    assert not np.array_equal(np.asarray(r1.packed), np.asarray(r2.packed))
+    eng.reset_ef()
+    assert not eng._ef_state
+    r3 = eng.grouped_round(plans, gtr, gbn, agg="replicated")
+    np.testing.assert_array_equal(np.asarray(r1.packed),
+                                  np.asarray(r3.packed))
+    eng_f32 = ENG.make_engine("packed")
+    eng_f32.grouped_round(plans, gtr, gbn)
+    assert not eng_f32._ef_state
+
+
+@pytest.mark.slow
+def test_int8_ef_mean_converges_to_fedavg(cnn_world):
+    """EF telescopes: repeating the SAME CNN round on one int8 engine, round
+    ``r`` ships ``t + ef_{r-1} - ef_r``, so the running mean of the
+    quantized aggregates converges to the exact f32 FedAvg aggregate at
+    ``O(scale/R)`` (``fedavg_grouped`` is linear in the panel, so per-column
+    telescoping carries through the weighted mean).  This is the
+    convergence-to-FedAvg guarantee error feedback buys on a non-IID
+    fixture — without EF the per-round quantization error would not
+    average out."""
+    plans, gtr, gbn, _ = cnn_world
+    exact = np.asarray(
+        ENG.make_engine("packed").grouped_round(plans, gtr, gbn).packed,
+        np.float64,
+    )
+    eng = ENG.make_engine("packed", stream_dtype="int8")
+    outs = [
+        np.asarray(eng.grouped_round(plans, gtr, gbn).packed, np.float64)
+        for _ in range(8)
+    ]
+    err1 = float(np.max(np.abs(outs[0] - exact)))
+    err_mean = float(np.max(np.abs(np.mean(outs, axis=0) - exact)))
+    # |mean - exact| = |agg(ef_R)|/R <= scale/R: an ~8x drop from the
+    # single-round error bound (scale), asserted at 2x to absorb the
+    # randomness of the final residual
+    assert err_mean <= max(err1 / 2.0, 1e-7), (err_mean, err1)

@@ -479,3 +479,144 @@ def test_chunked_attention_matches_oracle(seed, bhk, S):
     got = ops.attention(q, k, v, causal=True, impl="chunked", bq=32, bk=32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
                                rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantized wire (ISSUE 7): per-column int8 scheme + error feedback
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 6),    # K panel rows
+    st.integers(1, 17),   # n columns
+    st.floats(1e-3, 1e3),  # magnitude spread across examples
+)
+@settings(**SET)
+def test_quantize_columns_round_trip_bound(seed, K, n, mag):
+    """``|dequantize(quantize(t)) - t| ≤ one per-column scale`` — the
+    quantum the fused dequant kernel's reconstruction can be off by.  The
+    bf16 scales must decode EXACTLY from the 4-bit exponents + group base
+    (what the receiving shard reconstructs from the packed wire), values
+    stay in ±127, exponents in 0..15."""
+    rng = jax.random.PRNGKey(seed)
+    t = jax.random.normal(rng, (K, n)) * mag
+    q, scale, e, gbase = ref.quantize_columns(t)
+    assert q.dtype == jnp.int8 and scale.dtype == jnp.bfloat16
+    qn = np.asarray(q, np.int32)
+    assert qn.min() >= -127 and qn.max() <= 127
+    en = np.asarray(e, np.int32)
+    assert en.min() >= 0 and en.max() <= 15
+    np.testing.assert_array_equal(
+        np.asarray(ref.decode_scale_exponents(e, gbase), np.float32),
+        np.asarray(scale, np.float32),
+    )
+    deq = np.asarray(ref.dequantize_columns(q, scale), np.float32)
+    err = np.abs(deq - np.asarray(t, np.float32))
+    bound = np.asarray(scale, np.float32)[None, :]
+    assert np.all(err <= bound + 1e-30), (float(err.max()), bound.max())
+
+
+@given(st.lists(st.integers(0, 15), min_size=2, max_size=32))
+@settings(**SET)
+def test_scale_exponent_pack_roundtrip(vals):
+    """Two-exponents-per-byte packing (the 0.5 B/column scale wire format)
+    is exact for every 4-bit value sequence."""
+    if len(vals) % 2:
+        vals = vals + [0]
+    e = jnp.asarray(vals, jnp.int8)
+    packed = ref.pack_scale_exponents(e)
+    assert packed.shape[0] == len(vals) // 2 and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_scale_exponents(packed)),
+        np.asarray(vals, np.int32),
+    )
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_error_feedback_telescopes(seed, R):
+    """Error feedback telescopes: round ``r`` quantizes ``t + ef_{r-1}``
+    and ships ``t + ef_{r-1} - ef_r``, so the SUM of R dequantized rounds
+    is ``R·t - ef_R`` — within one final-round scale of ``R·t`` per column.
+    Quantization error cannot accumulate across rounds, which is what the
+    engine's per-group ``_ef_state`` buys int8 training."""
+    rng = jax.random.PRNGKey(seed)
+    t = jax.random.normal(rng, (3, 11)) * 5.0
+    tn = np.asarray(t, np.float64)
+    ef = jnp.zeros_like(t)
+    acc = np.zeros_like(tn)
+    scale = None
+    for _ in range(R):
+        q, scale, e, gbase = ref.quantize_columns(t + ef)
+        deq = ref.dequantize_columns(q, scale)
+        ef = t + ef - deq
+        acc += np.asarray(deq, np.float64)
+    bound = np.asarray(scale, np.float64)[None, :] + 1e-4
+    assert np.all(np.abs(acc - R * tn) <= bound), (
+        float(np.max(np.abs(acc - R * tn))), float(bound.max())
+    )
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.lists(st.integers(1, 290), min_size=2, max_size=4),  # group widths
+    st.integers(1, 4),  # shard count
+)
+@settings(max_examples=20, deadline=None)
+def test_ragged_stream_plan_widths_invariants(seed, widths, n_shards):
+    """The ragged-transfer metadata ISSUE 7 added to ``StreamPlan``:
+    per-(pass, shard) live ``widths`` are tile-aligned (or capped at
+    ``m_chunk``), bound every live destination of that pass — live entries
+    are packed at the FRONT of the slice, which is exactly what lets
+    ``put_model_ragged`` ship only ``sel[d, :, :w]`` — sum per shard to the
+    memory model's ``_ragged_wire_cols`` wire term, and ``chunk_counts``
+    counts each shard's non-empty passes (a shard owning none of the
+    group's columns takes zero passes and zero wire)."""
+    from repro.fl import engine as ENG
+    from repro.fl import memory_model as MM
+    from repro.kernels.fedavg import AGG_TILE
+
+    d, out = 300, 3
+    rng = jax.random.PRNGKey(seed)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    plans = []
+    for gi, f in enumerate(widths):
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jnp.zeros((2, 4, d))
+        ys = jnp.zeros((2, 4))
+        rngs = jax.random.split(jax.random.fold_in(rng, gi), 2)
+        plans.append(ENG.GroupPlan(
+            lambda tr, fro, bn, xb, yb: (jnp.zeros(()), bn),
+            sub, {}, {}, xs, ys, rngs, jnp.ones((2,)), 0.1, 1, 4,
+        ))
+    layout = ENG.make_group_layout(plans, gtr, {})
+    if layout.identity:
+        return
+    cs = layout.column_shards(n_shards)
+    for gi in range(layout.n_groups):
+        sp = layout.stream_plan(gi, n_shards)
+        assert sp.widths.shape == (sp.n_chunks, n_shards)
+        assert len(sp.chunk_counts) == n_shards
+        assert sp.n_chunks == (max(sp.chunk_counts) if sp.chunk_counts
+                               else 0)
+        live = layout.group_active_cols(gi)
+        for d_ in range(n_shards):
+            lo = cs.offsets[d_]
+            L = int(np.sum((live >= lo) & (live < lo + cs.n_shard)))
+            assert sp.chunk_counts[d_] == (-(-L // sp.m_chunk) if L else 0)
+            assert sum(int(w) for w in sp.widths[:, d_]) == \
+                MM._ragged_wire_cols(L, sp.m_chunk, AGG_TILE)
+            for c in range(sp.n_chunks):
+                w = int(sp.widths[c, d_])
+                assert 0 <= w <= sp.m_chunk
+                assert w % AGG_TILE == 0 or w == sp.m_chunk
+                if c >= sp.chunk_counts[d_]:
+                    assert w == 0
+                valid = np.nonzero(
+                    np.asarray(sp.dst[c, d_]) < cs.n_shard
+                )[0]
+                assert valid.size <= w
+                if valid.size:
+                    # live entries packed at the front of the pass slice
+                    assert int(valid.max()) < w
