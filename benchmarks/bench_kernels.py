@@ -27,8 +27,11 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     ``K·(n/D + AGG_TILE)`` — i.e. the replicated panel divided by the
     ``model``-axis device count D plus tile padding (read from the actual
     panel sharding via ``engine.AGG_STATS``, so a silent re-replication
-    fails the gate) — and its round wall clock within x1.35 of the
-    replicated round.  On the 1-device CI runner D=1, so the byte gate
+    fails the gate) — and its round wall clock within ``AGG_GATE_TOL``
+    (x2: PR 8's jitted reference aggregation sped the replicated baseline
+    up ~25%, so the shard_map orchestration's fixed cost is a larger
+    fraction) of the replicated round.  On the 1-device CI runner D=1, so
+    the byte gate
     pins the padding overhead and the wall gate pins the shard_map
     orchestration overhead; on multi-device hardware the same gates verify
     the ÷D memory claim.
@@ -58,6 +61,14 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     (panel and stream, replicated and sharded) STRICTLY DECREASE at every
     freeze transition — frozen columns must leave the panel, the stream,
     and the kernel, not just be masked out of the update.
+  * NEW (PR 8): the ``faults`` record runs the gate cell's fused round
+    with an armed fault plan (one dropout + one norm-blowup corruption
+    quarantined by the in-kernel gate) and gates the faulted round's wall
+    clock within x1.15 of the clean round — the per-column quarantine
+    check must stay fused, not grow a second dispatch or host sync.  The
+    record also parks a straggler and asserts the engine staging-buffer
+    bytes, quarantine/dropout counters, and merged-row counts all equal
+    their ``memory_model`` twins (plan metadata, no extra sync).
 
 The per-shard kernel launches a sharded round fans out to are recorded in
 the JSON under ``dispatches`` (``fedavg_grouped_shards`` = D per logical
@@ -71,9 +82,12 @@ membership staging elements, per-device panel/stream bytes) or x3 (wall
 clocks: grouped-round per matrix cell, the sharded/replicated overhead
 ratio — noise-padded for cross-machine comparison) of the seed record,
 else the process exits non-zero; a gated metric that DISAPPEARS from the fresh
-record fails rather than silently skipping.  Regenerate the seed copy
-(``--smoke --json BENCH_kernels.json``) when a PR legitimately moves a
-gated metric.
+record fails rather than silently skipping.  When EVERY failure is a
+wall-clock gate, the compare re-measures the whole suite once and
+re-compares before failing (shared-runner noise); deterministic failures
+— bytes, elements, missing sections — never get a retry.  Regenerate the
+seed copy (``--smoke --json BENCH_kernels.json``) when a PR legitimately
+moves a gated metric.
 
 The freeze-decay section gates on SHAPE as well as magnitude: the fresh
 record's byte metrics must decrease at every freeze transition regardless
@@ -102,6 +116,14 @@ GATE_CELL = (4, 4)
 # rounds run identical local SGD, so the gate only needs to catch the
 # aggregation path regressing, not win every noisy CPU timing
 GATE_TOL = 1.35
+# sharded-vs-replicated wall gate: looser than GATE_TOL since PR 8 jitted
+# the replicated round's reference aggregation into one fused dispatch —
+# the round got ~25% faster, so the shard_map orchestration's FIXED cost
+# (stream slicing, per-shard scatters, pacing tokens) is now a larger
+# fraction of a smaller round on the 1-device CI runner.  A genuine
+# sharded-path regression (an extra sync, a re-replication) still lands
+# well beyond x2.
+AGG_GATE_TOL = 2.0
 
 
 def bench(ctx: dict, full: bool = False, record: dict = None):
@@ -147,6 +169,7 @@ def bench(ctx: dict, full: bool = False, record: dict = None):
         "agg_compare": _bench_agg_compare(smoke=False, sink=record),
         "freeze_decay": _bench_freeze_decay(smoke=False, sink=record),
         "transport": _bench_transport(smoke=False, sink=record),
+        "faults": _bench_faults(smoke=False, sink=record),
     }
 
 
@@ -436,7 +459,7 @@ def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
         )
         res.update(replicated_us=us_r, sharded_us=us_s,
                    overhead_sharded_vs_replicated=us_s / us_r)
-        if not smoke or us_s <= us_r * GATE_TOL:
+        if not smoke or us_s <= us_r * AGG_GATE_TOL:
             break  # retry once: shared-runner noise, not a regression
     C.emit("kernels/grouped_round_agg_replicated", us_r,
            f"per_dev_panel_bytes={bytes_r}")
@@ -444,10 +467,10 @@ def _bench_agg_compare(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
            f"n_shards={D} per_dev_panel_bytes={bytes_s} "
            f"overhead={us_s / us_r:.2f}x")
     if smoke:
-        assert us_s <= us_r * GATE_TOL, (
+        assert us_s <= us_r * AGG_GATE_TOL, (
             f"perf regression: column-sharded fused round ({us_s:.1f}us) "
             f"slower than the replicated fused round ({us_r:.1f}us) beyond "
-            f"x{GATE_TOL} at G={G}, K={k_total} on both attempts"
+            f"x{AGG_GATE_TOL} at G={G}, K={k_total} on both attempts"
         )
     return res
 
@@ -550,6 +573,109 @@ def _bench_transport(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
         f"ragged transfer saved nothing on the concentrated cohort "
         f"({ragged} vs {uniform})"
     )
+    return res
+
+
+# quarantine-overhead gate at the gate cell (ISSUE 8): a faulted round —
+# armed in-kernel quarantine gate, a dropped client, a poisoned client —
+# must stay within x1.15 of the clean round's wall clock (the fault layer
+# rides the SAME single dispatch; only the gate's compare/where and the
+# weight masking are extra work)
+FAULTS_GATE_TOL = 1.15
+
+
+def _bench_faults(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
+    """Fault-tolerance record (ISSUE 8) at the gate cell: wall clock of a
+    clean round vs a faulted round (one dropped + one norm-blowup-poisoned
+    client with the quarantine gate armed), gated at
+    ``FAULTS_GATE_TOL`` in smoke mode with one noise-absorbing retry, plus
+    the quarantine/staleness counters (verdict counts, staged/merged/
+    evicted rows, staging bytes — all ``AGG_STATS`` plan metadata, pinned
+    against the ``memory_model`` twins) so the CI artifact carries the
+    fault telemetry.  ``sink`` receives the result dict before any gate
+    can fire."""
+    from repro.fl import engine as ENG
+    from repro.fl import faults as FLT
+    from repro.fl import memory_model as MM
+
+    d = 128 if smoke else 1024
+    G, kpg = GATE_CELL
+    plans, gtr = _make_width_plans(d, G, kpg)
+    k_total = G * kpg
+    eng = ENG.make_engine("packed")
+    res = {"G": G, "k_total": k_total,
+           "n_local_devices": len(jax.devices())}
+    if sink is not None:
+        sink["faults"] = res
+
+    # straggler park + merge across two rounds: record the staleness
+    # counters and pin the staging bytes against the memory-model twin
+    verdicts = [FLT.OK] * k_total
+    verdicts[2] = FLT.ClientFault("straggler", delay=1)
+    eng.grouped_round(plans, gtr, {},
+                      faults=FLT.FaultPlan(verdicts=tuple(verdicts)))
+    st_park = dict(ENG.AGG_STATS)
+    widths = [int(e.vals.shape[0]) for e in eng._staging]
+    assert st_park["fault_staging_bytes"] == MM.fault_staging_bytes(widths), (
+        f"faults: measured staging bytes {st_park['fault_staging_bytes']} "
+        f"!= memory-model twin {MM.fault_staging_bytes(widths)}"
+    )
+    eng.grouped_round(plans, gtr, {}, faults=FLT.all_ok(k_total))
+    st_merge = dict(ENG.AGG_STATS)
+    res["straggler"] = {
+        "staged_rows": st_park["fault_staged_rows"],
+        "staging_bytes": st_park["fault_staging_bytes"],
+        "merged_rows": st_merge["fault_merged_rows"],
+        "evicted_rows": st_merge["fault_evicted_rows"],
+    }
+    assert res["straggler"]["merged_rows"] == 1
+    eng.reset_faults()
+
+    # the gated comparison: clean round vs dropped+poisoned round with the
+    # quarantine gate armed (finite norm bound) — same dispatch count
+    verdicts = [FLT.OK] * k_total
+    verdicts[1] = FLT.ClientFault("dropped")
+    verdicts[5] = FLT.ClientFault("corrupt", mode="norm_blowup")
+    fp = FLT.FaultPlan(verdicts=tuple(verdicts), norm_bound=1e6)
+    eng.grouped_round(plans, gtr, {})                 # warm clean compiles
+    eng.grouped_round(plans, gtr, {}, faults=fp)      # warm quarantined
+    st_f = dict(ENG.AGG_STATS)
+    fc = MM.fault_counts([v.kind for v in fp.verdicts])
+    assert st_f["fault_dropped"] == fc["dropped"] == 1
+    assert st_f["fault_corrupt"] == fc["corrupt"] == 1
+    assert st_f["quarantine_bound"] == 1e6
+    res["counters"] = {
+        "fault_ok": st_f["fault_ok"], "fault_dropped": st_f["fault_dropped"],
+        "fault_stragglers": st_f["fault_stragglers"],
+        "fault_corrupt": st_f["fault_corrupt"],
+        "quarantine_bound": st_f["quarantine_bound"],
+    }
+    ops.reset_dispatches()
+    eng.grouped_round(plans, gtr, {}, faults=fp)
+    assert ops.DISPATCHES["fedavg_grouped"] == 1, dict(ops.DISPATCHES)
+    ops.reset_dispatches()
+    for attempt in range(2):
+        us_c = C.time_call(
+            lambda: eng.grouped_round(plans, gtr, {}).loss, iters=iters
+        )
+        us_f = C.time_call(
+            lambda: eng.grouped_round(plans, gtr, {}, faults=fp).loss,
+            iters=iters,
+        )
+        res.update(clean_us=us_c, faulted_us=us_f,
+                   overhead_faulted_vs_clean=us_f / us_c)
+        if not smoke or us_f <= us_c * FAULTS_GATE_TOL:
+            break  # retry once: shared-runner noise, not a regression
+    C.emit("kernels/faulted_round", us_f,
+           f"clean_us={us_c:.1f} overhead={us_f / us_c:.2f}x "
+           f"staging_bytes={res['straggler']['staging_bytes']}")
+    if smoke:
+        assert us_f <= us_c * FAULTS_GATE_TOL, (
+            f"perf regression: the quarantined round ({us_f:.1f}us) costs "
+            f"more than x{FAULTS_GATE_TOL} the clean round ({us_c:.1f}us) "
+            f"at G={G}, K={k_total} on both attempts — the fault gate must "
+            f"stay fused in the single dispatch"
+        )
     return res
 
 
@@ -749,6 +875,11 @@ COMPARE_DECAY_KEYS = ("per_device_panel_bytes_replicated",
 # they gate tight at x1.5 per wire dtype; the per-dtype round wall clock
 # gates at the wall factor like every other timing
 COMPARE_TRANSPORT_KEYS = (("wire_bytes", False), ("round_us", True))
+# faults gate (ISSUE 8): the quarantine overhead ratio is common-mode like
+# the agg ratio (both sides timed seconds apart in one run), so it gates at
+# the wall factor; the staging bytes are deterministic plan metadata
+COMPARE_FAULTS_KEYS = (("overhead_faulted_vs_clean", True),
+                       ("faulted_us", True))
 
 
 def compare_trajectories(new: dict, seed: dict,
@@ -764,7 +895,11 @@ def compare_trajectories(new: dict, seed: dict,
     fresh record FAILS — a refactor that renames a key or drops a record
     section must not silently disable the gate.  Only same-backend records
     are comparable — wall clocks from a TPU seed mean nothing on a CPU
-    runner."""
+    runner.
+
+    Each failure is a ``(message, is_wall_clock)`` pair: ``main`` grants
+    timing-only failures ONE automatic re-measure (shared-runner noise),
+    while any deterministic (byte/element) failure fails immediately."""
     fails: list = []
     checked = [0]
 
@@ -772,22 +907,23 @@ def compare_trajectories(new: dict, seed: dict,
         if seed_v is None or seed_v <= 0:
             return  # not in the seed (older schema): legitimately skippable
         if new_v is None:
-            fails.append(
+            fails.append((
                 f"{name}: missing from the fresh record (seed has "
-                f"{seed_v:.1f}) — gated metrics must not silently disappear"
-            )
+                f"{seed_v:.1f}) — gated metrics must not silently disappear",
+                False,  # a schema break, not noise: no re-measure
+            ))
             return
         checked[0] += 1
         f = wall_factor if wall else factor
         if new_v > seed_v * f:
             fails.append(
-                f"{name}: {new_v:.1f} > x{f} seed {seed_v:.1f}"
+                (f"{name}: {new_v:.1f} > x{f} seed {seed_v:.1f}", wall)
             )
 
     if new.get("backend") != seed.get("backend"):
-        return ([f"backend mismatch: new={new.get('backend')!r} "
-                 f"seed={seed.get('backend')!r} — regenerate the seed copy "
-                 f"on the comparison backend"], 0)
+        return ([(f"backend mismatch: new={new.get('backend')!r} "
+                  f"seed={seed.get('backend')!r} — regenerate the seed copy "
+                  f"on the comparison backend", False)], 0)
     # iterate the SEED's cells so a shrunken fresh matrix fails instead of
     # silently skipping the dropped cells
     new_cells = {(c["G"], c["k_per_group"]): c
@@ -799,7 +935,9 @@ def compare_trajectories(new: dict, seed: dict,
         c = new_cells.get(key)
         tag = f"grouped_rounds[G={key[0]},kpg={key[1]}]"
         if c is None:
-            fails.append(f"{tag}: cell missing from the fresh record")
+            fails.append(
+                (f"{tag}: cell missing from the fresh record", False)
+            )
             continue
         for mkey, wall in COMPARE_CELL_KEYS:
             new_v = c.get(mkey)
@@ -825,7 +963,9 @@ def compare_trajectories(new: dict, seed: dict,
     # like any other gated metric.
     nf, sf = new.get("freeze_decay", {}), seed.get("freeze_decay", {})
     if sf and not nf:
-        fails.append("freeze_decay: section missing from the fresh record")
+        fails.append(
+            ("freeze_decay: section missing from the fresh record", False)
+        )
     pts = nf.get("points", [])
     for prev_p, p in zip(pts, pts[1:]):
         if p.get("n_frozen", 0) <= prev_p.get("n_frozen", 0):
@@ -833,11 +973,12 @@ def compare_trajectories(new: dict, seed: dict,
         for mkey in COMPARE_DECAY_KEYS:
             checked[0] += 1
             if not p.get(mkey, 0) < prev_p.get(mkey, float("inf")):
-                fails.append(
+                fails.append((
                     f"freeze_decay.{mkey}: did not decrease at "
                     f"n_frozen={p.get('n_frozen')} "
-                    f"({prev_p.get(mkey)} -> {p.get(mkey)})"
-                )
+                    f"({prev_p.get(mkey)} -> {p.get(mkey)})",
+                    False,
+                ))
     seed_pts = {p.get("n_frozen"): p for p in sf.get("points", [])}
     for p in pts:
         s = seed_pts.get(p.get("n_frozen"))
@@ -852,7 +993,9 @@ def compare_trajectories(new: dict, seed: dict,
     # so does a wire-dtype entry that disappears
     ntr, str_ = new.get("transport", {}), seed.get("transport", {})
     if str_ and not ntr:
-        fails.append("transport: section missing from the fresh record")
+        fails.append(
+            ("transport: section missing from the fresh record", False)
+        )
     for sd, s_ent in str_.get("dtypes", {}).items():
         n_ent = ntr.get("dtypes", {}).get(sd, {})
         for mkey, wall in COMPARE_TRANSPORT_KEYS:
@@ -861,6 +1004,22 @@ def compare_trajectories(new: dict, seed: dict,
     sc, nc = str_.get("concentrated", {}), ntr.get("concentrated", {})
     check("transport.concentrated.wire_bytes_ragged",
           nc.get("wire_bytes_ragged"), sc.get("wire_bytes_ragged"), False)
+    # faults gate (ISSUE 8): the quarantine-overhead ratio and faulted-round
+    # wall clock gate at x3 (timings), the staging bytes of the parked
+    # straggler deterministic at x1.5; a faults section present in the seed
+    # and missing from the fresh record fails like any other gated metric —
+    # dropping the fault-tolerance bench must not silently disable the gate
+    nfa, sfa = new.get("faults", {}), seed.get("faults", {})
+    if sfa and not nfa:
+        fails.append(
+            ("faults: section missing from the fresh record", False)
+        )
+    for mkey, wall in COMPARE_FAULTS_KEYS:
+        check(f"faults.{mkey}", nfa.get(mkey), sfa.get(mkey), wall)
+    sst = sfa.get("straggler", {})
+    nst = nfa.get("straggler", {})
+    check("faults.straggler.staging_bytes", nst.get("staging_bytes"),
+          sst.get("staging_bytes"), False)
     return fails, checked[0]
 
 
@@ -894,16 +1053,20 @@ def main() -> None:
         "smoke": bool(args.smoke),
         "suite": "bench_kernels",
     }
-    try:
+    def run_suite(sink):
         if args.smoke:
-            _bench_kernel_compare(smoke=True, sink=record)
+            _bench_kernel_compare(smoke=True, sink=sink)
             _bench_grouped_round(smoke=True, iters=5, matrix=True,
-                                 sink=record)
-            _bench_agg_compare(smoke=True, sink=record)
-            _bench_freeze_decay(smoke=True, sink=record)
-            _bench_transport(smoke=True, sink=record)
+                                 sink=sink)
+            _bench_agg_compare(smoke=True, sink=sink)
+            _bench_freeze_decay(smoke=True, sink=sink)
+            _bench_transport(smoke=True, sink=sink)
+            _bench_faults(smoke=True, sink=sink)
         else:
-            bench({}, full=args.full, record=record)
+            bench({}, full=args.full, record=sink)
+
+    try:
+        run_suite(record)
     finally:
         # write whatever was recorded even when a smoke gate fails — the
         # failing run's numbers are exactly the ones worth inspecting
@@ -916,10 +1079,23 @@ def main() -> None:
         with open(args.compare) as f:
             seed = json.load(f)
         fails, n_checked = compare_trajectories(record, seed)
+        if fails and all(wall for _, wall in fails):
+            # every failure is a wall-clock gate: re-measure ONCE before
+            # failing — shared CI runners are noisy and a single slow
+            # sample should not block a merge.  Deterministic failures
+            # (bytes, elements, missing sections) never get a retry.
+            print(f"BENCH COMPARE: {len(fails)} wall-clock regression(s) "
+                  "vs seed — re-measuring once before failing")
+            for line, _ in fails:
+                print("  " + line)
+            retry_record = {k: record[k] for k in
+                           ("schema", "backend", "smoke", "suite")}
+            run_suite(retry_record)
+            fails, n_checked = compare_trajectories(retry_record, seed)
         if fails:
             print(f"BENCH COMPARE: {len(fails)} regression(s) vs "
                   f"{args.compare}")
-            for line in fails:
+            for line, _ in fails:
                 print("  " + line)
             raise SystemExit(1)
         print(f"bench compare vs {args.compare}: green "

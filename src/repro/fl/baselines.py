@@ -38,6 +38,7 @@ from repro.core import effective_movement as EM
 from repro.core import progressive as P
 from repro.fl import data as DATA
 from repro.fl import engine as ENG
+from repro.fl import faults as FLT
 from repro.fl import memory_model as MM
 from repro.fl.server import FLConfig
 from repro.models import cnn as C
@@ -158,7 +159,8 @@ def run_exclusivefl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, round
 
 
 def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
-                 *, oracle: bool = False, freeze_em: "EM.EMConfig" = None):
+                 *, oracle: bool = False, freeze_em: "EM.EMConfig" = None,
+                 fault_cfg: "FLT.FaultConfig" = None):
     """Static-width HeteroFL.  Every round builds one :class:`GroupPlan` per
     width level and hands the whole ragged cohort to ``grouped_round`` — one
     fused group-compressed aggregation dispatch regardless of how many width
@@ -170,7 +172,11 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
     aggregated global params; blocks whose effective movement converges
     leave the panel, the stream, and the kernel for the rest of the run
     (``grouped_round(frozen=...)``) — clients still train them locally, the
-    server just stops aggregating them, so per-round bytes decay."""
+    server just stops aggregating them, so per-round bytes decay.
+
+    ``fault_cfg`` (optional) injects seeded per-round faults — dropouts,
+    stragglers, poisoned updates — via ``grouped_round(faults=...)``; see
+    :mod:`repro.fl.faults`."""
     levels = np.array([
         MM.width_ratio_for_budget(cfg, b, RATIOS[:-1]) or RATIOS[-1]
         for b in budgets
@@ -191,7 +197,7 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
             for i in range(len(params["blocks"]))
         })
     accs = []
-    for _ in range(rounds):
+    for rnd in range(rounds):
         sel = R.rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
         plans = []
         for r in sorted(set(levels[sel].tolist())):
@@ -205,7 +211,10 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
                 xs, ys, jax.random.split(R.next_key(), len(group)), w,
                 fl.lr, fl.local_steps, fl.batch_size,
             ))
-        res = R.engine.grouped_round(plans, params, bn, impl=impl, frozen=fro)
+        fplan = (FLT.sample_fault_plan(fault_cfg, len(sel), rnd + 1)
+                 if fault_cfg is not None else None)
+        res = R.engine.grouped_round(plans, params, bn, impl=impl, frozen=fro,
+                                     faults=fplan)
         params, bn = res.trainable, res.bn_state
         if tracker is not None:
             flat = (res.packed if res.packed is not None
@@ -264,7 +273,8 @@ def _depth_loss(cfg: C.CNNConfig, depth: int, ratio: float):
 
 
 def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
-                *, oracle: bool = False, freeze_em: "EM.EMConfig" = None):
+                *, oracle: bool = False, freeze_em: "EM.EMConfig" = None,
+                fault_cfg: "FLT.FaultConfig" = None):
     """Depth-scaled DepthFL.  Each depth level d becomes a :class:`GroupPlan`
     whose trainable is the {blocks[:d], heads[:d]} prefix of the global tree;
     ``grouped_round`` aggregates every depth group (plus bn) in one fused
@@ -276,7 +286,11 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
 
     ``freeze_em`` (optional) enables freezing-aware layouts per depth block:
     a converged block and its classifier head (plus its bn columns) leave
-    the panel/stream/kernel via ``grouped_round(frozen=...)``."""
+    the panel/stream/kernel via ``grouped_round(frozen=...)``.
+
+    ``fault_cfg`` (optional) injects seeded per-round faults — dropouts,
+    stragglers, poisoned updates — via ``grouped_round(faults=...)``; see
+    :mod:`repro.fl.faults`."""
     depths = np.array([MM.depth_for_budget(cfg, b) for b in budgets])
     pr = float(np.mean(depths > 0))
     R = _Runner(cfg, fl, xtr, ytr, xte, yte, parts, budgets)
@@ -298,7 +312,7 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
             for name, pref in prefixes.items()
         })
     accs = []
-    for _ in range(rounds):
+    for rnd in range(rounds):
         cand = np.where(depths > 0)[0]
         if len(cand) == 0:
             break
@@ -322,8 +336,10 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
                 fl.lr, fl.local_steps, fl.batch_size,
             ))
         global_tr = {"blocks": list(params["blocks"]), "heads": list(heads)}
+        fplan = (FLT.sample_fault_plan(fault_cfg, len(sel), rnd + 1)
+                 if fault_cfg is not None else None)
         res = R.engine.grouped_round(plans, global_tr, bn, impl=impl,
-                                     frozen=fro)
+                                     frozen=fro, faults=fplan)
         params = dict(params, blocks=res.trainable["blocks"])
         heads = list(res.trainable["heads"])
         bn = res.bn_state

@@ -236,6 +236,48 @@ global ids stay valid across re-layouts.  The frozen-column lifecycle:
    replicated ≡ sharded bit-equality) hold unchanged across the
    transition (tests/test_contract.py's frozen conformance axis).
 
+Fault-tolerant rounds (the ``faults`` knob)
+-------------------------------------------
+``grouped_round(..., faults=...)`` takes a seeded, deterministic
+:class:`fl.faults.FaultPlan` — per-client verdicts ``ok | dropped |
+straggler(delay) | corrupt(nan|inf|norm_blowup)`` in concatenated group
+order — and degrades gracefully instead of poisoning the model:
+
+* ``dropped`` clients become ZERO-WEIGHT panel rows: no re-trace, no new
+  :class:`GroupLayout` epoch; columns covered by nobody fall back to the
+  kernels' existing zero-denominator→``prev`` passthrough.
+* ``straggler`` updates park in a bounded engine staging buffer (the clean
+  f32 row + STABLE global column ids, captured before wire quantization
+  and frozen narrowing) and merge into a later faults-armed round as
+  associative ``(snum, sden)`` side inputs to the fused kernels at the
+  staleness-discounted weight ``w·beta**s`` — num/den pairs are
+  associative, so the merge is a per-column addition before the ratio:
+  the direct stepping stone to a FedBuff-style async buffered server.
+  The buffer holds at most ``max_staged`` rows (oldest evicted first) and
+  evicts entries parked against a different column space.
+* ``corrupt`` rows are injected AFTER local SGD (``fl/faults.py::
+  inject_panel`` — the update that would hit the wire) and ride the
+  normal stream into the one dispatch, where the fused QUARANTINE gate
+  (per-entry finite check + ``|update| > norm_bound``) zeroes the bad
+  entries' weight inside the kernel pass — no extra host sync, no second
+  dispatch.
+
+The amended round contracts: one logical ``fedavg_grouped`` dispatch and
+one ``block_until_ready`` still hold under injection (the gate and the
+merge are extra OPERANDS of the same ``pallas_call``, selected by a cached
+kernel-body factory — a clean round still traces the untouched clean
+bodies); a fault-free plan at the default ``norm_bound=inf`` is BIT-EQUAL
+to ``faults=None`` (the gate degenerates to an all-false mask and
+``den - 0.0``); and the serial oracle's semantics of record is corrupt ≡
+dropped ≡ zero weight, which the quarantined fused round matches because
+a fully-poisoned row trips the gate on every column.  ``AGG_STATS`` gains
+the fault fields (``faults_armed``, ``quarantine_bound``, ``fault_ok`` /
+``fault_dropped`` / ``fault_stragglers`` / ``fault_corrupt``,
+``fault_merged_rows``, ``fault_evicted_rows``, ``fault_staged_rows``,
+``fault_staging_bytes``) — all from plan + shape metadata, never a device
+sync — twinned exactly by ``fl/memory_model.py::fault_counts`` /
+``fault_staging_bytes``, and the staging bytes join the peak-memory model.
+
 The serial per-group oracle (``impl="serial"``, default under the ``vmap``
 mode) runs each group through ``client.cohort_round`` and accumulates the
 same num/den host-side; equivalence is asserted in tests/test_engine.py.
@@ -263,6 +305,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.fl import client as CL
+from repro.fl import faults as FLT
 from repro.kernels import ops
 from repro.kernels import ref as _kref
 from repro.kernels.fedavg import AGG_TILE
@@ -1124,7 +1167,8 @@ def _group_submeshes(mesh: Mesh, ks: Tuple[int, ...]):
 
 
 def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
-                      global_bn, frozen=None) -> GroupLayout:
+                      global_bn, frozen=None,
+                      force_index: bool = False) -> GroupLayout:
     """Cached :class:`GroupLayout` for ``plans`` against the global trees,
     optionally compressed by a frozen-column epoch (``frozen``: a
     :class:`FrozenColumns`, or a raw ``[n]`` bool mask normalized through
@@ -1137,7 +1181,15 @@ def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
     buffers, so each freeze event releases the wider panel's
     gmask/stream/index memory instead of waiting for LRU pressure.
     (Un-freezing isn't a thing mid-run; an out-of-order epoch just rebuilds
-    its layout from host metadata.)"""
+    its layout from host metadata.)
+
+    ``force_index=True`` disables the single-group identity fast path so
+    the layout always carries the full scatter-index machinery — an ARMED
+    fault plan needs the general fused/serial paths (per-row parking and
+    injection, quarantine operands) even for a ProFL identity cohort.  The
+    flag only changes the result when the layout WOULD be identity, and
+    the computed ``identity`` bit joins the cache key, so forced and fast
+    layouts never collide."""
     gspec_tr = make_pack_spec(global_trainable)
     gspec_bn = make_pack_spec(global_bn)
     group_specs = tuple(
@@ -1152,8 +1204,14 @@ def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
         raise ValueError(
             f"frozen mask covers {frozen.n} columns, layout has {n}"
         )
+    # identity (every unfrozen ProFL round): group specs ARE the global
+    # specs, so the scatter is arange(n) — skip building the O(n) index
+    # arrays entirely.  A frozen epoch always needs the index machinery,
+    # and an armed fault plan forces it (force_index).
+    identity = (not force_index and frozen is None and len(plans) == 1
+                and group_specs[0] == (gspec_tr, gspec_bn))
     skey = (gspec_tr, gspec_bn, group_specs, ks)
-    key = skey + (frozen,)
+    key = skey + (frozen, identity)
     layout = _LAYOUT_CACHE.get(key)
     if layout is not None:
         return layout
@@ -1165,11 +1223,6 @@ def make_group_layout(plans: Sequence[GroupPlan], global_trainable,
             _LAYOUT_CACHE.get(stale_key).drop_device_buffers()
             del _LAYOUT_CACHE[stale_key]
 
-    # identity (every unfrozen ProFL round): group specs ARE the global
-    # specs, so the scatter is arange(n) — skip building the O(n) index
-    # arrays entirely.  A frozen epoch always needs the index machinery.
-    identity = (frozen is None and len(plans) == 1
-                and group_specs[0] == (gspec_tr, gspec_bn))
     n_active = n if frozen is None else frozen.n_active
     if frozen is None:
         col_map = None
@@ -1368,12 +1421,86 @@ def _gather_exponents(e, src):
     return jnp.take(e, src, axis=0, mode="clip")
 
 
+# ===========================================================================
+# Fault tolerance: straggler staging + merge (fl/faults.py has the plans)
+# ===========================================================================
+
+
+class StagedPanel(NamedTuple):
+    """One straggler client's parked update (ISSUE 8): the client's finished
+    f32 panel row — captured BEFORE wire quantization and frozen-column
+    narrowing, so a later merge is exact regardless of that round's
+    transport — plus the STABLE full-space column ids it covers, its raw
+    weight, and its timing.  ``born`` is the fault round that parked it,
+    ``due`` the earliest fault round it may merge; the merge weight is
+    ``weight·beta**(merge_round - born)`` (staleness discount)."""
+
+    vals: jax.Array  # [n_g] f32 update row (device)
+    idx: np.ndarray  # [n_g] int64 STABLE global column ids (host)
+    weight: float  # raw aggregation weight at parking
+    born: int  # fault round the row was parked
+    due: int  # earliest fault round it may merge (born + delay)
+    n: int  # full column-space size at parking; a merge requires a match
+
+
+def _collect_due_staged(staging: list, fault_round: int, n: int):
+    """Partition the engine's staging buffer in place: entries due this
+    fault round come back for merging; entries parked against a DIFFERENT
+    full column space (the global packed space changed under them — their
+    ids no longer apply) are evicted; the rest stay parked.  Returns
+    ``(due_entries, evicted_count)``."""
+    due, evicted, still = [], 0, []
+    for ent in staging:
+        if ent.n != n:
+            evicted += 1
+        elif ent.due <= fault_round:
+            due.append(ent)
+        else:
+            still.append(ent)
+    staging[:] = still
+    return due, evicted
+
+
+def _staged_side(due, beta: float, fault_round: int, n: int):
+    """Fold due straggler rows into the associative full-space ``(snum,
+    sden)`` side inputs the fused kernels add before the ratio, each row at
+    the staleness-discounted weight ``w·beta**s`` (``s`` rounds late).
+    Scatter-adds into two ``[n]`` f32 vectors — async device work, no sync.
+    The SAME helper feeds the serial oracle's host num/den, so the two
+    impls share one staleness semantics by construction."""
+    snum = jnp.zeros((n,), jnp.float32)
+    sden = jnp.zeros((n,), jnp.float32)
+    dev0 = jax.devices()[0]
+    for ent in due:
+        disc = jnp.float32(ent.weight * (beta ** (fault_round - ent.born)))
+        ixd = jnp.asarray(ent.idx)
+        vals = jax.device_put(ent.vals, dev0)
+        snum = snum.at[ixd].add(disc * vals.astype(jnp.float32))
+        sden = sden.at[ixd].add(disc)
+    return snum, sden
+
+
+def _masked_group_w(gw, gverdicts, zero_kinds) -> jax.Array:
+    """Zero the weights of clients whose verdict is in ``zero_kinds``;
+    groups with no such verdict pass through UNTOUCHED (bit-equality of the
+    fault-free plan never rides on a ``*1.0``)."""
+    if not any(v.kind in zero_kinds for v in gverdicts):
+        return gw
+    keep = jnp.asarray(
+        [0.0 if v.kind in zero_kinds else 1.0 for v in gverdicts],
+        jnp.float32,
+    )
+    return gw * keep
+
+
 def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                    mesh: Optional[Mesh], *, kernel: str = "grouped",
                    agg: str = "replicated",
                    agg_mesh: Optional[Mesh] = None,
                    stream_dtype: str = "f32", inflight: int = 2,
-                   ef_state: Optional[dict] = None):
+                   ef_state: Optional[dict] = None,
+                   faults: Optional[FLT.FaultPlan] = None,
+                   staging: Optional[list] = None, fault_round: int = 0):
     """Pipelined fused path: EVERY group's local-SGD dispatch launches
     without host blocking (jax async dispatch), each finished [K_g, n_g]
     panel streams into the shared panel via jitted donated-buffer scatters,
@@ -1402,13 +1529,25 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     engine-held per-group error-feedback residuals for ``"int8"`` (keyed
     ``(gi, panel shape)`` so a freeze epoch restarts the residual with the
     panel it applies to).
+
+    ``faults``/``staging``/``fault_round`` arm the fault-tolerance layer
+    (fl/faults.py; module docstring "Fault-tolerant rounds"): dropped and
+    straggler clients become zero-weight panel rows, corrupt rows are
+    injected after local SGD and quarantined INSIDE the one aggregation
+    dispatch (``bound=`` on the grouped kernels), straggler rows park in
+    ``staging`` (the engine-owned bounded buffer) and due entries merge as
+    associative ``side=(snum, sden)`` inputs at ``w·beta**s``.  The round
+    still issues one logical dispatch and one ``block_until_ready``.
     """
     if layout.identity:
         # degenerate single-group round (every ProFL round): the mask is all
         # ones, so skip the scatter/mask machinery and run the one-jit packed
         # (or sharded) round — still exactly one aggregation dispatch.  The
         # agg knob is a no-op here: the identity panel has no group
-        # structure to column-shard.
+        # structure to column-shard.  grouped_round only routes an ARMED
+        # fault plan (actual faults, staged rows, or a finite norm_bound)
+        # to a full-index layout, so faults here is fault-free and the
+        # fast path is bit-equal by construction.
         p = plans[0]
         kw = dict(lr=p.lr, local_steps=p.local_steps, batch_size=p.batch_size)
         if mesh is not None:
@@ -1461,6 +1600,18 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
             scales_panel = jnp.zeros((layout.n_groups, layout.n_active),
                                      jnp.bfloat16)
     group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
+    fault_groups = None
+    if faults is not None:
+        fault_groups = faults.for_cohort(layout.ks)
+        # dropped + straggler clients leave the round as ZERO-WEIGHT panel
+        # rows — no re-trace, no new layout epoch; a group zeroed entirely
+        # falls back to the kernels' zero-denominator -> prev passthrough.
+        # (Corrupt rows KEEP their weight: the in-kernel quarantine gate
+        # zeroes them per column inside the dispatch.)
+        group_w = [
+            _masked_group_w(gw, gv, ("dropped", "straggler"))
+            for gw, gv in zip(group_w, fault_groups)
+        ]
     losses = []
     stream_elems = 0  # max per-device footprint of any streamed group buffer
     stream_chunks = 0
@@ -1492,6 +1643,25 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
                 plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
                 plan.xs, plan.ys, plan.rngs, **kw,
             )
+        if fault_groups is not None:
+            for r, v in enumerate(fault_groups[gi]):
+                if v.kind == "straggler":
+                    # park the CLEAN f32 row, before any wire quantization
+                    # or frozen narrowing, with its STABLE global column
+                    # ids — it merges ``delay`` fault rounds later at
+                    # weight w·beta**s (async row gather, no sync)
+                    staging.append(StagedPanel(
+                        vals=gpanel[r].astype(jnp.float32),
+                        idx=layout.idx[gi],
+                        weight=float(plan.weights[r]),
+                        born=fault_round,
+                        due=fault_round + v.delay,
+                        n=layout.n,
+                    ))
+                elif v.kind == "corrupt":
+                    # the poisoned row RIDES the normal stream into the one
+                    # dispatch; the fused quarantine gate zeroes it there
+                    gpanel = FLT.inject_panel(gpanel, r, v)
         # wire-dtype conversion at the SOURCE, on the FULL [K_g, n_g]
         # panel — before any frozen-column narrowing, so the int8
         # error-feedback residual keeps one stable shape per group
@@ -1600,6 +1770,32 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     # compressed-space prev for the kernel: frozen columns never reach it
     prev_act = (prev if layout.frozen is None
                 else jnp.take(prev, layout.active_idx_dev))
+    # fault handling, part 2: quarantine arming + straggler merge.  The gate
+    # and the side inputs ride the SAME dispatch below — no extra launch.
+    bound = side = None
+    merged_rows = evicted_rows = 0
+    if faults is not None:
+        if kernel == "grouped":
+            bound = faults.norm_bound
+        due, evicted_rows = _collect_due_staged(staging, fault_round,
+                                                layout.n)
+        # bounded buffer: whatever stays parked past this round is capped at
+        # max_staged rows, oldest evicted first (the memory-model twin
+        # prices exactly this bound)
+        while len(staging) > faults.max_staged:
+            staging.pop(0)
+            evicted_rows += 1
+        merged_rows = len(due)
+        if due and layout.n_active > 0:
+            snum, sden = _staged_side(due, faults.beta, fault_round,
+                                      layout.n)
+            if layout.frozen is not None:
+                # frozen columns never reach the kernel: narrow the side
+                # inputs to the live columns like every other operand (the
+                # frozen expand below restores prev for the rest)
+                snum = jnp.take(snum, layout.active_idx_dev)
+                sden = jnp.take(sden, layout.active_idx_dev)
+            side = (snum, sden)
     panel_dev_elems = math.prod(panel.sharding.shard_shape(panel.shape))
     AGG_STATS.clear()
     AGG_STATS.update(
@@ -1635,6 +1831,26 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
         wire_bytes=wire_bytes,
         wire_bytes_uniform=wire_bytes_uniform,
     )
+    # fault telemetry (module docstring, "Fault-tolerant rounds"): verdict
+    # counts and staging occupancy from PLAN METADATA + shape metadata only
+    # — never a device sync.  fl/memory_model.py::fault_counts /
+    # fault_staging_bytes twin these fields exactly.
+    fc = (faults.counts() if faults is not None
+          else {k: 0 for k in FLT.KINDS})
+    AGG_STATS.update(
+        faults_armed=faults is not None,
+        quarantine_bound=(float(faults.norm_bound) if faults is not None
+                          else None),
+        fault_ok=fc["ok"], fault_dropped=fc["dropped"],
+        fault_stragglers=fc["straggler"], fault_corrupt=fc["corrupt"],
+        fault_merged_rows=merged_rows,
+        fault_evicted_rows=evicted_rows,
+        fault_staged_rows=len(staging) if staging is not None else 0,
+        fault_staging_bytes=(
+            sum(4 * int(e.vals.shape[0]) for e in staging)
+            if staging is not None else 0
+        ),
+    )
     if layout.n_active == 0:
         # fully frozen layout: nothing left to aggregate — the round's
         # output is prev verbatim (local SGD still ran for the loss)
@@ -1643,6 +1859,14 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
         pad = cs.n_padded - layout.n_active
         prev_p = jnp.pad(prev_act, (0, pad)) if pad else prev_act
         prev_p = jax.device_put(prev_p, NamedSharding(agg_mesh, P("model")))
+        if side is not None:
+            # the merge side inputs are per-column, so they column-shard
+            # exactly like prev: pad to the tile-aligned width and land
+            # each shard's slice on its owner (async device_put)
+            sh_m = NamedSharding(agg_mesh, P("model"))
+            sn = jnp.pad(side[0], (0, pad)) if pad else side[0]
+            sd = jnp.pad(side[1], (0, pad)) if pad else side[1]
+            side = (jax.device_put(sn, sh_m), jax.device_put(sd, sh_m))
         if kernel != "grouped":
             lmask = jnp.pad(layout.legacy_mask, ((0, 0), (0, pad)))
             lmask = jax.device_put(
@@ -1656,12 +1880,14 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
             flat = ops.fedavg_grouped_dequant_sharded(
                 panel, w, layout.gmask_sharded(agg_mesh), wsum,
                 layout.gsel, scales_panel, prev_p, mesh=agg_mesh,
+                bound=bound, side=side,
             )
         else:
             flat = ops.fedavg_grouped_sharded(
                 panel, w, layout.gmask_sharded(agg_mesh), wsum, prev_p,
                 mesh=agg_mesh,
                 out_dtype="float32" if stream_dtype == "bf16" else None,
+                bound=bound, side=side,
             )
         # the round OUTPUT is the [n_active] aggregate, not the panel:
         # gather it to the default device (async) so the next round's
@@ -1673,12 +1899,13 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     elif quant:
         flat = ops.fedavg_grouped_dequant(
             panel, w, layout.gmask, wsum, layout.gsel, scales_panel,
-            prev_act,
+            prev_act, bound=bound, side=side,
         )
     else:
         flat = ops.fedavg_grouped(
             panel, w, layout.gmask, wsum, prev_act,
             out_dtype="float32" if stream_dtype == "bf16" else None,
+            bound=bound, side=side,
         )
     if layout.frozen is not None and layout.n_active > 0:
         # expand back to the stable full coordinate space: frozen columns
@@ -1693,12 +1920,23 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     return GroupedResult(new_tr, new_bn, loss, layout.gspec_tr.pack(new_tr))
 
 
-def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout):
+def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout,
+                    faults: Optional[FLT.FaultPlan] = None,
+                    staging: Optional[list] = None, fault_round: int = 0):
     """Serial per-group oracle: each group through ``client.cohort_round``
     (vmap + einsum tree-map), masked num/den accumulated host-side.  This is
-    the semantics of record that the fused path is tested against."""
+    the semantics of record that the fused path is tested against.
+
+    Fault semantics of record: a dropped, straggler, OR corrupt client is a
+    zero-weight client of its group's ``cohort_round`` — corrupt equals
+    dropped at the oracle level, because quarantining a whole poisoned row
+    is exactly "aggregate without that client".  A straggler's update is
+    additionally computed by a single-client ``cohort_round``, parked in
+    ``staging``, and merged into a later round's num/den via the SAME
+    :func:`_staged_side` helper the fused path uses."""
     if layout.identity:
         # degenerate single-group round == the plain oracle cohort round
+        # (grouped_round routes armed fault plans to a full-index layout)
         p = plans[0]
         tr, bn, loss = CL.cohort_round(
             p.loss_fn, p.trainable, p.frozen, p.bn_state, p.xs, p.ys, p.rngs,
@@ -1706,21 +1944,51 @@ def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout):
             batch_size=p.batch_size,
         )
         return GroupedResult(tr, bn, loss, None)
+    fault_groups = (faults.for_cohort(layout.ks)
+                    if faults is not None else None)
     num = jnp.zeros((layout.n,), jnp.float32)
     den = jnp.zeros((layout.n,), jnp.float32)
     losses_w = jnp.zeros((), jnp.float32)
     w_total = jnp.zeros((), jnp.float32)
-    for plan, ix, (spec_tr_g, spec_bn_g) in zip(
+    for gi, (plan, ix, (spec_tr_g, spec_bn_g)) in enumerate(zip(
         plans, layout.idx, layout.group_specs
-    ):
-        wsum = float(jnp.sum(plan.weights))
+    )):
+        weights = jnp.asarray(plan.weights, jnp.float32).reshape(-1)
+        if fault_groups is not None:
+            gv = fault_groups[gi]
+            weights = _masked_group_w(
+                weights, gv, ("dropped", "straggler", "corrupt")
+            )
+            for r, v in enumerate(gv):
+                if v.kind != "straggler":
+                    continue
+                # the straggler's own update: a single-client cohort round
+                # over its slice, packed to the group's flat row
+                tr_1, bn_1, _ = CL.cohort_round(
+                    plan.loss_fn, plan.trainable, plan.frozen,
+                    plan.bn_state, plan.xs[r : r + 1], plan.ys[r : r + 1],
+                    plan.rngs[r : r + 1], plan.weights[r : r + 1],
+                    lr=plan.lr, local_steps=plan.local_steps,
+                    batch_size=plan.batch_size,
+                )
+                staging.append(StagedPanel(
+                    vals=jnp.concatenate(
+                        [spec_tr_g.pack(tr_1), spec_bn_g.pack(bn_1)]
+                    ),
+                    idx=ix,
+                    weight=float(plan.weights[r]),
+                    born=fault_round,
+                    due=fault_round + v.delay,
+                    n=layout.n,
+                ))
+        wsum = float(jnp.sum(weights))
         if wsum <= 0.0:
             # zero-weight group: no contribution (its unique columns keep the
             # server's previous values via the zero-denominator passthrough)
             continue
         tr_g, bn_g, loss_g = CL.cohort_round(
             plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
-            plan.xs, plan.ys, plan.rngs, plan.weights,
+            plan.xs, plan.ys, plan.rngs, weights,
             lr=plan.lr, local_steps=plan.local_steps,
             batch_size=plan.batch_size,
         )
@@ -1731,6 +1999,15 @@ def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout):
         den = den.at[ix].add(wsum)
         losses_w = losses_w + wsum * loss_g
         w_total = w_total + wsum
+    if faults is not None and staging is not None:
+        due, _ = _collect_due_staged(staging, fault_round, layout.n)
+        while len(staging) > faults.max_staged:
+            staging.pop(0)
+        if due:
+            snum, sden = _staged_side(due, faults.beta, fault_round,
+                                      layout.n)
+            num = num + snum
+            den = den + sden
     prev = _grouped_prev(layout, global_trainable, global_bn)
     flat = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
     if layout.frozen is not None:
@@ -1793,11 +2070,27 @@ class CohortEngine:
         self.agg, self.agg_mesh = agg, agg_mesh
         self.stream_dtype, self.inflight = stream_dtype, inflight
         self._ef_state: dict = {}
+        # frozen-column epoch the EF residuals were accumulated under —
+        # (n, digest) or None for unfrozen; a change clears _ef_state so a
+        # stale residual can never land on a remapped column space
+        self._ef_epoch = None
+        # fault-tolerance state (fl/faults.py): the bounded straggler
+        # staging buffer and the monotone fault-round clock that prices
+        # staleness (w·beta**s); both advance only on faults-armed rounds
+        self._staging: list = []
+        self._fault_round: int = 0
 
     def reset_ef(self) -> None:
         """Drop the per-group int8 error-feedback residuals (e.g. between
         independent experiments sharing one engine)."""
         self._ef_state.clear()
+        self._ef_epoch = None
+
+    def reset_faults(self) -> None:
+        """Drop the straggler staging buffer and rewind the fault-round
+        clock (e.g. between independent experiments sharing one engine)."""
+        self._staging.clear()
+        self._fault_round = 0
 
     def round(
         self,
@@ -1846,6 +2139,7 @@ class CohortEngine:
         frozen=None,
         stream_dtype: Optional[str] = None,
         inflight: Optional[int] = None,
+        faults: Optional[FLT.FaultPlan] = None,
     ) -> GroupedResult:
         """One heterogeneous round over ``plans`` (see module docstring).
 
@@ -1877,7 +2171,20 @@ class CohortEngine:
         transport section).  ``fused_masked`` has no dequant kernel
         variant and rejects ``stream_dtype != "f32"``; the serial oracle
         and the single-group identity fast path have no transport and
-        ignore both knobs."""
+        ignore both knobs.
+
+        ``faults`` is an optional :class:`fl.faults.FaultPlan` covering
+        the cohort's clients in concatenated group order: dropped and
+        straggler clients become zero-weight panel rows (no re-trace, no
+        new layout epoch), corrupt rows are injected after local SGD and
+        quarantined inside the one fused dispatch, and straggler updates
+        park in the engine's bounded staging buffer to merge into a later
+        faults-armed round at the staleness-discounted weight
+        ``w·beta**s``.  A fault-free plan at the default ``norm_bound=inf``
+        is bit-equal to ``faults=None``.  ``fused_masked`` supports
+        dropped-only plans (its kernel has no quarantine or merge
+        operands); the serial oracle supports everything, with corrupt ≡
+        zero-weight as the semantics of record."""
         if not plans:
             raise ValueError("grouped_round needs at least one GroupPlan")
         if impl is None:
@@ -1901,22 +2208,67 @@ class CohortEngine:
                    and self.agg_mesh.shape["model"] > 1 else "replicated")
         if agg not in ("replicated", "sharded"):
             raise ValueError(f"unknown agg {agg!r} (one of {AGG_MODES})")
+        armed = False
+        if faults is not None:
+            if not isinstance(faults, FLT.FaultPlan):
+                raise TypeError(
+                    f"faults must be a fl.faults.FaultPlan, got {faults!r}"
+                )
+            k_total = sum(int(p.xs.shape[0]) for p in plans)
+            if faults.k_total != k_total:
+                raise ValueError(
+                    f"FaultPlan covers {faults.k_total} clients but the "
+                    f"cohort has {k_total}"
+                )
+            # an UNARMED plan (all ok, nothing staged, infinite bound) is
+            # defined to be bit-equal to faults=None — it may take every
+            # fast path; anything else needs the full index machinery
+            armed = (faults.any_faults or bool(self._staging)
+                     or faults.norm_bound != math.inf)
+            if impl == "fused_masked" and armed:
+                bad = [v.kind for v in faults.verdicts
+                       if v.kind in ("straggler", "corrupt")]
+                if bad or self._staging or faults.norm_bound != math.inf:
+                    raise ValueError(
+                        "fused_masked supports dropped-only fault plans "
+                        "(no quarantine bound, no stragglers, empty "
+                        "staging buffer): the masked kernel has no "
+                        "quarantine or merge operands"
+                    )
         layout = make_group_layout(plans, global_trainable, global_bn,
-                                   frozen=frozen)
+                                   frozen=frozen, force_index=armed)
+        fault_round = 0
+        if faults is not None:
+            self._fault_round += 1
+            fault_round = self._fault_round
         if impl == "serial":
-            return _grouped_serial(plans, global_trainable, global_bn, layout)
+            return _grouped_serial(
+                plans, global_trainable, global_bn, layout,
+                faults=faults, staging=self._staging,
+                fault_round=fault_round,
+            )
         mesh = self.mesh if self.mode == "sharded" else None
         agg_mesh = self.agg_mesh
         if agg == "sharded" and agg_mesh is None:
             from repro.launch.mesh import make_model_mesh
 
             agg_mesh = self.agg_mesh = make_model_mesh()
+        if stream_dtype == "int8":
+            # satellite fix (ISSUE 8): a FrozenColumns epoch change remaps
+            # the column space the residuals were accumulated against —
+            # clear them so a stale residual can't land on remapped columns
+            ekey = (None if layout.frozen is None
+                    else (layout.frozen.n, layout.frozen.digest))
+            if ekey != self._ef_epoch:
+                self._ef_state.clear()
+                self._ef_epoch = ekey
         return _grouped_fused(
             plans, global_trainable, global_bn, layout, mesh,
             kernel="masked" if impl == "fused_masked" else "grouped",
             agg=agg, agg_mesh=agg_mesh,
             stream_dtype=stream_dtype, inflight=inflight,
             ef_state=self._ef_state if stream_dtype == "int8" else None,
+            faults=faults, staging=self._staging, fault_round=fault_round,
         )
 
 
@@ -1926,3 +2278,52 @@ def make_engine(mode: str = "vmap", mesh: Optional[Mesh] = None, *,
                 inflight: int = 2) -> CohortEngine:
     return CohortEngine(mode, mesh, agg=agg, agg_mesh=agg_mesh,
                         stream_dtype=stream_dtype, inflight=inflight)
+
+
+def ef_state_to_tree(engine: CohortEngine) -> dict:
+    """Checkpointable view of the engine's int8 error-feedback residuals
+    (``em_state_to_tree``-style, for train/checkpoint.py): the ``(gi,
+    (K, n))`` dict keys become flat ``"gi:KxN"`` strings so the tree
+    round-trips through an npz archive, and the residual arrays ride
+    verbatim.  Restoring with :func:`ef_state_from_tree` and resuming
+    training is equivalent to never having stopped — the residual IS the
+    only cross-round quantization state (tests/test_contract.py pins the
+    restore equivalence).
+
+    The frozen-column epoch the residuals were accumulated under travels
+    along (the ``__ef_epoch__`` entry — ``[n, digest]`` as uint64, the
+    digest being FrozenColumns' 16-hex-char sha1 prefix; empty for the
+    unfrozen epoch): without it a restore into a fresh engine would trip
+    the stale-epoch reset on the next round and silently discard the
+    residuals it just loaded."""
+    tree = {
+        f"{gi}:{shape[0]}x{shape[1]}": v
+        for (gi, shape), v in engine._ef_state.items()
+    }
+    if engine._ef_epoch is None:
+        tree["__ef_epoch__"] = np.zeros((0,), np.uint64)
+    else:
+        n, digest = engine._ef_epoch
+        tree["__ef_epoch__"] = np.asarray(
+            [n, int(digest, 16)], np.uint64
+        )
+    return tree
+
+
+def ef_state_from_tree(engine: CohortEngine, tree: dict) -> None:
+    """Restore :func:`ef_state_to_tree`'s view into ``engine`` (in place),
+    replacing whatever residuals and epoch marker it held."""
+    state = {}
+    epoch = None
+    for key, v in tree.items():
+        if str(key) == "__ef_epoch__":
+            e = np.asarray(v, np.uint64).reshape(-1)
+            if e.size:
+                epoch = (int(e[0]), format(int(e[1]), "016x"))
+            continue
+        gi, _, kn = str(key).partition(":")
+        k, _, n = kn.partition("x")
+        state[(int(gi), (int(k), int(n)))] = jnp.asarray(v, jnp.float32)
+    engine._ef_state.clear()
+    engine._ef_state.update(state)
+    engine._ef_epoch = epoch

@@ -1,0 +1,259 @@
+"""Deterministic fault injection for cohort rounds (ISSUE 8).
+
+Real federated deployments lose clients mid-round (device death, network
+partition), receive updates late (stragglers), and occasionally receive
+garbage (overflowed local training, malicious updates).  This module makes
+those failure modes REPRODUCIBLE FIXTURES rather than flaky simulations:
+
+* :class:`ClientFault` — one client's verdict for one round:
+  ``ok | dropped | straggler(delay) | corrupt(nan|inf|norm_blowup)``.
+* :class:`FaultPlan` — the per-client verdict vector for a whole cohort
+  (concatenated group order, exactly the order ``grouped_round`` sees the
+  clients in) plus the fault-handling knobs: the on-device quarantine
+  ``norm_bound``, the staleness discount base ``beta`` (a straggler merged
+  ``s`` rounds late contributes with weight ``w·beta**s``), and the staging
+  buffer capacity ``max_staged``.
+* :class:`FaultConfig` + :func:`sample_fault_plan` — seeded Bernoulli
+  sampling of plans (``np.random.default_rng((seed, round_idx))``), so a
+  training loop's fault trajectory is a pure function of ``(seed, round)``
+  — two processes with the same seed inject the identical faults.
+* :func:`inject_panel` — the *injection hook*: perturbs one client's row of
+  a group-local ``[K_g, n_g]`` panel AFTER local SGD, i.e. exactly the
+  update that would hit the wire.  ``norm_blowup`` ADDS a large constant
+  rather than multiplying, so exact-zero entries are perturbed too and the
+  whole row trips the kernel quarantine gate (a multiplicative blowup would
+  leave zeros untouched and split the row's verdict per column).
+
+Handling semantics (fl/engine.py::grouped_round, kernels/fedavg.py):
+
+* ``dropped`` clients become zero-weight panel columns — no re-trace, no
+  new ``GroupLayout`` epoch; columns covered by nobody fall back to the
+  kernels' existing zero-denominator→``prev`` passthrough.
+* ``straggler`` panels park in a bounded staging buffer on the engine and
+  merge into the round ``delay`` rounds later as associative num/den side
+  inputs with the staleness-discounted weight ``w·beta**s``.
+* ``corrupt`` rows ride the normal panel into the fused dispatch, where the
+  per-entry quarantine gate (finite check + ``|update| > norm_bound``)
+  zeroes the bad entries' weight INSIDE the kernel pass — no extra host
+  sync, and the round still issues one dispatch and one
+  ``block_until_ready``.
+
+A fault-free plan (:func:`all_ok`) is bit-equal to running with
+``faults=None``: the quarantine math degenerates exactly (all-false mask,
+``den - 0.0``) and tests/test_contract.py pins it across the conformance
+matrix.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+import numpy as np
+
+KINDS = ("ok", "dropped", "straggler", "corrupt")
+CORRUPT_MODES = ("nan", "inf", "norm_blowup")
+
+# additive magnitude for the norm_blowup corruption: far above any realistic
+# update yet far below f32 overflow, so the injected row is finite (the
+# finite check alone won't catch it — only the norm bound does)
+NORM_BLOWUP_ADD = 3e8
+
+
+@dataclass(frozen=True)
+class ClientFault:
+    """One client's verdict for one round."""
+
+    kind: str = "ok"
+    delay: int = 0  # straggler: rounds the panel parks before merging
+    mode: str = ""  # corrupt: one of CORRUPT_MODES
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"fault kind {self.kind!r} not in {KINDS}"
+            )
+        if self.kind == "straggler":
+            if self.delay < 1:
+                raise ValueError(
+                    f"straggler delay must be >= 1 round, got {self.delay}"
+                )
+        elif self.delay != 0:
+            raise ValueError(f"delay only applies to stragglers")
+        if self.kind == "corrupt":
+            if self.mode not in CORRUPT_MODES:
+                raise ValueError(
+                    f"corrupt mode {self.mode!r} not in {CORRUPT_MODES}"
+                )
+        elif self.mode:
+            raise ValueError("mode only applies to corrupt verdicts")
+
+
+OK = ClientFault()
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Per-client verdicts for one cohort round, in the concatenated group
+    order ``grouped_round`` sees the clients in (group 0's clients first).
+
+    ``norm_bound`` is the kernel quarantine gate's magnitude bound: a panel
+    entry with ``|update| > norm_bound`` (or non-finite) has its client's
+    weight zeroed for that column inside the fused dispatch.  The default
+    ``inf`` keeps the finite check only.  ``beta`` and ``max_staged``
+    parameterize the straggler staging buffer (see module docstring)."""
+
+    verdicts: Tuple[ClientFault, ...]
+    norm_bound: float = math.inf
+    beta: float = 0.5
+    max_staged: int = 8
+
+    def __post_init__(self):
+        object.__setattr__(self, "verdicts", tuple(self.verdicts))
+        for v in self.verdicts:
+            if not isinstance(v, ClientFault):
+                raise TypeError(f"verdicts must be ClientFault, got {v!r}")
+        if not (self.norm_bound > 0):
+            raise ValueError(
+                f"norm_bound must be > 0 (use math.inf to disable), "
+                f"got {self.norm_bound}"
+            )
+        if not (0.0 < self.beta <= 1.0):
+            raise ValueError(f"beta must be in (0, 1], got {self.beta}")
+        if self.max_staged < 0:
+            raise ValueError(f"max_staged must be >= 0, got {self.max_staged}")
+
+    @property
+    def k_total(self) -> int:
+        return len(self.verdicts)
+
+    @property
+    def any_faults(self) -> bool:
+        return any(v.kind != "ok" for v in self.verdicts)
+
+    def counts(self) -> dict:
+        """Per-kind verdict counts — the host-side metadata twin that
+        ``engine.AGG_STATS`` surfaces and ``fl/memory_model.py::
+        fault_counts`` mirrors (both count the same plan, never a device
+        value)."""
+        c = {k: 0 for k in KINDS}
+        for v in self.verdicts:
+            c[v.kind] += 1
+        return c
+
+    def for_cohort(self, ks: Sequence[int]) -> Tuple[Tuple[ClientFault, ...], ...]:
+        """Split the flat verdict vector back into per-group tuples for a
+        cohort with ``ks[gi]`` clients in group ``gi``."""
+        if sum(ks) != len(self.verdicts):
+            raise ValueError(
+                f"FaultPlan covers {len(self.verdicts)} clients but the "
+                f"cohort has {sum(ks)} (groups {tuple(ks)})"
+            )
+        out, o = [], 0
+        for k in ks:
+            out.append(self.verdicts[o : o + k])
+            o += k
+        return tuple(out)
+
+
+def all_ok(k_total: int, **kw) -> FaultPlan:
+    """The fault-free plan: every client ``ok``.  Bit-equal to
+    ``faults=None`` across the conformance matrix (the quarantine gate
+    degenerates exactly at the default ``norm_bound=inf``)."""
+    return FaultPlan(verdicts=(OK,) * k_total, **kw)
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Seeded Bernoulli fault sampling for a training loop.  The per-round
+    plan is a pure function of ``(seed, round_idx)`` — reproducible across
+    processes (tests/test_fl.py pins the determinism of the underlying
+    ``np.random.default_rng`` seeding)."""
+
+    seed: int = 0
+    p_drop: float = 0.0
+    p_straggle: float = 0.0
+    p_corrupt: float = 0.0
+    max_delay: int = 2  # straggler delays sample uniformly from [1, max_delay]
+    corrupt_modes: Tuple[str, ...] = CORRUPT_MODES
+    norm_bound: float = math.inf
+    beta: float = 0.5
+    max_staged: int = 8
+
+    def __post_init__(self):
+        p = self.p_drop + self.p_straggle + self.p_corrupt
+        if not (0.0 <= p <= 1.0):
+            raise ValueError(f"fault probabilities sum to {p}, must be <= 1")
+        if self.max_delay < 1:
+            raise ValueError("max_delay must be >= 1")
+        bad = set(self.corrupt_modes) - set(CORRUPT_MODES)
+        if bad:
+            raise ValueError(f"unknown corrupt modes {sorted(bad)}")
+
+
+def sample_fault_plan(cfg: FaultConfig, k_total: int,
+                      round_idx: int) -> FaultPlan:
+    """Sample one round's :class:`FaultPlan` deterministically from
+    ``(cfg.seed, round_idx)``."""
+    rng = np.random.default_rng((cfg.seed, round_idx))
+    u = rng.random(k_total)
+    delays = rng.integers(1, cfg.max_delay + 1, size=k_total)
+    modes = rng.choice(len(cfg.corrupt_modes), size=k_total)
+    verdicts = []
+    t_drop = cfg.p_drop
+    t_strag = t_drop + cfg.p_straggle
+    t_corr = t_strag + cfg.p_corrupt
+    for i in range(k_total):
+        if u[i] < t_drop:
+            verdicts.append(ClientFault("dropped"))
+        elif u[i] < t_strag:
+            verdicts.append(ClientFault("straggler", delay=int(delays[i])))
+        elif u[i] < t_corr:
+            verdicts.append(
+                ClientFault("corrupt", mode=cfg.corrupt_modes[int(modes[i])])
+            )
+        else:
+            verdicts.append(OK)
+    return FaultPlan(
+        verdicts=tuple(verdicts), norm_bound=cfg.norm_bound,
+        beta=cfg.beta, max_staged=cfg.max_staged,
+    )
+
+
+def _jitted_inject(mode: str):
+    """Jitted row-perturbation for :func:`inject_panel`, cached per mode.
+    Un-jitted ``.at[row]`` scatters pay a full op-by-op dispatch (~0.6 ms
+    on CPU — enough to blow the bench's x1.15 quarantine-overhead gate on
+    its own); jitting with ``row`` as an operand keeps the injection one
+    cached scatter dispatch for any row of the same panel shape."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def inject(panel, row):
+        if mode == "nan":
+            return panel.at[row].set(jnp.nan)
+        if mode == "inf":
+            return panel.at[row].set(jnp.inf)
+        # norm_blowup: ADD so exact-zero entries are perturbed too and the
+        # whole row trips the |update| > norm_bound gate
+        return panel.at[row].add(jnp.asarray(NORM_BLOWUP_ADD, panel.dtype))
+
+    return inject
+
+
+_INJECT_CACHE: dict = {}
+
+
+def inject_panel(panel, row: int, fault: ClientFault):
+    """Perturb client ``row`` of a group-local ``[K_g, n_g]`` panel after
+    local SGD — the injection hook ``grouped_round`` applies before the
+    panel enters the (possibly quantized/sharded) stream.  Every column of
+    a group-local panel belongs to the group, so a whole-row perturbation
+    never violates the engine's zero-outside-group scatter invariant."""
+    if fault.kind != "corrupt":
+        return panel
+    fn = _INJECT_CACHE.get(fault.mode)
+    if fn is None:
+        fn = _INJECT_CACHE[fault.mode] = _jitted_inject(fault.mode)
+    return fn(panel, row)

@@ -340,6 +340,32 @@ def agg_wire_bytes_uniform(groups, *, agg: str = "replicated",
     return total
 
 
+def fault_counts(kinds) -> dict:
+    """Per-kind verdict counts of one round's fault plan — the analytic
+    twin of ``engine.AGG_STATS``'s ``fault_ok`` / ``fault_dropped`` /
+    ``fault_stragglers`` / ``fault_corrupt`` fields (and of
+    ``fl/faults.py::FaultPlan.counts``).  ``kinds`` is a sequence of
+    verdict kind strings; both sides count plan METADATA, never a device
+    value, so tests pin them equal without a sync."""
+    c = {"ok": 0, "dropped": 0, "straggler": 0, "corrupt": 0}
+    for k in kinds:
+        if k not in c:
+            raise ValueError(f"unknown fault kind {k!r}")
+        c[k] += 1
+    return c
+
+
+def fault_staging_bytes(widths, elem_bytes: int = 4) -> int:
+    """Resident bytes of the engine's straggler staging buffer: one parked
+    f32 row of ``width`` columns per entry (fl/engine.py::StagedPanel keeps
+    the clean pre-quantization row, so the element size is 4 B regardless
+    of the round's wire dtype).  Analytic twin of ``engine.AGG_STATS
+    ["fault_staging_bytes"]``; :func:`server_aggregation_peak_bytes` takes
+    the same figure as its ``staging_bytes`` term so parked stragglers
+    join the server peak-memory model."""
+    return sum(int(elem_bytes) * int(w) for w in widths)
+
+
 def server_aggregation_peak_bytes(
     k_total: int,
     n: int,
@@ -352,6 +378,7 @@ def server_aggregation_peak_bytes(
     elem_bytes: int = 4,
     n_frozen: int = 0,
     stream_dtype: Optional[str] = None,
+    staging_bytes: int = 0,
 ) -> int:
     """Per-DEVICE peak bytes of the fused grouped aggregation
     (fl/engine.py::_grouped_fused with the ``fedavg_grouped`` kernel):
@@ -397,7 +424,13 @@ def server_aggregation_peak_bytes(
     bf16 dequantization-scale panel.  ``None`` (default) keeps the uniform
     ``elem_bytes`` sizing — the pre-transport behavior, bit-compatible
     with existing callers.  The gmask/scratch/weight terms stay f32 either
-    way (the kernel accumulates in f32)."""
+    way (the kernel accumulates in f32).
+
+    ``staging_bytes`` is the fault-tolerance term: the resident bytes of
+    the engine's bounded straggler staging buffer
+    (:func:`fault_staging_bytes` over the parked row widths — at most
+    ``max_staged`` rows by construction), additive because the parked f32
+    rows live beside the panel until their merge round."""
     n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg, tile=tile,
                                    n_frozen=n_frozen)
     stream = max(
@@ -412,7 +445,7 @@ def server_aggregation_peak_bytes(
     scales = 2 * n_groups * n_dev if stream_dtype == "int8" else 0
     return panel_eb * (k_total * n_dev + stream) + elem_bytes * (
         n_groups * n_dev + 4 * n_dev + k_total + n_groups
-    ) + scales
+    ) + scales + staging_bytes
 
 
 def _depthfl_memory_mb(cfg: C.CNNConfig, depth: int, *, batch: int) -> float:

@@ -22,6 +22,7 @@ from repro.core import output_module as OM
 from repro.core import progressive as P
 from repro.fl import data as DATA
 from repro.fl import engine as ENG
+from repro.fl import faults as FLT
 from repro.fl import memory_model as MM
 from repro.models import cnn as C
 
@@ -53,6 +54,13 @@ class FLConfig:
     # (fl/engine.py::grouped_round(frozen=...)).  The step-termination EM
     # over the whole trainable tree is unaffected by this knob.
     freeze_layouts: bool = True
+    # fault tolerance (fl/faults.py): when set, every training round samples
+    # a deterministic per-client FaultPlan from (faults.seed, global round
+    # counter) and runs grouped_round(faults=...) — dropped clients become
+    # zero-weight rows, corrupt rows are quarantined inside the fused
+    # dispatch, stragglers park and merge with the staleness discount.
+    # None (default) keeps the exact fault-free path.
+    faults: FLT.FaultConfig = None
 
 
 class ProFLServer:
@@ -81,6 +89,18 @@ class ProFLServer:
         self.total_uplink_params = 0
         self._key = key
         self.engine = ENG.make_engine(fl.engine)
+        self._fault_rounds = 0  # global round counter for FaultPlan sampling
+
+    def _next_fault_plan(self, k_total: int):
+        """Deterministic per-round FaultPlan under ``fl.faults`` (None when
+        fault injection is off): a pure function of (faults.seed, global
+        round index), so a run's fault trajectory is reproducible."""
+        if self.fl.faults is None:
+            return None
+        self._fault_rounds += 1
+        return FLT.sample_fault_plan(
+            self.fl.faults, k_total, self._fault_rounds
+        )
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -165,7 +185,9 @@ class ProFLServer:
                 fl.lr, fl.local_steps, fl.batch_size,
             )
             res = self.engine.grouped_round([plan], trainable, self.bn_state,
-                                            frozen=fro_cols)
+                                            frozen=fro_cols,
+                                            faults=self._next_fault_plan(
+                                                len(sel)))
             trainable, self.bn_state, loss = res.trainable, res.bn_state, res.loss
             self.total_uplink_params += uplink * len(sel)
             info["rounds"] = rnd + 1

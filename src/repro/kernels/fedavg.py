@@ -145,6 +145,58 @@ def fedavg_masked(
     return out[:n]
 
 
+@functools.lru_cache(maxsize=None)
+def _make_grouped_kernel(dequant: bool, quar: bool, side: bool):
+    """Kernel-body factory for the fault-tolerant ``fedavg_grouped``
+    variants (ISSUE 8).  The clean kernels below stay untouched — a round
+    with ``faults=None`` traces the exact PR 7 bodies — and each armed
+    combination of (dequant, quarantine, side-merge) gets its own body with
+    the extra operands spliced into the same tiled layout:
+
+    * ``quar`` — the on-device quarantine gate: entries that are non-finite
+      or exceed the ``bound`` operand in magnitude contribute 0 to the
+      numerator and have their client's weight SUBTRACTED from the
+      denominator, all inside the one kernel pass (no host sync, no second
+      dispatch).  At ``bound=inf`` on a finite panel the gate degenerates
+      bitwise (all-false mask; ``den - 0.0``).
+    * ``side`` — associative ``(snum, sden)`` [bt] column blocks added into
+      the ratio: the staleness-discounted straggler merge (num/den pairs
+      are associative, so a parked panel folds in by addition — the
+      stepping stone to FedBuff-style buffered aggregation).
+
+    Shard-local like everything here: the gate and the merge are per-column,
+    so the same body runs unchanged on a column shard inside shard_map."""
+
+    def kernel(*refs):
+        it = iter(refs)
+        p = next(it)[...].astype(jnp.float32)  # [K, bt]
+        w = next(it)[...].astype(jnp.float32)  # [K]
+        gm = next(it)[...].astype(jnp.float32)  # [G, bt]
+        ws = next(it)[...].astype(jnp.float32)  # [G]
+        if dequant:
+            gsel = next(it)[...].astype(jnp.float32)  # [K, G]
+            sc = next(it)[...].astype(jnp.float32)  # [G, bt]
+            val = p * jnp.dot(gsel, sc)
+        else:
+            val = p
+        den = jnp.einsum("g,gn->n", ws, gm)
+        if quar:
+            bnd = next(it)[...].astype(jnp.float32)  # [1]
+            bad = ~jnp.isfinite(val) | (jnp.abs(val) > bnd[0])
+            val = jnp.where(bad, 0.0, val)
+            den = den - jnp.einsum("k,kn->n", w, bad.astype(jnp.float32))
+        num = jnp.einsum("k,kn->n", w, val)
+        if side:
+            num = num + next(it)[...].astype(jnp.float32)  # snum [bt]
+            den = den + next(it)[...].astype(jnp.float32)  # sden [bt]
+        prev = next(it)[...].astype(jnp.float32)  # [bt]
+        out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), prev)
+        o_ref = next(it)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+    return kernel
+
+
 def _fedavg_grouped_kernel(p_ref, w_ref, gm_ref, ws_ref, prev_ref, o_ref):
     p = p_ref[...].astype(jnp.float32)  # [K, bt]
     w = w_ref[...].astype(jnp.float32)  # [K]
@@ -170,6 +222,8 @@ def fedavg_grouped(
     bt: int = 65536,
     interpret: Optional[bool] = None,
     out_dtype: Optional[str] = None,  # result dtype; None = params.dtype
+    bound: Optional[jax.Array] = None,  # quarantine gate magnitude bound
+    side: Optional[tuple] = None,  # (snum, sden) [n] associative merge
 ) -> jax.Array:
     """Group-compressed ``fedavg_masked``: per grid step stage the [K, bt]
     panel plus only a [G, bt] group-mask block and emit
@@ -179,7 +233,14 @@ def fedavg_grouped(
 
     ``out_dtype`` (a dtype name string, static) decouples the result dtype
     from the panel's wire dtype: a bf16-streamed panel still aggregates to an
-    f32 server vector (the kernel accumulates in f32 regardless)."""
+    f32 server vector (the kernel accumulates in f32 regardless).
+
+    ``bound``/``side`` (ISSUE 8) arm the fault-tolerant variants of the
+    kernel body (see :func:`_make_grouped_kernel`; oracle:
+    kernels/ref.py::fedavg_grouped with the same kwargs): ``bound`` fuses
+    the per-entry quarantine gate into the pass, ``side`` adds staged
+    ``(num, den)`` side inputs for the staleness-discounted straggler
+    merge.  With both None this traces the exact clean kernel."""
     if interpret is None:
         interpret = default_interpret()
     K, n = params.shape
@@ -189,26 +250,49 @@ def fedavg_grouped(
         prev = jnp.zeros((n,), od)
     bt = min(bt, n)
     pad = (-n) % bt
+    snum = sden = None
+    if side is not None:
+        snum = side[0].astype(jnp.float32)
+        sden = side[1].astype(jnp.float32)
     if pad:
         # padded gmask columns are zero -> den 0 -> prev padding (also zero)
         params = jnp.pad(params, ((0, 0), (0, pad)))
         gmask = jnp.pad(gmask, ((0, 0), (0, pad)))
         prev = jnp.pad(prev, (0, pad))
+        if side is not None:
+            # zero side padding: den stays 0 there -> prev passthrough
+            snum = jnp.pad(snum, (0, pad))
+            sden = jnp.pad(sden, (0, pad))
     nt = (n + pad) // bt
+    operands = [params, weights, gmask, wsum]
+    in_specs = [
+        pl.BlockSpec((K, bt), lambda i: (0, i)),
+        pl.BlockSpec((K,), lambda i: (0,)),
+        pl.BlockSpec((G, bt), lambda i: (0, i)),
+        pl.BlockSpec((G,), lambda i: (0,)),
+    ]
+    if bound is not None:
+        operands.append(jnp.asarray(bound, jnp.float32).reshape(1))
+        in_specs.append(pl.BlockSpec((1,), lambda i: (0,)))
+    if side is not None:
+        operands += [snum, sden]
+        in_specs += [pl.BlockSpec((bt,), lambda i: (i,)),
+                     pl.BlockSpec((bt,), lambda i: (i,))]
+    operands.append(prev)
+    in_specs.append(pl.BlockSpec((bt,), lambda i: (i,)))
+    if bound is None and side is None:
+        kernel = _fedavg_grouped_kernel  # the clean PR 7 body, untouched
+    else:
+        kernel = _make_grouped_kernel(False, bound is not None,
+                                      side is not None)
     out = pl.pallas_call(
-        _fedavg_grouped_kernel,
+        kernel,
         grid=(nt,),
-        in_specs=[
-            pl.BlockSpec((K, bt), lambda i: (0, i)),
-            pl.BlockSpec((K,), lambda i: (0,)),
-            pl.BlockSpec((G, bt), lambda i: (0, i)),
-            pl.BlockSpec((G,), lambda i: (0,)),
-            pl.BlockSpec((bt,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n + pad,), od),
         interpret=interpret,
-    )(params, weights, gmask, wsum, prev)
+    )(*operands)
     return out[:n]
 
 
@@ -246,6 +330,8 @@ def fedavg_grouped_dequant(
     bt: int = 65536,
     interpret: Optional[bool] = None,
     out_dtype: Optional[str] = "float32",
+    bound: Optional[jax.Array] = None,  # quarantine gate magnitude bound
+    side: Optional[tuple] = None,  # (snum, sden) [n] associative merge
 ) -> jax.Array:
     """:func:`fedavg_grouped` over a QUANTIZED int8 panel: each grid step
     stages the [K, bt] int8 block plus a [G, bt] bf16 scale block and
@@ -253,7 +339,9 @@ def fedavg_grouped_dequant(
     so the f32 group panel never exists as an HBM buffer — per-tile VMEM
     registers only.  Oracle: kernels/ref.py::fedavg_grouped_dequant.
     Shard-local like every kernel here (no cross-column coupling): the same
-    pallas_call runs on a column shard inside shard_map."""
+    pallas_call runs on a column shard inside shard_map.  ``bound``/``side``
+    arm the fault-tolerant body variants (quarantine on the DEQUANTIZED
+    values + staged num/den merge) exactly as in :func:`fedavg_grouped`."""
     if interpret is None:
         interpret = default_interpret()
     K, n = params.shape
@@ -263,27 +351,49 @@ def fedavg_grouped_dequant(
         prev = jnp.zeros((n,), od)
     bt = min(bt, n)
     pad = (-n) % bt
+    snum = sden = None
+    if side is not None:
+        snum = side[0].astype(jnp.float32)
+        sden = side[1].astype(jnp.float32)
     if pad:
         # padded gmask columns are zero -> den 0 -> prev padding (also zero)
         params = jnp.pad(params, ((0, 0), (0, pad)))
         gmask = jnp.pad(gmask, ((0, 0), (0, pad)))
         scales = jnp.pad(scales, ((0, 0), (0, pad)))
         prev = jnp.pad(prev, (0, pad))
+        if side is not None:
+            snum = jnp.pad(snum, (0, pad))
+            sden = jnp.pad(sden, (0, pad))
     nt = (n + pad) // bt
+    operands = [params, weights, gmask, wsum, gsel, scales]
+    in_specs = [
+        pl.BlockSpec((K, bt), lambda i: (0, i)),
+        pl.BlockSpec((K,), lambda i: (0,)),
+        pl.BlockSpec((G, bt), lambda i: (0, i)),
+        pl.BlockSpec((G,), lambda i: (0,)),
+        pl.BlockSpec((K, G), lambda i: (0, 0)),
+        pl.BlockSpec((G, bt), lambda i: (0, i)),
+    ]
+    if bound is not None:
+        operands.append(jnp.asarray(bound, jnp.float32).reshape(1))
+        in_specs.append(pl.BlockSpec((1,), lambda i: (0,)))
+    if side is not None:
+        operands += [snum, sden]
+        in_specs += [pl.BlockSpec((bt,), lambda i: (i,)),
+                     pl.BlockSpec((bt,), lambda i: (i,))]
+    operands.append(prev)
+    in_specs.append(pl.BlockSpec((bt,), lambda i: (i,)))
+    if bound is None and side is None:
+        kernel = _fedavg_grouped_dequant_kernel  # clean PR 7 body, untouched
+    else:
+        kernel = _make_grouped_kernel(True, bound is not None,
+                                      side is not None)
     out = pl.pallas_call(
-        _fedavg_grouped_dequant_kernel,
+        kernel,
         grid=(nt,),
-        in_specs=[
-            pl.BlockSpec((K, bt), lambda i: (0, i)),
-            pl.BlockSpec((K,), lambda i: (0,)),
-            pl.BlockSpec((G, bt), lambda i: (0, i)),
-            pl.BlockSpec((G,), lambda i: (0,)),
-            pl.BlockSpec((K, G), lambda i: (0, 0)),
-            pl.BlockSpec((G, bt), lambda i: (0, i)),
-            pl.BlockSpec((bt,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n + pad,), od),
         interpret=interpret,
-    )(params, weights, gmask, wsum, gsel, scales, prev)
+    )(*operands)
     return out[:n]

@@ -46,6 +46,17 @@ per-column bf16 scales and reconstruct f32 INSIDE the kernel contraction —
 they count under the SAME ``fedavg_grouped`` DISPATCHES key because they
 are the same logical aggregation dispatch, just over the compressed wire
 format (``stream_dtype="int8"``).
+
+Fault tolerance (ISSUE 8): every grouped variant takes optional ``bound``
+and ``side`` operands that arm the fault-tolerant kernel bodies — ``bound``
+fuses a per-entry quarantine gate (non-finite or ``|update| > bound``
+entries contribute 0 to the numerator and subtract their client's weight
+from the denominator) into the SAME kernel pass, and ``side`` adds
+associative ``(snum, sden)`` column vectors carrying the
+staleness-discounted straggler merge.  Both ride the one logical dispatch:
+an armed round counts exactly like a clean one under ``DISPATCHES``, and
+``bound=None, side=None`` traces the unchanged clean bodies (bit-equal to
+the pre-fault path).
 """
 from __future__ import annotations
 
@@ -254,6 +265,8 @@ def fedavg_grouped(
     *,
     impl: Impl = "auto",
     out_dtype: Optional[str] = None,  # result dtype; None = params.dtype
+    bound=None,  # quarantine gate: finite check + |p| > bound zeroes weight
+    side=None,  # (snum, sden) [n] associative staleness-merge inputs
 ):
     """Group-compressed masked average: ``Σ_k w·p / Σ_g wsum·gmask`` with a
     zero-denominator passthrough to ``prev``.  Same math as ``fedavg_masked``
@@ -261,17 +274,25 @@ def fedavg_grouped(
     cohort engine), but stages ``G·n + G`` membership elements instead of
     ``K·n`` — a K/G cut in mask HBM traffic per dispatch.  ``out_dtype``
     decouples the result dtype from the panel's wire dtype (a bf16-streamed
-    panel still aggregates to an f32 server vector)."""
+    panel still aggregates to an f32 server vector).
+
+    ``bound``/``side`` (ISSUE 8) arm the fault-tolerant kernel variants —
+    the fused per-entry quarantine gate and the staged num/den straggler
+    merge (see kernels/fedavg.py::_make_grouped_kernel); both ride the SAME
+    logical dispatch, so the round-level one-dispatch contract holds under
+    fault injection."""
     DISPATCHES["fedavg_grouped"] += 1
     STAGED["fedavg_grouped"] += int(gmask.size) + int(wsum.size)
     if impl == "auto":
         impl = "pallas" if (_on_tpu() or params.shape[-1] >= 4096) else "naive"
     if impl == "pallas":
         return _fedavg.fedavg_grouped(
-            params, weights, gmask, wsum, prev, out_dtype=out_dtype
+            params, weights, gmask, wsum, prev, out_dtype=out_dtype,
+            bound=bound, side=side,
         )
     return _ref.fedavg_grouped(
-        params, weights, gmask, wsum, prev, out_dtype=out_dtype
+        params, weights, gmask, wsum, prev, out_dtype=out_dtype,
+        bound=bound, side=side,
     )
 
 
@@ -286,11 +307,15 @@ def fedavg_grouped_dequant(
     *,
     impl: Impl = "auto",
     out_dtype: Optional[str] = "float32",
+    bound=None,  # quarantine gate on the DEQUANTIZED values
+    side=None,  # (snum, sden) [n] associative staleness-merge inputs
 ):
     """``fedavg_grouped`` over a quantized int8 panel with the dequant fused
     into the kernel contraction (``p · (gsel @ scales)``) — the f32 panel
     never materializes as a buffer.  Same logical dispatch, same DISPATCHES
-    key as ``fedavg_grouped``; the extra scale/selector staging is counted."""
+    key as ``fedavg_grouped``; the extra scale/selector staging is counted.
+    ``bound``/``side`` arm the fault-tolerant variants as in
+    :func:`fedavg_grouped`."""
     DISPATCHES["fedavg_grouped"] += 1
     STAGED["fedavg_grouped"] += (
         int(gmask.size) + int(wsum.size) + int(gsel.size) + int(scales.size)
@@ -300,10 +325,11 @@ def fedavg_grouped_dequant(
     if impl == "pallas":
         return _fedavg.fedavg_grouped_dequant(
             params, weights, gmask, wsum, gsel, scales, prev,
-            out_dtype=out_dtype,
+            out_dtype=out_dtype, bound=bound, side=side,
         )
     return _ref.fedavg_grouped_dequant(
-        params, weights, gmask, wsum, gsel, scales, prev
+        params, weights, gmask, wsum, gsel, scales, prev,
+        bound=bound, side=side,
     ).astype(jnp.dtype(out_dtype or jnp.float32))
 
 
@@ -313,39 +339,67 @@ def fedavg_grouped_dequant(
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_agg_call(mesh: Mesh, kind: str, impl: str, out_dtype=None):
+def _sharded_agg_call(mesh: Mesh, kind: str, impl: str, out_dtype=None,
+                      quar: bool = False, side: bool = False):
     """Cached jitted shard_map of a shard-local aggregation kernel over the
     ``model`` mesh axis.  The kernels are shard-local by construction (the
     per-column ratio has no cross-column coupling), so each device runs the
     UNCHANGED kernel on its ``[K, n/D]`` column block — no collectives.
     ``out_dtype`` (a dtype name string, part of the cache key) is forwarded
-    to the grouped kernels so quantized/bf16 panels aggregate to f32."""
+    to the grouped kernels so quantized/bf16 panels aggregate to f32.
+
+    ``quar``/``side`` (cache-key flags, ISSUE 8) splice the fault-tolerant
+    operands into the grouped signatures: the quarantine ``bound`` rides
+    replicated (``P()``, one f32 scalar) and the ``(snum, sden)`` staleness
+    side vectors ride column-sharded (``P("model")``) like ``prev`` — the
+    gate and the merge are per-column, so the shard decomposition stays
+    bitwise exact (kernels/ref.py::fedavg_grouped_sharded is the oracle)."""
     if kind == "grouped":
-        fn = (_fedavg.fedavg_grouped if impl == "pallas"
-              else _ref.fedavg_grouped)
-        fn = functools.partial(fn, out_dtype=out_dtype)
-        in_specs = (P(None, "model"), P(), P(None, "model"), P(), P("model"))
+        base = (_fedavg.fedavg_grouped if impl == "pallas"
+                else _ref.fedavg_grouped)
+
+        def fn(p, w, gm, ws, *rest, _base=base, _od=out_dtype):
+            rest = list(rest)
+            bnd = rest.pop(0) if quar else None
+            sd = (rest.pop(0), rest.pop(0)) if side else None
+            return _base(p, w, gm, ws, rest[0], out_dtype=_od,
+                         bound=bnd, side=sd)
+
+        in_specs = [P(None, "model"), P(), P(None, "model"), P()]
     elif kind == "grouped_dequant":
         if impl == "pallas":
-            fn = functools.partial(
+            base = functools.partial(
                 _fedavg.fedavg_grouped_dequant, out_dtype=out_dtype
             )
         else:
             od = jnp.dtype(out_dtype or jnp.float32)
 
-            def fn(*a, _od=od):
-                return _ref.fedavg_grouped_dequant(*a).astype(_od)
+            def base(*a, _od=od, **kw):
+                return _ref.fedavg_grouped_dequant(*a, **kw).astype(_od)
 
-        in_specs = (
+        def fn(p, w, gm, ws, gs, sc, *rest, _base=base):
+            rest = list(rest)
+            bnd = rest.pop(0) if quar else None
+            sd = (rest.pop(0), rest.pop(0)) if side else None
+            return _base(p, w, gm, ws, gs, sc, rest[0],
+                         bound=bnd, side=sd)
+
+        in_specs = [
             P(None, "model"), P(), P(None, "model"), P(), P(),
-            P(None, "model"), P("model"),
-        )
+            P(None, "model"),
+        ]
     else:
         fn = (_fedavg.fedavg_masked if impl == "pallas"
               else _ref.fedavg_masked)
-        in_specs = (P(None, "model"), P(), P(None, "model"), P("model"))
+        in_specs = [P(None, "model"), P(), P(None, "model"), P("model")]
+    if kind in ("grouped", "grouped_dequant"):
+        if quar:
+            in_specs.append(P())  # bound: one replicated f32 scalar
+        if side:
+            in_specs += [P("model"), P("model")]  # snum, sden like prev
+        in_specs.append(P("model"))  # prev
     return jax.jit(shard_map(
-        fn, mesh=mesh, in_specs=in_specs, out_specs=P("model"),
+        fn, mesh=mesh, in_specs=tuple(in_specs), out_specs=P("model"),
         check_rep=False,
     ))
 
@@ -434,6 +488,8 @@ def fedavg_grouped_sharded(
     mesh: Mesh,
     impl: Impl = "auto",
     out_dtype: Optional[str] = None,
+    bound=None,  # quarantine gate (python float or f32 scalar)
+    side=None,  # (snum, sden) [n_padded] column-sharded P("model")
 ):
     """Column-sharded ``fedavg_grouped``: ONE logical aggregation dispatch
     that lowers to one shard-local kernel launch per device of ``mesh``'s
@@ -443,7 +499,8 @@ def fedavg_grouped_sharded(
     operands with the shardings above.  Accounting: one ``fedavg_grouped``
     DISPATCHES entry (the round-level one-dispatch contract is agg-mode
     independent) plus ``fedavg_grouped_shards`` += D for the per-shard
-    launches under that single logical round."""
+    launches under that single logical round.  ``bound``/``side`` arm the
+    fault-tolerant kernel variants inside the SAME logical dispatch."""
     d = mesh.shape["model"]
     DISPATCHES["fedavg_grouped"] += 1
     DISPATCHES["fedavg_grouped_shards"] += d
@@ -451,9 +508,14 @@ def fedavg_grouped_sharded(
     if impl == "auto":
         impl = ("pallas" if (_on_tpu() or params.shape[-1] // d >= 4096)
                 else "naive")
-    return _sharded_agg_call(mesh, "grouped", impl, out_dtype)(
-        params, weights, gmask, wsum, prev
-    )
+    call = _sharded_agg_call(mesh, "grouped", impl, out_dtype,
+                             bound is not None, side is not None)
+    operands = [params, weights, gmask, wsum]
+    if bound is not None:
+        operands.append(jnp.full((1,), bound, jnp.float32))
+    if side is not None:
+        operands += [side[0], side[1]]
+    return call(*operands, prev)
 
 
 def fedavg_grouped_dequant_sharded(
@@ -468,12 +530,15 @@ def fedavg_grouped_dequant_sharded(
     mesh: Mesh,
     impl: Impl = "auto",
     out_dtype: Optional[str] = "float32",
+    bound=None,  # quarantine gate (python float or f32 scalar)
+    side=None,  # (snum, sden) [n_padded] column-sharded P("model")
 ):
     """Column-sharded :func:`fedavg_grouped_dequant`: each device
     dequantizes and contracts its own ``[K, n_padded/D]`` int8 block against
     its ``[G, n_padded/D]`` scale block — neither the f32 panel nor the full
-    int8 panel ever exists on a single device.  Same DISPATCHES key and
-    round contract as :func:`fedavg_grouped_sharded`."""
+    int8 panel ever exists on a single device.  Same DISPATCHES key, round
+    contract, and ``bound``/``side`` fault variants as
+    :func:`fedavg_grouped_sharded`."""
     d = mesh.shape["model"]
     DISPATCHES["fedavg_grouped"] += 1
     DISPATCHES["fedavg_grouped_shards"] += d
@@ -483,9 +548,14 @@ def fedavg_grouped_dequant_sharded(
     if impl == "auto":
         impl = ("pallas" if (_on_tpu() or params.shape[-1] // d >= 4096)
                 else "naive")
-    return _sharded_agg_call(mesh, "grouped_dequant", impl, out_dtype)(
-        params, weights, gmask, wsum, gsel, scales, prev
-    )
+    call = _sharded_agg_call(mesh, "grouped_dequant", impl, out_dtype,
+                             bound is not None, side is not None)
+    operands = [params, weights, gmask, wsum, gsel, scales]
+    if bound is not None:
+        operands.append(jnp.full((1,), bound, jnp.float32))
+    if side is not None:
+        operands += [side[0], side[1]]
+    return call(*operands, prev)
 
 
 def fedavg_masked_sharded(

@@ -5,6 +5,8 @@ These are the semantics of record: kernel tests sweep shapes/dtypes and
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -105,6 +107,11 @@ def fedavg_masked(
     return out.astype(params.dtype)
 
 
+# jitted (static out_dtype): the armed quarantine variant adds half a dozen
+# elementwise ops — run op-by-op they each pay a full CPU dispatch, which
+# alone blows the bench's x1.15 faulted-round gate; under jit they fuse into
+# the einsum pass and the armed call stays one dispatch like the clean one
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
 def fedavg_grouped(
     params: jax.Array,  # [K, n] stacked client vectors, zero outside groups
     weights: jax.Array,  # [K] raw (NOT normalized) aggregation weights
@@ -113,6 +120,8 @@ def fedavg_grouped(
     prev: jax.Array | None = None,  # [n] passthrough where nobody covers a col
     *,
     out_dtype=None,  # result dtype; None = params.dtype (wire dtype ≠ result)
+    bound=None,  # quarantine gate: finite check + |p| > bound zeroes weight
+    side=None,  # (snum, sden) [n] associative merge inputs (stale panels)
 ) -> jax.Array:
     """Group-compressed ``fedavg_masked``: membership is identical within a
     structure group, so the per-client ``[K, n]`` mask collapses to a
@@ -126,12 +135,32 @@ def fedavg_grouped(
     Accumulated in f32; equals ``fedavg_masked`` with the expanded per-client
     mask up to f32 reduction order.  ``out_dtype`` decouples the result dtype
     from the panel's: a bf16-streamed panel (stream_dtype="bf16") still
-    aggregates to an f32 server vector."""
+    aggregates to an f32 server vector.
+
+    ``bound`` (ISSUE 8) arms the ON-DEVICE QUARANTINE GATE: any entry that
+    is non-finite or exceeds ``bound`` in magnitude is treated as if its
+    client had not covered that column — the entry contributes 0 to the
+    numerator and its weight is SUBTRACTED from the denominator, so the
+    surviving clients renormalize exactly as if the bad client's weight were
+    zero.  With ``bound=inf`` and an all-finite panel the gate degenerates
+    bitwise (all-false mask, ``den - 0.0``).  ``side`` adds associative
+    ``(num, den)`` pairs — the staleness-discounted straggler merge and the
+    seed of FedBuff-style partial aggregation: the per-column ratio is a
+    pure num/den pair, so late panels fold in by addition."""
     w = weights.astype(jnp.float32)
-    num = jnp.einsum("k,kn->n", w, params.astype(jnp.float32))
+    val = params.astype(jnp.float32)
     den = jnp.einsum(
         "g,gn->n", wsum.astype(jnp.float32), gmask.astype(jnp.float32)
     )
+    if bound is not None:
+        bad = ~jnp.isfinite(val) | (jnp.abs(val) > bound)
+        val = jnp.where(bad, 0.0, val)
+        den = den - jnp.einsum("k,kn->n", w, bad.astype(jnp.float32))
+    num = jnp.einsum("k,kn->n", w, val)
+    if side is not None:
+        snum, sden = side
+        num = num + snum.astype(jnp.float32)
+        den = den + sden.astype(jnp.float32)
     base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
     out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
     return out.astype(params.dtype if out_dtype is None else out_dtype)
@@ -209,6 +238,7 @@ def unpack_scale_exponents(packed: jax.Array) -> jax.Array:
     return jnp.stack([pi & 0xF, (pi >> 4) & 0xF], axis=1).reshape(-1)
 
 
+@jax.jit  # see fedavg_grouped: the armed variants must not pay op-by-op
 def fedavg_grouped_dequant(
     params: jax.Array,  # [K, n] int8 panel, zero outside groups
     weights: jax.Array,  # [K] raw weights
@@ -217,6 +247,9 @@ def fedavg_grouped_dequant(
     gsel: jax.Array,  # [K, G] one-hot row→group selector
     scales: jax.Array,  # [G, n] per-group per-column bf16 scales
     prev: jax.Array | None = None,  # [n] f32 passthrough
+    *,
+    bound=None,  # quarantine gate on the DEQUANTIZED values
+    side=None,  # (snum, sden) [n] associative merge inputs
 ) -> jax.Array:
     """Dequantizing :func:`fedavg_grouped`: the panel arrives int8 and the
     f32 values are reconstructed INSIDE the contraction — row ``k`` of group
@@ -227,13 +260,26 @@ def fedavg_grouped_dequant(
 
     (zero-denominator passthrough to ``prev`` as ever).  The f32 panel never
     exists as a buffer — only per-tile registers inside the kernel this
-    oracle specifies.  Output is f32 (the aggregate, not the wire dtype)."""
+    oracle specifies.  Output is f32 (the aggregate, not the wire dtype).
+    ``bound``/``side`` follow :func:`fedavg_grouped`'s quarantine/merge
+    semantics, with the gate applied to the DEQUANTIZED values (a poisoned
+    row can poison its group's scales — see fl/faults.py — so int8 corrupt
+    equivalence is finiteness, not 1e-5)."""
     w = weights.astype(jnp.float32)
     ps = jnp.dot(gsel.astype(jnp.float32), scales.astype(jnp.float32))
-    num = jnp.einsum("k,kn->n", w, params.astype(jnp.float32) * ps)
+    val = params.astype(jnp.float32) * ps
     den = jnp.einsum(
         "g,gn->n", wsum.astype(jnp.float32), gmask.astype(jnp.float32)
     )
+    if bound is not None:
+        bad = ~jnp.isfinite(val) | (jnp.abs(val) > bound)
+        val = jnp.where(bad, 0.0, val)
+        den = den - jnp.einsum("k,kn->n", w, bad.astype(jnp.float32))
+    num = jnp.einsum("k,kn->n", w, val)
+    if side is not None:
+        snum, sden = side
+        num = num + snum.astype(jnp.float32)
+        den = den + sden.astype(jnp.float32)
     base = jnp.zeros_like(num) if prev is None else prev.astype(jnp.float32)
     out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), base)
     return out
@@ -249,12 +295,15 @@ def fedavg_grouped_sharded(
     n_shards: int = 1,
     tile: int = 128,
     out_dtype=None,
+    bound=None,
+    side=None,
 ) -> jax.Array:
     """Column-shard decomposition oracle for the sharded aggregation
     (kernels/ops.py::fedavg_grouped_sharded / fl/engine.py): pad ``n`` up to
     ``n_shards`` tile-aligned column blocks, run :func:`fedavg_grouped` on
     each block independently, and concatenate.  The per-column ratio has no
-    cross-column coupling, so this is BITWISE identical to the unsharded
+    cross-column coupling — and the quarantine gate and side num/den merge
+    are per-column too — so this is BITWISE identical to the unsharded
     oracle — the invariant the shard_map path and the hypothesis property
     tests rely on."""
     K, n = params.shape
@@ -266,10 +315,15 @@ def fedavg_grouped_sharded(
     p = jnp.pad(params, ((0, 0), (0, pad)))
     gm = jnp.pad(gmask, ((0, 0), (0, pad)))
     pv = jnp.pad(prev, (0, pad))
+    if side is not None:
+        sn = jnp.pad(side[0], (0, pad))
+        sd = jnp.pad(side[1], (0, pad))
     outs = [
         fedavg_grouped(
             p[:, o : o + n_shard], weights, gm[:, o : o + n_shard], wsum,
-            pv[o : o + n_shard], out_dtype=out_dtype,
+            pv[o : o + n_shard], out_dtype=out_dtype, bound=bound,
+            side=None if side is None
+            else (sn[o : o + n_shard], sd[o : o + n_shard]),
         )
         for o in range(0, n_shard * n_shards, n_shard)
     ]

@@ -47,6 +47,18 @@ columns vs the unfrozen oracle), keep every round contract over the
 shrunken panel, and make the measured per-device panel/stream figures
 decay by the frozen fraction exactly as the memory model's
 ``n_frozen`` term predicts — including on the composed mesh.
+
+The FAULTS axis (ISSUE 8) stresses the same matrix with adversity: a
+fault-free :class:`fl.faults.FaultPlan` must be BIT-equal to ``faults=None``
+in every cell, dropped clients must match the zero-weight oracle bit-exactly
+(whole dropped groups falling back to the zero-denominator→prev
+passthrough), injected NaN/Inf/norm-blowup rows must leave the global
+params finite and within matrix tolerance of the without-that-client
+oracle (the in-kernel quarantine gate), stragglers must park and later
+merge at the staleness-discounted weight ``w·beta**s`` identically on the
+fused and serial paths, the one-dispatch/one-sync round contracts must
+hold UNDER injection, and ``AGG_STATS``'s fault telemetry must equal the
+``fl/memory_model.py`` twins exactly — including on the composed mesh.
 """
 import os
 import subprocess
@@ -59,6 +71,7 @@ import pytest
 
 from repro.core import progressive as P
 from repro.fl import engine as ENG
+from repro.fl import faults as FLT
 from repro.fl import memory_model as MM
 from repro.kernels import ops as OPS
 from repro.kernels.fedavg import AGG_TILE
@@ -958,6 +971,53 @@ assert all(bool(jnp.all(jnp.isfinite(l)))
            for l in jax.tree.leaves(got_q2.trainable))
 print("TRANSPORT_OK", MM2.agg_wire_bytes(g_sh, agg="sharded"), "ragged vs",
       MM2.agg_wire_bytes_uniform(g_sh, agg="sharded"), "uniform")
+
+# FAULTS (ISSUE 8) on the real composed mesh: a fault-free plan is
+# bit-equal to faults=None on the column-sharded path; a dropped + poisoned
+# round stays finite, matches the zero-weight vmap oracle without those
+# clients, and keeps replicated/sharded bit-equal; a straggler parks and
+# merges one round later with the telemetry to prove it
+from repro.fl import faults as FLT
+ok6 = FLT.all_ok(6)
+got_ok = eng.grouped_round(plans, tr, {}, agg="sharded", faults=ok6)
+for a, b in zip(jax.tree.leaves(got_s.trainable),
+                jax.tree.leaves(got_ok.trainable)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+fp = FLT.FaultPlan(verdicts=(
+    FLT.OK, FLT.ClientFault("dropped"), FLT.OK,
+    FLT.OK, FLT.ClientFault("corrupt", mode="nan"), FLT.OK,
+))
+got_fr = eng.grouped_round(plans, tr, {}, agg="replicated", faults=fp)
+got_ff = eng.grouped_round(plans, tr, {}, agg="sharded", faults=fp)
+assert all(bool(jnp.all(jnp.isfinite(l)))
+           for l in jax.tree.leaves(got_ff.trainable))
+for a, b in zip(jax.tree.leaves(got_fr.trainable),
+                jax.tree.leaves(got_ff.trainable)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+# client 1 is group 0 row 1, client 4 is group 1 row 1
+plans_zw = [p._replace(weights=p.weights * jnp.asarray([1.0, 0.0, 1.0]))
+            for p in plans]
+want_zw = ENG.make_engine("vmap").grouped_round(plans_zw, tr, {})
+err_f = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree.leaves(want_zw.trainable),
+                    jax.tree.leaves(got_ff.trainable))
+)
+assert err_f <= 1e-5, err_f
+
+sp = FLT.FaultPlan(verdicts=(
+    FLT.OK, FLT.OK, FLT.ClientFault("straggler", delay=1),
+    FLT.OK, FLT.OK, FLT.OK,
+))
+eng.grouped_round(plans, tr, {}, agg="sharded", faults=sp)
+assert ENG.AGG_STATS["fault_staged_rows"] == 1, dict(ENG.AGG_STATS)
+merged = eng.grouped_round(plans, tr, {}, agg="sharded", faults=ok6)
+assert ENG.AGG_STATS["fault_merged_rows"] == 1, dict(ENG.AGG_STATS)
+assert ENG.AGG_STATS["fault_staged_rows"] == 0, dict(ENG.AGG_STATS)
+assert all(bool(jnp.all(jnp.isfinite(l)))
+           for l in jax.tree.leaves(merged.trainable))
+print("FAULTS_OK", err_f)
 """
 
 
@@ -981,6 +1041,7 @@ def test_composed_mesh_sharded_agg_subprocess():
     assert "STREAM_SHARDED_OK" in out.stdout
     assert "FROZEN_OK" in out.stdout
     assert "TRANSPORT_OK" in out.stdout
+    assert "FAULTS_OK" in out.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -1219,3 +1280,337 @@ def test_int8_ef_mean_converges_to_fedavg(cnn_world):
     # single-round error bound (scale), asserted at 2x to absorb the
     # randomness of the final residual
     assert err_mean <= max(err1 / 2.0, 1e-7), (err_mean, err1)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance axis (ISSUE 8): dropouts, stragglers, poisoned updates
+# ---------------------------------------------------------------------------
+
+# mixed-world client index -> (group, row): 0-1 -> g0, 2-4 -> g1, 5-6 -> g2
+_K_MIXED = 7
+
+# tier-1 allowlist for the fault-free bit-equality cells; the rest run slow
+FAULTS_TIER1 = {
+    ("vmap", "serial", "replicated"),
+    ("packed", "serial", "replicated"),
+    ("packed", "fused", "replicated"),
+    ("packed", "fused", "sharded"),
+    ("packed", "fused_masked", "replicated"),
+    ("sharded", "fused", "sharded"),
+}
+
+
+def _plan_with(faults_by_client, **kw):
+    """A mixed-world FaultPlan with the given {client_index: ClientFault}."""
+    verdicts = [FLT.OK] * _K_MIXED
+    for i, v in faults_by_client.items():
+        verdicts[i] = v
+    return FLT.FaultPlan(verdicts=tuple(verdicts), **kw)
+
+
+def _zero_weight_plans(plans, dead):
+    """The oracle cohort: the same plans with the DEAD clients' aggregation
+    weights zeroed (they still train locally — exactly the engine's dropped
+    semantics)."""
+    out, o = [], 0
+    for p in plans:
+        k = int(p.xs.shape[0])
+        w = np.asarray(p.weights, np.float32).copy()
+        for i in range(k):
+            if o + i in dead:
+                w[i] = 0.0
+        out.append(p._replace(weights=jnp.asarray(w)))
+        o += k
+    return out
+
+
+def _bit_equal_rounds(a, b):
+    for x, y in zip(jax.tree.leaves(a.trainable), jax.tree.leaves(b.trainable)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+    for x, y in zip(jax.tree.leaves(a.bn_state), jax.tree.leaves(b.bn_state)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+    np.testing.assert_array_equal(np.float32(a.loss), np.float32(b.loss))
+
+
+def _faults_matrix():
+    for mode in MODES:
+        for impl in IMPLS:
+            for agg in AGGS:
+                marks = ()
+                if (mode, impl, agg) not in FAULTS_TIER1:
+                    marks = (pytest.mark.slow,)
+                yield pytest.param(mode, impl, agg, marks=marks,
+                                   id=f"{mode}-{impl}-{agg}")
+
+
+@pytest.mark.parametrize("mode,impl,agg", list(_faults_matrix()))
+def test_faults_fault_free_bit_equal(mode, impl, agg, mixed_world):
+    """A fault-free FaultPlan at the default ``norm_bound=inf`` is BIT-equal
+    to ``faults=None`` in every matrix cell: the unarmed plan takes every
+    fast path (no forced layout, clean kernel bodies, no ``*1.0``)."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine(mode)
+    base = eng.grouped_round(plans, gtr, gbn, impl=impl, agg=agg)
+    got = eng.grouped_round(plans, gtr, gbn, impl=impl, agg=agg,
+                            faults=FLT.all_ok(_K_MIXED))
+    _bit_equal_rounds(base, got)
+
+
+@pytest.mark.parametrize("sd", ("bf16", "int8"))
+def test_faults_fault_free_bit_equal_quantized(sd, mixed_world):
+    """The fault-free bit-equality survives the quantized wire too (fresh
+    engines per side so the int8 EF residuals start identical)."""
+    plans, gtr, gbn, _ = mixed_world
+    base = ENG.make_engine("packed", stream_dtype=sd).grouped_round(
+        plans, gtr, gbn, agg="sharded"
+    )
+    got = ENG.make_engine("packed", stream_dtype=sd).grouped_round(
+        plans, gtr, gbn, agg="sharded", faults=FLT.all_ok(_K_MIXED)
+    )
+    _bit_equal_rounds(base, got)
+
+
+@pytest.mark.parametrize("impl", ("fused", "fused_masked"))
+def test_faults_dropped_matches_zero_weight_oracle(impl, mixed_world):
+    """Dropped clients ARE zero-weight columns: bit-exact against the same
+    impl run on zero-weight plans (no re-trace, no new layout epoch), and
+    matrix-close to the vmap zero-weight oracle."""
+    plans, gtr, gbn, _ = mixed_world
+    dead = {1, 3}
+    fp = _plan_with({i: FLT.ClientFault("dropped") for i in dead})
+    eng = ENG.make_engine("packed")
+    got = eng.grouped_round(plans, gtr, gbn, impl=impl, faults=fp)
+    zw = _zero_weight_plans(plans, dead)
+    want_same_impl = eng.grouped_round(zw, gtr, gbn, impl=impl)
+    _bit_equal_rounds(want_same_impl, got)
+    oracle = ENG.make_engine("vmap").grouped_round(zw, gtr, gbn)
+    _tree_close(oracle.trainable, got.trainable)
+    _tree_close(oracle.bn_state, got.bn_state)
+
+
+def test_faults_dropped_whole_group_passthrough(mixed_world):
+    """Dropping an ENTIRE group reuses the kernels' zero-denominator→prev
+    passthrough: the columns only that group trains (w[6:8] — group 2 is
+    the sole full-width group) come back bit-equal to the round's input."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({5: FLT.ClientFault("dropped"),
+                     6: FLT.ClientFault("dropped")})
+    got = ENG.make_engine("packed").grouped_round(plans, gtr, gbn, faults=fp)
+    np.testing.assert_array_equal(np.asarray(got.trainable["w"][6:]),
+                                  np.asarray(gtr["w"][6:]))
+    # live columns still match the zero-weight oracle
+    oracle = ENG.make_engine("vmap").grouped_round(
+        _zero_weight_plans(plans, {5, 6}), gtr, gbn
+    )
+    _tree_close(oracle.trainable, got.trainable)
+
+
+@pytest.mark.parametrize("sd", ("f32", "bf16"))
+@pytest.mark.parametrize("mode", FLT.CORRUPT_MODES)
+def test_faults_corrupt_quarantined_in_kernel(mode, sd, mixed_world):
+    """A poisoned update (NaN / Inf / finite norm blowup) is zeroed by the
+    in-kernel quarantine gate: the global params stay finite and match the
+    vmap oracle WITHOUT that client at matrix tolerance.  NaN/Inf trip the
+    finite check alone (``norm_bound=inf``); the finite blowup needs the
+    configurable magnitude bound."""
+    plans, gtr, gbn, _ = mixed_world
+    kw = {"norm_bound": 1e6} if mode == "norm_blowup" else {}
+    fp = _plan_with({3: FLT.ClientFault("corrupt", mode=mode)}, **kw)
+    got = ENG.make_engine("packed", stream_dtype=sd).grouped_round(
+        plans, gtr, gbn, agg="sharded", faults=fp
+    )
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree.leaves(got.trainable))
+    zw = _zero_weight_plans(plans, {3})
+    if sd == "f32":
+        # the acceptance oracle: the vmap round without that client
+        oracle = ENG.make_engine("vmap").grouped_round(zw, gtr, gbn)
+    else:
+        # under a quantized wire the good rows round too: the oracle is
+        # the SAME-wire round without that client (the f32 comparison
+        # lives in the sd="f32" cells)
+        oracle = ENG.make_engine("packed", stream_dtype=sd).grouped_round(
+            zw, gtr, gbn, agg="sharded"
+        )
+    _tree_close(oracle.trainable, got.trainable)
+    _tree_close(oracle.bn_state, got.bn_state)
+
+
+def test_faults_corrupt_int8_stays_finite(mixed_world):
+    """Under the int8 wire a poisoned row also poisons the per-group bf16
+    quantization base, so exact equivalence is out of scope — but the
+    quarantine gate must still keep the aggregate finite."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({3: FLT.ClientFault("corrupt", mode="nan")})
+    got = ENG.make_engine("packed", stream_dtype="int8").grouped_round(
+        plans, gtr, gbn, agg="sharded", faults=fp
+    )
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree.leaves(got.trainable))
+
+
+def test_faults_straggler_parks_then_merges(mixed_world):
+    """Round 1: the straggler contributes nothing (bit-equal to dropping
+    it) and its CLEAN panel row parks in the engine staging buffer.  Round
+    2: the row merges at the staleness-discounted weight ``w·beta**1`` —
+    and the fused merge matches the serial host-side num/den reference
+    (both feed ``_staged_side``, so one staleness semantics by
+    construction).  The merge visibly moves the result."""
+    plans, gtr, gbn, _ = mixed_world
+    sp = _plan_with({2: FLT.ClientFault("straggler", delay=1)})
+    eng_f = ENG.make_engine("packed")
+    eng_s = ENG.make_engine("vmap")
+    r1f = eng_f.grouped_round(plans, gtr, gbn, faults=sp)
+    assert ENG.AGG_STATS["fault_staged_rows"] == 1
+    r1s = eng_s.grouped_round(plans, gtr, gbn, faults=sp)
+    r1d = ENG.make_engine("packed").grouped_round(
+        plans, gtr, gbn, faults=_plan_with({2: FLT.ClientFault("dropped")})
+    )
+    _bit_equal_rounds(r1d, r1f)
+    _tree_close(r1s.trainable, r1f.trainable)
+    assert len(eng_f._staging) == 1 and len(eng_s._staging) == 1
+
+    ok = FLT.all_ok(_K_MIXED)
+    r2f = eng_f.grouped_round(plans, gtr, gbn, faults=ok)
+    st = dict(ENG.AGG_STATS)
+    assert st["fault_merged_rows"] == 1 and st["fault_staged_rows"] == 0
+    assert not eng_f._staging
+    r2s = eng_s.grouped_round(plans, gtr, gbn, faults=ok)
+    _tree_close(r2s.trainable, r2f.trainable)
+    _tree_close(r2s.bn_state, r2f.bn_state)
+    # power: the merged round differs from the same round without the merge
+    base2 = ENG.make_engine("packed").grouped_round(plans, gtr, gbn)
+    assert not np.array_equal(np.asarray(r2f.packed),
+                              np.asarray(base2.packed))
+
+
+def test_faults_staging_buffer_bounded(mixed_world):
+    """``max_staged`` caps what persists past the round, oldest first; an
+    evicted straggler leaves no trace — the next fault-free round is
+    bit-equal to ``faults=None`` again."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    sp = _plan_with({2: FLT.ClientFault("straggler", delay=2)}, max_staged=0)
+    eng.grouped_round(plans, gtr, gbn, faults=sp)
+    st = dict(ENG.AGG_STATS)
+    assert st["fault_evicted_rows"] == 1
+    assert st["fault_staged_rows"] == 0 and not eng._staging
+    base = ENG.make_engine("packed").grouped_round(plans, gtr, gbn)
+    got = eng.grouped_round(plans, gtr, gbn, faults=FLT.all_ok(_K_MIXED))
+    _bit_equal_rounds(base, got)
+
+
+def test_faults_round_contracts_under_injection(mixed_world):
+    """The amended round contracts: one logical ``fedavg_grouped`` dispatch
+    and one ``block_until_ready`` — measured on a round that drops a
+    client, parks a straggler, AND quarantines a poisoned row, and again on
+    the following round that merges the parked panel."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({
+        1: FLT.ClientFault("dropped"),
+        2: FLT.ClientFault("straggler", delay=1),
+        4: FLT.ClientFault("corrupt", mode="norm_blowup"),
+    }, norm_bound=1e6)
+    ok = FLT.all_ok(_K_MIXED, norm_bound=1e6)
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded", faults=fp)   # warm
+    eng.grouped_round(plans, gtr, gbn, agg="sharded", faults=ok)   # warm merge
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        for faults in (fp, ok):  # injection round, then merge round
+            OPS.reset_dispatches()
+            ENG.reset_syncs()
+            calls.clear()
+            eng.grouped_round(plans, gtr, gbn, agg="sharded", faults=faults)
+            assert OPS.DISPATCHES["fedavg_grouped"] == 1
+            assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+            assert ENG.SYNCS["aggregation_barrier"] == 1
+    finally:
+        jax.block_until_ready = real
+    ENG.reset_syncs()
+    OPS.reset_dispatches()
+
+
+def test_faults_agg_stats_match_memory_model_twins(mixed_world):
+    """The fault telemetry is metadata, never a sync — and it must equal
+    the ``fl/memory_model.py`` twins EXACTLY: verdict counts via
+    ``fault_counts``, staging occupancy via ``fault_staging_bytes``, and
+    the staging term joining ``server_aggregation_peak_bytes``."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({
+        0: FLT.ClientFault("dropped"),
+        2: FLT.ClientFault("straggler", delay=3),
+        5: FLT.ClientFault("corrupt", mode="nan"),
+    }, norm_bound=1e5)
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, faults=fp)
+    st = dict(ENG.AGG_STATS)
+    want = MM.fault_counts([v.kind for v in fp.verdicts])
+    assert want == fp.counts()
+    assert st["faults_armed"] and st["quarantine_bound"] == 1e5
+    assert st["fault_ok"] == want["ok"]
+    assert st["fault_dropped"] == want["dropped"]
+    assert st["fault_stragglers"] == want["straggler"]
+    assert st["fault_corrupt"] == want["corrupt"]
+    widths = [int(e.vals.shape[0]) for e in eng._staging]
+    assert st["fault_staged_rows"] == len(widths) == 1
+    assert st["fault_staging_bytes"] == MM.fault_staging_bytes(widths)
+    layout = ENG.make_group_layout(plans, gtr, gbn, force_index=True)
+    base = MM.server_aggregation_peak_bytes(
+        layout.k_total, layout.n, layout.n_groups
+    )
+    with_staging = MM.server_aggregation_peak_bytes(
+        layout.k_total, layout.n, layout.n_groups,
+        staging_bytes=st["fault_staging_bytes"],
+    )
+    assert with_staging == base + st["fault_staging_bytes"]
+    eng.reset_faults()
+    assert not eng._staging and eng._fault_round == 0
+    # an unarmed round reports disarmed telemetry
+    eng.grouped_round(plans, gtr, gbn)
+    st0 = dict(ENG.AGG_STATS)
+    assert not st0["faults_armed"] and st0["quarantine_bound"] is None
+    assert st0["fault_staged_rows"] == 0 and st0["fault_staging_bytes"] == 0
+
+
+def test_faults_knob_validation(mixed_world):
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    with pytest.raises(TypeError):
+        eng.grouped_round(plans, gtr, gbn, faults="dropped")
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, faults=FLT.all_ok(_K_MIXED - 1))
+    # the masked kernel has no quarantine gate or merge side inputs:
+    # fused_masked accepts dropped-only armed plans, nothing else
+    with pytest.raises(ValueError):
+        eng.grouped_round(
+            plans, gtr, gbn, impl="fused_masked",
+            faults=_plan_with({3: FLT.ClientFault("corrupt", mode="nan")}),
+        )
+    with pytest.raises(ValueError):
+        eng.grouped_round(
+            plans, gtr, gbn, impl="fused_masked",
+            faults=_plan_with({2: FLT.ClientFault("straggler", delay=1)}),
+        )
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, impl="fused_masked",
+                          faults=FLT.all_ok(_K_MIXED, norm_bound=10.0))
+    # a parked straggler blocks fused_masked on the NEXT round too (the
+    # merge side inputs only exist on the grouped kernels)
+    eng.grouped_round(
+        plans, gtr, gbn,
+        faults=_plan_with({2: FLT.ClientFault("straggler", delay=1)}),
+    )
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, impl="fused_masked",
+                          faults=FLT.all_ok(_K_MIXED))
+    eng.reset_faults()
