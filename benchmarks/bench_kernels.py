@@ -69,6 +69,16 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     record also parks a straggler and asserts the engine staging-buffer
     bytes, quarantine/dropout counters, and merged-row counts all equal
     their ``memory_model`` twins (plan metadata, no extra sync).
+  * NEW (PR 9): the ``async`` record drives the gate cell through the
+    buffered-aggregation server (``fl/async_server.py``): publishes/sec vs
+    sync rounds/sec (a staleness-0 publish makes the verbatim
+    ``grouped_round`` call, so it gates within x1.15 of the sync round —
+    the buffer/version bookkeeping must stay host metadata, not device
+    work), the buffer's peak byte occupancy asserted equal to the
+    ``memory_model.async_buffer_bytes`` twin (deterministic, always), a
+    one-dispatch check per publish, and an ungated stale-publish data
+    point (one group a version behind, β=0.9) recording the staleness
+    histogram and wall clock of the side-merge path.
 
 The per-shard kernel launches a sharded round fans out to are recorded in
 the JSON under ``dispatches`` (``fedavg_grouped_shards`` = D per logical
@@ -170,6 +180,7 @@ def bench(ctx: dict, full: bool = False, record: dict = None):
         "freeze_decay": _bench_freeze_decay(smoke=False, sink=record),
         "transport": _bench_transport(smoke=False, sink=record),
         "faults": _bench_faults(smoke=False, sink=record),
+        "async": _bench_async(smoke=False, sink=record),
     }
 
 
@@ -679,6 +690,144 @@ def _bench_faults(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
     return res
 
 
+# async-publish gate at the gate cell (ISSUE 9): a staleness-0 publish
+# makes the VERBATIM grouped_round call, so it may only cost the host-side
+# buffer/version bookkeeping on top of the sync round — x1.15, same budget
+# as the quarantine gate
+ASYNC_GATE_TOL = 1.15
+
+
+def _bench_async(smoke: bool, sink: dict = None, iters: int = 5) -> dict:
+    """Async buffered-aggregation record (ISSUE 9) at the gate cell:
+    publishes/sec through ``fl/async_server.py::AsyncAggServer`` vs sync
+    rounds/sec through ``grouped_round`` on the identical cohort, the sync
+    side state-churned like a real training loop (each round's output
+    feeds the next — the server pays the identical churn through
+    ``self.trainable``, so a constant-input baseline would overstate the
+    async overhead).  Gated in smoke mode (one noise-absorbing retry): the
+    staleness-0 publish within ``ASYNC_GATE_TOL`` of the sync round.  Gated always (deterministic):
+    the buffer's peak byte occupancy — both the server's own accounting and
+    the measured ``AGG_STATS`` figure — equal to the
+    ``memory_model.async_buffer_bytes`` twin, and exactly ONE
+    ``fedavg_grouped`` dispatch per publish.  Also records an ungated
+    stale-publish point (one group a version behind at β=0.9: the parked
+    rows ride the publish's side inputs) with its staleness histogram.
+    ``sink`` receives the result dict before any gate can fire."""
+    from repro.fl import async_server as AS
+    from repro.fl import engine as ENG
+    from repro.fl import memory_model as MM
+
+    d = 128 if smoke else 1024
+    G, kpg = GATE_CELL
+    plans, gtr = _make_width_plans(d, G, kpg)
+    k_total = G * kpg
+    layout = ENG.make_group_layout(plans, gtr, {})
+    res = {"G": G, "k_total": k_total, "n": layout.n,
+           "publish_at": k_total}
+    if sink is not None:
+        sink["async"] = res
+
+    # the sync baseline carries its state round to round (a real training
+    # loop feeds each round's output into the next) — a constant-input
+    # round would understate the sync side and overstate the async
+    # overhead, since the server pays the same churn via self.trainable
+    eng_sync = ENG.make_engine("packed")
+    sync_state = {"tr": gtr}
+
+    def one_sync_round():
+        res = eng_sync.grouped_round(plans, sync_state["tr"], {})
+        sync_state["tr"] = res.trainable
+        return res.loss
+
+    one_sync_round()  # warm the sync compiles
+
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, {},
+                            publish_at=k_total)
+
+    def one_publish():
+        for p in plans:
+            srv.submit(p, srv.version)
+        return srv.publish().loss
+
+    one_publish()  # warm (the same compiles — the call is verbatim)
+    # deterministic gates on a fully-buffered cohort: the server's peak
+    # buffer accounting, the measured AGG_STATS figure, and the analytic
+    # twin must agree (per-plan row panels cover the plan's own columns)
+    for p in plans:
+        srv.submit(p, srv.version)
+    peak = srv.buffer_bytes()
+    model = MM.async_buffer_bytes(
+        [(e.k, e.n_cols) for e in srv.buffer]
+    )
+    assert peak == model, (
+        f"async: server buffer accounting {peak} != memory-model twin "
+        f"{model}"
+    )
+    ops.reset_dispatches()
+    srv.publish()
+    assert ops.DISPATCHES.get("fedavg_grouped") == 1, dict(ops.DISPATCHES)
+    ops.reset_dispatches()
+    st = dict(ENG.AGG_STATS)
+    assert st["async_buffer_bytes"] == model, (
+        f"async: measured AGG_STATS buffer bytes {st['async_buffer_bytes']} "
+        f"!= memory-model twin {model}"
+    )
+    res.update(buffer_peak_bytes=peak, buffer_peak_bytes_model=model)
+
+    for attempt in range(2):
+        us_sync = C.time_call(one_sync_round, iters=iters)
+        us_pub = C.time_call(one_publish, iters=iters)
+        res.update(
+            sync_round_us=us_sync, async_publish_us=us_pub,
+            overhead_async_vs_sync=us_pub / us_sync,
+            sync_rounds_per_sec=1e6 / us_sync,
+            async_publishes_per_sec=1e6 / us_pub,
+        )
+        if not smoke or us_pub <= us_sync * ASYNC_GATE_TOL:
+            break  # retry once: shared-runner noise, not a regression
+    C.emit("kernels/async_publish", us_pub,
+           f"sync_us={us_sync:.1f} overhead={us_pub / us_sync:.2f}x "
+           f"publishes_s={1e6 / us_pub:.1f} buffer_bytes={peak}")
+    if smoke:
+        assert us_pub <= us_sync * ASYNC_GATE_TOL, (
+            f"perf regression: the async publish ({us_pub:.1f}us) costs "
+            f"more than x{ASYNC_GATE_TOL} the sync round ({us_sync:.1f}us) "
+            f"at G={G}, K={k_total} on both attempts — the buffer/version "
+            f"bookkeeping must stay host-side metadata"
+        )
+
+    # ungated stale-publish data point: one group reports a version late,
+    # its rows park in the engine staging buffer and merge as w*beta^s side
+    # inputs riding the publish's single dispatch
+    srv_st = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, {},
+                               publish_at=k_total, beta=0.9)
+    for p in plans:
+        srv_st.submit(p, srv_st.version)
+    srv_st.publish()
+
+    def stale_publish():
+        srv_st.submit(plans[0], srv_st.version - 1)  # one group at s=1
+        for p in plans[1:]:
+            srv_st.submit(p, srv_st.version)
+        srv_st.submit(plans[0], srv_st.version)  # keep k_fresh == k_total
+        return srv_st.publish().loss
+
+    stale_publish()  # warm the armed side-merge compiles
+    us_st = C.time_call(stale_publish, iters=max(2, iters // 2))
+    st_s = dict(ENG.AGG_STATS)
+    res["stale"] = {
+        "publish_us": us_st,
+        "stale_rows": st_s["async_stale_rows"],
+        "staleness_hist": {str(k): v for k, v in
+                           st_s["async_staleness_hist"].items()},
+    }
+    assert st_s["async_stale_rows"] == kpg
+    C.emit("kernels/async_publish_stale", us_st,
+           f"stale_rows={st_s['async_stale_rows']} "
+           f"hist={st_s['async_staleness_hist']}")
+    return res
+
+
 # freeze-decay schedule: fraction of PANEL columns frozen at each freeze
 # point.  Leading columns freeze first (leading blocks converge first —
 # the order the Table 4 freezing benchmark's EM determination produces on
@@ -880,6 +1029,13 @@ COMPARE_TRANSPORT_KEYS = (("wire_bytes", False), ("round_us", True))
 # the wall factor; the staging bytes are deterministic plan metadata
 COMPARE_FAULTS_KEYS = (("overhead_faulted_vs_clean", True),
                        ("faulted_us", True))
+# async gate (ISSUE 9): the publish-vs-sync overhead ratio is common-mode
+# (both sides timed seconds apart in one run) and gates at the wall factor
+# with the absolute publish wall clock; the buffer peak bytes are
+# deterministic plan metadata and gate tight at x1.5
+COMPARE_ASYNC_KEYS = (("overhead_async_vs_sync", True),
+                      ("async_publish_us", True),
+                      ("buffer_peak_bytes", False))
 
 
 def compare_trajectories(new: dict, seed: dict,
@@ -1020,6 +1176,18 @@ def compare_trajectories(new: dict, seed: dict,
     nst = nfa.get("straggler", {})
     check("faults.straggler.staging_bytes", nst.get("staging_bytes"),
           sst.get("staging_bytes"), False)
+    # async gate (ISSUE 9): publish overhead ratio and wall clock at x3,
+    # buffer peak bytes deterministic at x1.5; an async section present in
+    # the seed and missing from the fresh record fails like any other
+    # gated metric — the round-barrier-free path must not silently lose
+    # its regression gate
+    nas, sas = new.get("async", {}), seed.get("async", {})
+    if sas and not nas:
+        fails.append(
+            ("async: section missing from the fresh record", False)
+        )
+    for mkey, wall in COMPARE_ASYNC_KEYS:
+        check(f"async.{mkey}", nas.get(mkey), sas.get(mkey), wall)
     return fails, checked[0]
 
 
@@ -1062,6 +1230,7 @@ def main() -> None:
             _bench_freeze_decay(smoke=True, sink=sink)
             _bench_transport(smoke=True, sink=sink)
             _bench_faults(smoke=True, sink=sink)
+            _bench_async(smoke=True, sink=sink)
         else:
             bench({}, full=args.full, record=sink)
 

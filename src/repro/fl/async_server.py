@@ -1,0 +1,569 @@
+"""FedBuff-style async buffered aggregation: drop the round barrier.
+
+:class:`AsyncAggServer` (ISSUE 9) inverts the engine's control flow — a
+VERSIONED global model server consumes a continuous stream of client update
+submissions instead of running a synchronous round loop:
+
+* every submission is tagged with the global **version** it trained against
+  (``checkout()`` hands out ``(version, trainable, bn_state)``);
+* submissions accumulate in a bounded FIFO **buffer** (whole-submission
+  eviction, oldest first, when the row cap is exceeded);
+* whenever the buffer holds ``publish_at`` rows the server **publishes** a
+  new global version: buffered rows are folded through the engine's
+  EXISTING associative staleness merge — stale rows (version < current)
+  park in ``CohortEngine._staging`` as :class:`~repro.fl.engine.StagedPanel`
+  entries and ride the ``(snum, sden)`` side inputs at the discounted
+  weight ``w·β^s`` (``s`` = publish version − trained version), exactly
+  :func:`repro.fl.engine._staged_side`'s semantics — so every publish is
+  still ONE logical ``fedavg_grouped`` dispatch + ONE ``block_until_ready``
+  and composes with every engine knob (``impl``, agg placement,
+  ``stream_dtype``/``inflight``, :class:`FrozenColumns`, ``FaultPlan``).
+
+**The sync round is the oracle, by construction.**  With staleness-0
+scheduling and ``publish_at == cohort size``, a publish's buffer holds only
+fresh plan submissions and the server makes the VERBATIM
+``engine.grouped_round(plans, ...)`` call today's round loop makes — the
+synchronous round is a special case of the async server, not a parallel
+code path, and the conformance matrix pins the two bit-equal
+(tests/test_contract.py's ASYNC axis).
+
+Publishes are deterministic in the submission stream: buffered rows fold in
+the canonical ``(version, tag, seq)`` order (``tag`` defaults to the arrival
+sequence number), so any arrival-order permutation of same-version
+submissions that carries stable tags publishes an identical model —
+num/den associativity made testable (tests/test_properties.py).
+
+A publish whose buffer holds ONLY stale rows still works: the server runs a
+degenerate zero-weight dispatch whose side inputs carry the whole update
+(``(0 + snum) / (0 + sden)`` with the kernels' zero-denominator → ``prev``
+passthrough for untouched columns).  Such a publish reports loss 0.0 (side
+rows carry no loss, matching the engine's straggler-merge semantics) and
+runs replicated on the default device — a rows-only publish has no group
+panel to place, so the agg knob has nothing to shard.
+
+:class:`ArrivalSimulator` supplies deterministic seeded arrival schedules
+(per-``(seed, round)`` latency draws via ``np.random.default_rng``) so a
+run's staleness distribution is reproducible; :class:`AsyncConfig` is the
+knob bundle ``FLConfig.async_agg``/the baselines wire through.  Buffer
+occupancy, the staleness histogram, and the bounded version table are
+surfaced through ``AGG_STATS`` ``async_*`` fields, twinned by
+``fl/memory_model.py::async_buffer_bytes``/``async_version_table_bytes``/
+``async_staleness_hist``.  Checkpointing: :func:`async_state_to_tree` /
+:func:`async_state_from_tree` round-trip the version counter and buffer
+contents (as materialized rows) through ``train/checkpoint.py``; a restored
+mid-stream server's subsequent stale-row publishes are bit-identical to the
+never-stopped server's.  Materialized row panels are device buffers and are
+dropped by ``engine.clear_caches()`` (re-materialized on demand) via the
+clear-hook this module registers at import.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import engine as ENG
+from repro.fl import faults as FLT
+from repro.fl import memory_model as MM
+from repro.kernels import ops
+
+
+class Submission:
+    """One buffered client-update submission: either a live
+    :class:`~repro.fl.engine.GroupPlan` (local training not yet run — the
+    usual path) or pre-materialized rows (checkpoint restore, or the raw
+    ``submit_rows`` wire API).  ``tag`` is the caller's stable ordering key
+    for the canonical ``(version, tag, seq)`` publish order; it defaults to
+    the arrival sequence number ``seq``."""
+
+    __slots__ = ("plan", "rows", "version", "tag", "seq", "k", "n_cols")
+
+    def __init__(self, *, plan, rows, version, tag, seq, k, n_cols):
+        self.plan = plan  # GroupPlan | None
+        self.rows = rows  # (vals [k, n_cols], weights [k], idx [n_cols]) | None
+        self.version = version  # global version the update trained against
+        self.tag = tag  # Optional[int] canonical ordering key
+        self.seq = seq  # monotone arrival id
+        self.k = k  # client rows
+        self.n_cols = n_cols  # columns the update covers (n_g)
+
+    @property
+    def sort_key(self):
+        return (self.version, self.seq if self.tag is None else self.tag,
+                self.seq)
+
+
+def _tree_cols(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+# live servers, so engine.clear_caches() can drop materialized row device
+# buffers without a module cycle (engine never imports this module)
+_SERVERS: "weakref.WeakSet[AsyncAggServer]" = weakref.WeakSet()
+
+
+def _drop_all_row_buffers() -> None:
+    for srv in list(_SERVERS):
+        srv.drop_row_buffers()
+
+
+ENG.register_clear_hook(_drop_all_row_buffers)
+
+
+class AsyncAggServer:
+    """Versioned buffered-aggregation server over a
+    :class:`~repro.fl.engine.CohortEngine` (module docstring for the
+    control-flow story).
+
+    ``publish_at`` rows trigger a publish; ``beta`` prices staleness
+    (merge weight ``w·β^s``); ``max_buffer`` bounds buffered rows (FIFO
+    whole-submission eviction, a lone over-sized submission is kept);
+    ``max_versions`` bounds the checkout version table.  ``frozen`` /
+    ``impl`` / ``agg`` / ``stream_dtype`` / ``inflight`` are forwarded
+    verbatim to ``engine.grouped_round`` on every fresh publish — the
+    sync-oracle contract is that this call IS the sync round.  ``frozen``
+    is a plain mutable attribute: a freeze epoch may advance between
+    publishes (parked rows carry stable full-space ids, so narrowing
+    composes)."""
+
+    def __init__(self, engine: ENG.CohortEngine, trainable, bn_state, *,
+                 publish_at: int, beta: float = 1.0, max_buffer: int = 256,
+                 max_versions: int = 4, frozen=None, impl: Optional[str] = None,
+                 agg: Optional[str] = None, stream_dtype: Optional[str] = None,
+                 inflight: Optional[int] = None):
+        if publish_at < 1:
+            raise ValueError("publish_at must be >= 1")
+        if not (0.0 < beta <= 1.0):
+            raise ValueError("beta must be in (0, 1]")
+        if max_buffer < publish_at:
+            raise ValueError("max_buffer must be >= publish_at")
+        if max_versions < 1:
+            raise ValueError("max_versions must be >= 1")
+        self.engine = engine
+        self.trainable, self.bn_state = trainable, bn_state
+        self.publish_at, self.beta = publish_at, beta
+        self.max_buffer, self.max_versions = max_buffer, max_versions
+        self.frozen = frozen
+        self.impl, self.agg = impl, agg
+        self.stream_dtype, self.inflight = stream_dtype, inflight
+        self.version = 0
+        self.publishes = 0
+        self.evicted = 0  # cumulative rows dropped by buffer eviction
+        self.buffer: List[Submission] = []
+        self._versions: "OrderedDict[int, tuple]" = OrderedDict(
+            {0: (trainable, bn_state)}
+        )
+        self._seq = 0
+        self._n = (ENG.make_pack_spec(trainable).n
+                   + ENG.make_pack_spec(bn_state).n)
+        self._last_hist: dict = {}
+        _SERVERS.add(self)
+
+    # ------------------------------------------------------------------
+    # client-facing API
+    # ------------------------------------------------------------------
+    @property
+    def buffer_rows(self) -> int:
+        return sum(e.k for e in self.buffer)
+
+    def buffer_bytes(self) -> int:
+        """Analytic f32 byte footprint of the buffered rows — the
+        memory-model twin input (``MM.async_buffer_bytes``)."""
+        return MM.async_buffer_bytes([(e.k, e.n_cols) for e in self.buffer])
+
+    def checkout(self, version: Optional[int] = None):
+        """``(version, trainable, bn_state)`` for a client to train
+        against.  ``None`` → the current version; older versions stay
+        checkable until they age out of the bounded table (KeyError)."""
+        v = self.version if version is None else version
+        tr, bn = self._versions[v]
+        return v, tr, bn
+
+    def submit(self, plan: ENG.GroupPlan, version: int, *,
+               tag: Optional[int] = None) -> Submission:
+        """Buffer one group's update as a live plan (local training runs
+        lazily, against the trees ``plan`` itself carries — i.e. the
+        version the client checked out)."""
+        if not (0 <= version <= self.version):
+            raise ValueError(
+                f"submission version {version} outside [0, {self.version}]"
+            )
+        e = Submission(plan=plan, rows=None, version=version, tag=tag,
+                       seq=self._seq, k=int(plan.xs.shape[0]),
+                       n_cols=_tree_cols(plan.trainable)
+                       + _tree_cols(plan.bn_state))
+        self._seq += 1
+        self.buffer.append(e)
+        self._evict()
+        return e
+
+    def submit_rows(self, vals, weights, version: int, *, idx=None,
+                    tag: Optional[int] = None) -> Submission:
+        """Buffer pre-materialized update rows — the raw wire form
+        (``vals [k, m]`` client-trained parameter rows, ``weights [k]``,
+        ``idx [m]`` stable global column ids; ``None`` = the full column
+        space).  Rows are held on HOST until a publish folds them."""
+        if not (0 <= version <= self.version):
+            raise ValueError(
+                f"submission version {version} outside [0, {self.version}]"
+            )
+        vals = np.asarray(vals, np.float32)
+        weights = np.asarray(weights, np.float32)
+        idx = (np.arange(self._n, dtype=np.int64) if idx is None
+               else np.asarray(idx, np.int64))
+        if vals.ndim != 2 or vals.shape[1] != idx.shape[0]:
+            raise ValueError(
+                f"vals {vals.shape} does not cover idx {idx.shape}"
+            )
+        if weights.shape != (vals.shape[0],):
+            raise ValueError("weights must be [k]")
+        e = Submission(plan=None, rows=(vals, weights, idx), version=version,
+                       tag=tag, seq=self._seq, k=int(vals.shape[0]),
+                       n_cols=int(vals.shape[1]))
+        self._seq += 1
+        self.buffer.append(e)
+        self._evict()
+        return e
+
+    def _evict(self) -> None:
+        while self.buffer_rows > self.max_buffer and len(self.buffer) > 1:
+            gone = self.buffer.pop(0)
+            self.evicted += gone.k
+
+    def ready(self) -> bool:
+        return self.buffer_rows >= self.publish_at
+
+    # ------------------------------------------------------------------
+    # publish
+    # ------------------------------------------------------------------
+    def _materialize(self, e: Submission):
+        """``(vals [k, n_g] f32, weights [k] np, idx [n_g] np)`` for a
+        buffered submission, running the plan's local training if needed
+        (cached on the entry; the cached device panel is what
+        ``drop_row_buffers`` releases)."""
+        if e.rows is not None:
+            return e.rows
+        plan = e.plan
+        lay = ENG.make_group_layout([plan], self.trainable, self.bn_state,
+                                    force_index=True)
+        if lay.n != self._n:
+            raise ValueError(
+                f"submission column space {lay.n} != server space {self._n}"
+            )
+        eng = self.engine
+        if eng.mode == "sharded" and eng.mesh is not None:
+            a = ENG._align_for_mesh(eng.mesh, (
+                plan.trainable, plan.frozen, plan.bn_state, plan.xs, plan.ys,
+                plan.rngs,
+            ))
+            vals, _ = ENG._group_local_pack_sharded(
+                plan.loss_fn, *a, lr=plan.lr, local_steps=plan.local_steps,
+                batch_size=plan.batch_size, mesh=eng.mesh,
+            )
+        else:
+            vals, _ = ENG._group_local_pack(
+                plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
+                plan.xs, plan.ys, plan.rngs, lr=plan.lr,
+                local_steps=plan.local_steps, batch_size=plan.batch_size,
+            )
+        rows = (vals.astype(jnp.float32), np.asarray(plan.weights, np.float32),
+                lay.idx[0], )
+        e.rows = rows
+        return rows
+
+    def drop_row_buffers(self) -> None:
+        """Release cached materialized row panels for entries that can
+        re-run their plan (checkpoint/clear_caches hygiene: buffered device
+        buffers must not pin HBM across a cache clear).  Row-only entries
+        (``plan is None``) hold host arrays and keep them."""
+        for e in self.buffer:
+            if e.plan is not None:
+                e.rows = None
+
+    def _park_stale(self, entries: Sequence[Submission],
+                    fault_round: int) -> dict:
+        """Park every row of ``entries`` in the engine staging buffer so the
+        publish's ONE dispatch folds them as ``w·β^s`` side inputs:
+        ``born = fault_round − s`` makes the engine's
+        ``β**(fault_round − born)`` discount exactly ``β**s``."""
+        hist: dict = {}
+        for e in entries:
+            vals, w, idx = self._materialize(e)
+            s = self.version - e.version
+            hist[s] = hist.get(s, 0) + e.k
+            for r in range(e.k):
+                self.engine._staging.append(ENG.StagedPanel(
+                    vals=jnp.asarray(vals[r], jnp.float32), idx=idx,
+                    weight=float(w[r]), born=fault_round - s,
+                    due=fault_round, n=self._n,
+                ))
+        return hist
+
+    def publish(self, *, faults: Optional[FLT.FaultPlan] = None,
+                faults_fn: Optional[Callable[[int], object]] = None):
+        """Drain the buffer into ONE new global version (module docstring
+        for semantics).  ``faults`` arms the publish's fresh cohort with an
+        explicit :class:`FaultPlan` (its ``beta`` must match the server's
+        when stale rows are in flight — one staleness price per publish);
+        ``faults_fn(k_fresh)`` lazily samples one sized to the fresh
+        cohort.  Returns the engine's :class:`GroupedResult`."""
+        if not self.buffer:
+            raise ValueError("publish() with an empty buffer")
+        pre_rows, pre_bytes = self.buffer_rows, self.buffer_bytes()
+        entries = sorted(self.buffer, key=lambda e: e.sort_key)
+        self.buffer = []
+        fresh = [e for e in entries
+                 if e.plan is not None and e.version == self.version]
+        stale = [e for e in entries if e not in fresh]
+        k_fresh = sum(e.k for e in fresh)
+        fplan = faults if faults is not None else (
+            faults_fn(k_fresh) if faults_fn is not None else None
+        )
+        eng = self.engine
+        hist = self._park_stale(stale, eng._fault_round + 1)
+        hist_fresh = dict(hist)
+        if k_fresh:
+            hist_fresh[0] = hist_fresh.get(0, 0) + k_fresh
+
+        if fresh:
+            if fplan is None and eng._staging:
+                # staging in flight needs an ARMED plan for the side merge;
+                # all-ok at the server's β keeps fresh rows untouched
+                fplan = FLT.all_ok(
+                    k_fresh, beta=self.beta,
+                    max_staged=max(8, len(eng._staging)),
+                )
+            elif fplan is not None and stale and fplan.beta != self.beta:
+                raise ValueError(
+                    f"FaultPlan.beta={fplan.beta} != server beta={self.beta}"
+                    " with stale rows in flight — one staleness price per"
+                    " publish"
+                )
+            # THE sync round: at staleness 0 with publish_at == cohort size
+            # this call is bit-identical to today's grouped_round loop
+            res = eng.grouped_round(
+                [e.plan for e in fresh], self.trainable, self.bn_state,
+                impl=self.impl, agg=self.agg, frozen=self.frozen,
+                stream_dtype=self.stream_dtype, inflight=self.inflight,
+                faults=fplan,
+            )
+        else:
+            res = self._publish_side_only(fplan)
+
+        self.version += 1
+        self.publishes += 1
+        self.trainable, self.bn_state = res.trainable, res.bn_state
+        self._versions[self.version] = (self.trainable, self.bn_state)
+        while len(self._versions) > self.max_versions:
+            self._versions.popitem(last=False)
+        self._last_hist = hist_fresh
+        ENG.AGG_STATS.update(
+            async_version=self.version,
+            async_publishes=self.publishes,
+            async_published_rows=pre_rows,
+            async_fresh_rows=k_fresh,
+            async_stale_rows=pre_rows - k_fresh,
+            async_staleness_hist=hist_fresh,
+            async_buffer_rows=pre_rows,
+            async_buffer_bytes=pre_bytes,
+            async_buffer_evicted=self.evicted,
+            async_versions_retained=len(self._versions),
+            async_version_table_bytes=MM.async_version_table_bytes(
+                len(self._versions), self._n
+            ),
+        )
+        return res
+
+    def _publish_side_only(self, fplan):
+        """Degenerate publish with no fresh plans: a zero-weight single-row
+        carrier dispatch whose ``(snum, sden)`` side inputs hold the entire
+        update — ``(0 + snum)/(0 + sden)`` with zero-denominator → ``prev``
+        passthrough.  Still one ``fedavg_grouped`` dispatch + one
+        ``block_until_ready``; loss is 0.0 (side rows carry no loss).  Runs
+        replicated on the default device — with no group panel there is
+        nothing for the agg placement to shard."""
+        eng = self.engine
+        eng._fault_round += 1
+        fr = eng._fault_round
+        due, evicted = ENG._collect_due_staged(eng._staging, fr, self._n)
+        max_staged = fplan.max_staged if fplan is not None else max(
+            8, len(eng._staging)
+        )
+        while len(eng._staging) > max_staged:
+            eng._staging.pop(0)
+        snum, sden = ENG._staged_side(due, self.beta, fr, self._n)
+        spec_tr = ENG.make_pack_spec(self.trainable)
+        spec_bn = ENG.make_pack_spec(self.bn_state)
+        # the globals may be committed to a multi-device mesh (a sharded
+        # publish's output) — land them beside the side vectors first
+        dev0 = jax.devices()[0]
+        tr0 = jax.device_put(self.trainable, dev0)
+        bn0 = jax.device_put(self.bn_state, dev0)
+        prev = jnp.concatenate([spec_tr.pack(tr0), spec_bn.pack(bn0)])
+        fro = self.frozen
+        if fro is not None and not isinstance(fro, ENG.FrozenColumns):
+            fro = ENG.make_frozen_columns(fro)
+        if fro is not None:
+            act = jnp.asarray(fro.active_idx)
+            prev_a = jnp.take(prev, act)
+            side = (jnp.take(snum, act), jnp.take(sden, act))
+            n_act = fro.n_active
+        else:
+            prev_a, side, n_act = prev, (snum, sden), self._n
+        flat = ops.fedavg_grouped(
+            jnp.zeros((1, n_act), jnp.float32),
+            jnp.zeros((1,), jnp.float32),
+            jnp.ones((1, n_act), jnp.float32),
+            jnp.zeros((1,), jnp.float32),
+            prev_a, side=side,
+        )
+        flat = ENG._barrier(flat)
+        full = prev.at[act].set(flat) if fro is not None else flat
+        new_tr = spec_tr.unpack(full[: spec_tr.n])
+        new_bn = spec_bn.unpack(full[spec_tr.n:])
+        ENG.AGG_STATS.clear()
+        ENG.AGG_STATS.update(
+            agg="replicated", kernel="side_only", n=self._n,
+            n_active=n_act, k_total=0,
+            fault_merged_rows=len(due), fault_evicted_rows=evicted,
+            fault_staged_rows=len(eng._staging),
+            fault_staging_bytes=MM.fault_staging_bytes(
+                [ent.idx.shape[0] for ent in eng._staging]
+            ),
+        )
+        return ENG.GroupedResult(new_tr, new_bn, jnp.float32(0.0), flat)
+
+    def poll(self, *, faults_fn: Optional[Callable[[int], object]] = None):
+        """Publish while ``ready()``; returns the list of results (possibly
+        empty — the no-publish case is the async steady state)."""
+        out = []
+        while self.ready():
+            out.append(self.publish(faults_fn=faults_fn))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# deterministic arrival schedules + the FLConfig-facing knob bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs for driving :class:`AsyncAggServer` from ``fl/server.py`` /
+    ``fl/baselines.py`` (``FLConfig.async_agg``).  ``publish_at == 0``
+    resolves to the first submission wave's cohort size (the sync-oracle
+    cell); ``p_slow == 0`` is staleness-0 scheduling (every arrival is
+    immediate) — together they reproduce the synchronous round bit-exactly."""
+
+    publish_at: int = 0
+    beta: float = 0.9
+    max_buffer: int = 256
+    max_versions: int = 4
+    seed: int = 0
+    p_slow: float = 0.0  # probability a submission is delayed
+    max_delay: int = 2  # delayed submissions draw uniform from [1, max_delay]
+
+    def __post_init__(self):
+        if self.publish_at < 0:
+            raise ValueError("publish_at must be >= 0 (0 = cohort size)")
+        if not (0.0 < self.beta <= 1.0):
+            raise ValueError("beta must be in (0, 1]")
+        if self.max_buffer < 1 or self.max_versions < 1:
+            raise ValueError("max_buffer and max_versions must be >= 1")
+        if not (0.0 <= self.p_slow <= 1.0):
+            raise ValueError("p_slow must be in [0, 1]")
+        if self.max_delay < 1:
+            raise ValueError("max_delay must be >= 1")
+
+
+class ArrivalSimulator:
+    """Deterministic seeded arrival schedule: each ``step(round_idx,
+    items)`` draws every item's training latency from
+    ``np.random.default_rng((seed, round_idx))`` — delay 0 with probability
+    ``1 − p_slow``, else uniform in ``[1, max_delay]`` rounds — and returns
+    the submissions that ARRIVE this round (this wave's on-time items plus
+    earlier waves' delayed ones), ordered by ``(arrival round, submission
+    seq)``.  A pure function of ``(cfg.seed, round sequence)``: staleness
+    distributions are reproducible across runs and after restarts replaying
+    the same rounds."""
+
+    def __init__(self, cfg: AsyncConfig):
+        self.cfg = cfg
+        self._pending: list = []  # (ready_round, seq, item)
+        self._seq = 0
+
+    def step(self, round_idx: int, items: Sequence) -> list:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, round_idx))
+        u = rng.random(len(items))
+        d = rng.integers(1, cfg.max_delay + 1, size=len(items))
+        for i, item in enumerate(items):
+            delay = int(d[i]) if u[i] < cfg.p_slow else 0
+            self._pending.append((round_idx + delay, self._seq, item))
+            self._seq += 1
+        arrived = sorted(
+            (p for p in self._pending if p[0] <= round_idx),
+            key=lambda p: (p[0], p[1]),
+        )
+        self._pending = [p for p in self._pending if p[0] > round_idx]
+        return [item for _, _, item in arrived]
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (train/checkpoint.py save/load round-trip)
+# ---------------------------------------------------------------------------
+
+
+def async_state_to_tree(srv: AsyncAggServer) -> dict:
+    """Flat numpy tree of the server's restorable state: the version /
+    publish / sequence / eviction counters plus every buffered submission
+    as MATERIALIZED rows (live plans run their local training here — the
+    rows, not the closures, are the durable wire state).  The version
+    TABLE is deliberately not captured: a restored server re-seeds it with
+    the restored current model only (older checkouts age out anyway)."""
+    tree = {"__async__": np.asarray(
+        [srv.version, srv.publishes, srv._seq, srv.evicted], np.int64
+    )}
+    for i, e in enumerate(srv.buffer):
+        vals, w, idx = srv._materialize(e)
+        tree[f"e{i}:vals"] = np.asarray(vals, np.float32)
+        tree[f"e{i}:w"] = np.asarray(w, np.float32)
+        tree[f"e{i}:idx"] = np.asarray(idx, np.int64)
+        tree[f"e{i}:meta"] = np.asarray(
+            [e.version, -1 if e.tag is None else e.tag], np.int64
+        )
+    return tree
+
+
+def async_state_from_tree(srv: AsyncAggServer, tree: dict) -> AsyncAggServer:
+    """Restore counters + buffer into ``srv`` (freshly constructed around
+    the restored global model).  Buffered entries come back as row
+    submissions; a restored STALE entry's subsequent publish is bit-equal
+    to the never-stopped server's (same materialized f32 rows, same
+    canonical fold order through ``_staged_side``)."""
+    version, publishes, seq, evicted = (int(x) for x in tree["__async__"])
+    srv.version, srv.publishes = version, publishes
+    srv._seq, srv.evicted = seq, evicted
+    srv._versions = OrderedDict({version: (srv.trainable, srv.bn_state)})
+    srv.buffer = []
+    i = 0
+    while f"e{i}:vals" in tree:
+        ver, tag = (int(x) for x in tree[f"e{i}:meta"])
+        vals = np.asarray(tree[f"e{i}:vals"], np.float32)
+        srv.buffer.append(Submission(
+            plan=None, rows=(vals, np.asarray(tree[f"e{i}:w"], np.float32),
+                             np.asarray(tree[f"e{i}:idx"], np.int64)),
+            version=ver, tag=None if tag < 0 else tag, seq=len(srv.buffer),
+            k=int(vals.shape[0]), n_cols=int(vals.shape[1]),
+        ))
+        i += 1
+    return srv

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import effective_movement as EM
 from repro.core import progressive as P
+from repro.fl import async_server as AS
 from repro.fl import data as DATA
 from repro.fl import engine as ENG
 from repro.fl import faults as FLT
@@ -75,6 +76,53 @@ class _Runner:
         self.rng = np.random.default_rng(fl.seed)
         self._key = jax.random.PRNGKey(fl.seed + 1)
         self.engine = ENG.make_engine(fl.engine)
+        # async aggregation state (fl.async_agg) — baseline global trees
+        # keep one structure for the whole run, so one server suffices
+        self._async_srv: AS.AsyncAggServer = None
+        self._async_sim: AS.ArrivalSimulator = None
+        self._async_round = 0
+
+    def grouped(self, plans, global_tr, global_bn, *, impl=None, frozen=None,
+                faults=None):
+        """Route one round's grouped cohort: the sync ``grouped_round``
+        call by default, or — under ``fl.async_agg`` — versioned
+        submissions into an :class:`AsyncAggServer` on the config's seeded
+        arrival schedule (one submission per structure group).  Returns the
+        last publish's result, or None when nothing published this round.
+        An explicit ``faults`` plan applies only to publishes whose fresh
+        cohort matches its size (a partially-arrived cohort has no
+        per-client verdict alignment)."""
+        if self.fl.async_agg is None:
+            return self.engine.grouped_round(
+                plans, global_tr, global_bn, impl=impl, frozen=frozen,
+                faults=faults,
+            )
+        ac = self.fl.async_agg
+        if self._async_srv is None:
+            k_total = sum(int(p.xs.shape[0]) for p in plans)
+            publish_at = ac.publish_at or k_total
+            self._async_srv = AS.AsyncAggServer(
+                self.engine, global_tr, global_bn,
+                publish_at=publish_at, beta=ac.beta,
+                max_buffer=max(ac.max_buffer, publish_at),
+                max_versions=ac.max_versions, impl=impl,
+            )
+            self._async_sim = AS.ArrivalSimulator(ac)
+        srv = self._async_srv
+        srv.frozen = frozen
+        arrived = self._async_sim.step(
+            self._async_round, [(p, srv.version) for p in plans]
+        )
+        self._async_round += 1
+        for p, ver in arrived:
+            srv.submit(p, ver)
+        res = None
+        while srv.ready():
+            res = srv.publish(faults_fn=lambda k: (
+                faults if faults is not None and faults.k_total == k
+                else None
+            ))
+        return res
 
     def round(self, loss_fn, trainable, frozen, bn, xs, ys, rngs, w, *,
               lr=None, local_steps=None, batch_size=None):
@@ -213,16 +261,17 @@ def run_heterofl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
             ))
         fplan = (FLT.sample_fault_plan(fault_cfg, len(sel), rnd + 1)
                  if fault_cfg is not None else None)
-        res = R.engine.grouped_round(plans, params, bn, impl=impl, frozen=fro,
-                                     faults=fplan)
-        params, bn = res.trainable, res.bn_state
-        if tracker is not None:
-            flat = (res.packed if res.packed is not None
-                    else EM.flatten_params(params))
-            if tracker.update(flat):
-                fro = ENG.frozen_columns_for_paths(
-                    params, bn, tracker.frozen_names
-                )
+        res = R.grouped(plans, params, bn, impl=impl, frozen=fro,
+                        faults=fplan)
+        if res is not None:  # async: None = no publish this round
+            params, bn = res.trainable, res.bn_state
+            if tracker is not None:
+                flat = (res.packed if res.packed is not None
+                        else EM.flatten_params(params))
+                if tracker.update(flat):
+                    fro = ENG.frozen_columns_for_paths(
+                        params, bn, tracker.frozen_names
+                    )
         accs.append(_acc_full(cfg, params, bn, xte, yte, fl.ratio))
     out = {"acc": float(np.mean(accs[-10:])), "pr": 1.0,
            "levels": levels.tolist(), "curve": accs,
@@ -338,18 +387,19 @@ def run_depthfl(cfg, fl: FLConfig, xtr, ytr, xte, yte, parts, budgets, rounds,
         global_tr = {"blocks": list(params["blocks"]), "heads": list(heads)}
         fplan = (FLT.sample_fault_plan(fault_cfg, len(sel), rnd + 1)
                  if fault_cfg is not None else None)
-        res = R.engine.grouped_round(plans, global_tr, bn, impl=impl,
-                                     frozen=fro, faults=fplan)
-        params = dict(params, blocks=res.trainable["blocks"])
-        heads = list(res.trainable["heads"])
-        bn = res.bn_state
-        if tracker is not None:
-            flat = (res.packed if res.packed is not None
-                    else EM.flatten_params(res.trainable))
-            if tracker.update(flat):
-                pref = [p for nm in tracker.frozen_names
-                        for p in prefixes[nm]]
-                fro = ENG.frozen_columns_for_paths(global_tr, bn, pref)
+        res = R.grouped(plans, global_tr, bn, impl=impl,
+                        frozen=fro, faults=fplan)
+        if res is not None:  # async: None = no publish this round
+            params = dict(params, blocks=res.trainable["blocks"])
+            heads = list(res.trainable["heads"])
+            bn = res.bn_state
+            if tracker is not None:
+                flat = (res.packed if res.packed is not None
+                        else EM.flatten_params(res.trainable))
+                if tracker.update(flat):
+                    pref = [p for nm in tracker.frozen_names
+                            for p in prefixes[nm]]
+                    fro = ENG.frozen_columns_for_paths(global_tr, bn, pref)
         accs.append(
             _acc_depth_ensemble(cfg, params, heads, bn, xte, yte,
                                 max_trained, fl.ratio)

@@ -385,6 +385,18 @@ class BoundedCache(collections.OrderedDict):
             del self[lru]
 
 
+# extension point: modules holding device buffers the FL layer should drop
+# on clear_caches() register a zero-arg callable here (fl/async_server.py
+# registers its buffered-row panel drop at import — engine never imports it)
+_CLEAR_HOOKS: list = []
+
+
+def register_clear_hook(fn) -> None:
+    """Register ``fn`` to run inside :func:`clear_caches` (idempotent)."""
+    if fn not in _CLEAR_HOOKS:
+        _CLEAR_HOOKS.append(fn)
+
+
 def clear_caches() -> None:
     """Empty every module-level cache in the FL layer (pack specs, group
     layouts, and the server/baseline loss caches), plus jax's jit caches —
@@ -394,8 +406,12 @@ def clear_caches() -> None:
     objects get their lazily-built device buffers (group mask, legacy mask)
     dropped explicitly: callers may still hold a layout reference after the
     cache entry is gone, and without the drop that reference keeps
-    ``O(G·n)``/``O(K·n)`` of device memory alive for the session.  Wired
-    into tests/conftest.py; also useful between long parameter sweeps."""
+    ``O(G·n)``/``O(K·n)`` of device memory alive for the session.
+    Registered clear hooks run too (e.g. the async server's buffered
+    materialized row panels — re-materialized on demand).  Wired into
+    tests/conftest.py; also useful between long parameter sweeps."""
+    for fn in list(_CLEAR_HOOKS):
+        fn()
     for layout in _LAYOUT_CACHE.values():
         layout.drop_device_buffers()
     _SPEC_CACHE.clear()

@@ -38,6 +38,16 @@ Handling semantics (fl/engine.py::grouped_round, kernels/fedavg.py):
   sync, and the round still issues one dispatch and one
   ``block_until_ready``.
 
+The async buffered-aggregation server (ISSUE 9,
+``fl/async_server.py::AsyncAggServer``) reuses this machinery from the
+other direction: stale buffered submissions park in the SAME engine staging
+buffer and merge at the same ``w·beta**s`` discount, and a publish with
+stale rows in flight arms an :func:`all_ok` plan at the server's ``beta``
+(``max_staged`` raised to the staging occupancy) so the side merge rides
+the one fused dispatch without perturbing fresh rows.  An explicitly
+faulted async publish must carry the server's ``beta`` — one staleness
+price per publish.
+
 A fault-free plan (:func:`all_ok`) is bit-equal to running with
 ``faults=None``: the quarantine math degenerates exactly (all-false mask,
 ``den - 0.0``) and tests/test_contract.py pins it across the conformance

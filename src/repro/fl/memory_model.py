@@ -366,6 +366,37 @@ def fault_staging_bytes(widths, elem_bytes: int = 4) -> int:
     return sum(int(elem_bytes) * int(w) for w in widths)
 
 
+def async_buffer_bytes(entries, elem_bytes: int = 4) -> int:
+    """Resident bytes of the async server's submission buffer
+    (fl/async_server.py::AsyncAggServer): one materialized f32 ``[k, n_g]``
+    row panel per buffered submission, given as ``(k, n_g)`` pairs.  Rows
+    are buffered pre-quantization (the wire dtype is a per-publish stream
+    knob, not a buffer property), so the element size is 4 B.  Analytic
+    twin of ``engine.AGG_STATS["async_buffer_bytes"]``; the bench gate
+    pins buffer PEAK bytes against this figure."""
+    return sum(int(elem_bytes) * int(k) * int(n_g) for k, n_g in entries)
+
+
+def async_version_table_bytes(n_versions: int, n: int,
+                              elem_bytes: int = 4) -> int:
+    """Resident bytes of the async server's bounded checkout table: each
+    retained version keeps one full ``[n]`` f32 global model copy (the
+    packed trainable + bn column space).  Analytic twin of
+    ``engine.AGG_STATS["async_version_table_bytes"]``."""
+    return int(n_versions) * int(n) * int(elem_bytes)
+
+
+def async_staleness_hist(staleness_rows) -> dict:
+    """Staleness histogram ``{s: rows}`` from ``(s, rows)`` pairs — the
+    host-side twin of ``engine.AGG_STATS["async_staleness_hist"]`` (the
+    per-publish distribution of ``publish version − trained version``
+    over published rows)."""
+    h: dict = {}
+    for s, k in staleness_rows:
+        h[int(s)] = h.get(int(s), 0) + int(k)
+    return h
+
+
 def server_aggregation_peak_bytes(
     k_total: int,
     n: int,

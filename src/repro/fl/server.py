@@ -20,6 +20,7 @@ from repro.core import distill as D
 from repro.core import effective_movement as EM
 from repro.core import output_module as OM
 from repro.core import progressive as P
+from repro.fl import async_server as AS
 from repro.fl import data as DATA
 from repro.fl import engine as ENG
 from repro.fl import faults as FLT
@@ -61,6 +62,18 @@ class FLConfig:
     # dispatch, stragglers park and merge with the staleness discount.
     # None (default) keeps the exact fault-free path.
     faults: FLT.FaultConfig = None
+    # async buffered aggregation (fl/async_server.py): when set, TRAINING
+    # rounds route through a versioned AsyncAggServer — each round's cohort
+    # becomes a submission tagged with the version it trained against,
+    # arrivals follow the config's seeded latency schedule, and the global
+    # model advances only when the buffer reaches publish_at rows (stale
+    # arrivals merge at the staleness discount w·β^s).  With p_slow=0 and
+    # publish_at=0 (→ cohort size) every round publishes exactly the sync
+    # result bit-for-bit.  Distillation rounds keep the sync barrier (a
+    # server-side Map step, not client traffic); submissions still in
+    # flight at a step boundary are dropped — the next step's model
+    # structure invalidates them.  None (default) keeps the sync loop.
+    async_agg: AS.AsyncConfig = None
 
 
 class ProFLServer:
@@ -90,6 +103,13 @@ class ProFLServer:
         self._key = key
         self.engine = ENG.make_engine(fl.engine)
         self._fault_rounds = 0  # global round counter for FaultPlan sampling
+        # async aggregation state (fl.async_agg): lazily (re)built per model
+        # structure — a ProFL step change invalidates the buffered column
+        # space, so the server and its arrival schedule start fresh
+        self._async_srv: AS.AsyncAggServer = None
+        self._async_sim: AS.ArrivalSimulator = None
+        self._async_spec = None
+        self._async_round = 0
 
     def _next_fault_plan(self, k_total: int):
         """Deterministic per-round FaultPlan under ``fl.faults`` (None when
@@ -101,6 +121,38 @@ class ProFLServer:
         return FLT.sample_fault_plan(
             self.fl.faults, k_total, self._fault_rounds
         )
+
+    def _async_grouped(self, plan, trainable, fro_cols):
+        """One training round through the async server: the cohort becomes
+        a versioned submission on the seeded arrival schedule; publishes
+        fire whenever the buffer fills.  Returns the LAST publish's result,
+        or None when nothing published this round (cohort in flight — the
+        async steady state)."""
+        ac = self.fl.async_agg
+        spec_key = (ENG.make_pack_spec(trainable),
+                    ENG.make_pack_spec(self.bn_state))
+        if self._async_srv is None or self._async_spec != spec_key:
+            publish_at = ac.publish_at or int(plan.xs.shape[0])
+            self._async_srv = AS.AsyncAggServer(
+                self.engine, trainable, self.bn_state,
+                publish_at=publish_at, beta=ac.beta,
+                max_buffer=max(ac.max_buffer, publish_at),
+                max_versions=ac.max_versions,
+            )
+            self._async_sim = AS.ArrivalSimulator(ac)
+            self._async_spec = spec_key
+        srv = self._async_srv
+        srv.frozen = fro_cols
+        arrived = self._async_sim.step(
+            self._async_round, [(plan, srv.version)]
+        )
+        self._async_round += 1
+        for p, ver in arrived:
+            srv.submit(p, ver)
+        res = None
+        while srv.ready():
+            res = srv.publish(faults_fn=self._next_fault_plan)
+        return res
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -184,13 +236,18 @@ class ProFLServer:
                 loss_fn, trainable, frozen, self.bn_state, xs, ys, rngs, w,
                 fl.lr, fl.local_steps, fl.batch_size,
             )
-            res = self.engine.grouped_round([plan], trainable, self.bn_state,
-                                            frozen=fro_cols,
-                                            faults=self._next_fault_plan(
-                                                len(sel)))
-            trainable, self.bn_state, loss = res.trainable, res.bn_state, res.loss
+            if fl.async_agg is not None:
+                res = self._async_grouped(plan, trainable, fro_cols)
+            else:
+                res = self.engine.grouped_round(
+                    [plan], trainable, self.bn_state, frozen=fro_cols,
+                    faults=self._next_fault_plan(len(sel)))
             self.total_uplink_params += uplink * len(sel)
             info["rounds"] = rnd + 1
+            if res is None:
+                continue  # async: no publish this round — model unchanged,
+                # so EM/freeze state must not observe a zero-movement step
+            trainable, self.bn_state, loss = res.trainable, res.bn_state, res.loss
             # packed engines hand back the flat aggregated vector — feed EM
             # directly, skipping the per-round tree re-flatten
             flat = (res.packed if res.packed is not None

@@ -3,7 +3,11 @@
 Leaves are flattened with their tree paths as keys, so a checkpoint can be
 restored into any structurally-identical tree and partially loaded (e.g. the
 ProFL shrinking stage saves per-block init params that the growing stage
-loads block-by-block).
+loads block-by-block).  Flat-dict states (the engine's int8 error-feedback
+tree, the async server's buffer from
+``fl/async_server.py::async_state_to_tree``) round-trip as-is — their keys
+are already path strings; :func:`subtree` slices one component back out of
+a combined checkpoint.
 """
 from __future__ import annotations
 
@@ -30,6 +34,15 @@ def _flatten(tree: PyTree) -> dict:
 def save(path: str, tree: PyTree) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez_compressed(path, **_flatten(tree))
+
+
+def subtree(flat: dict, prefix: str) -> dict:
+    """Slice one namespaced component out of a flat ``{path: array}``
+    checkpoint dict: keys under ``"<prefix>/"`` come back with the prefix
+    stripped (e.g. ``subtree(load(p), "async")`` recovers exactly what
+    ``save(p, {"async": state, ...})`` stored for it)."""
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in flat.items() if k.startswith(pre)}
 
 
 def load(path: str, like: Optional[PyTree] = None) -> PyTree:

@@ -1,0 +1,429 @@
+"""Async buffered-aggregation server lifecycle (ISSUE 9).
+
+The conformance story (sync bit-equality across the engine matrix, round
+contracts per publish flavor, AGG_STATS == memory-model twins) lives in
+tests/test_contract.py's ASYNC axis; the algebraic properties
+(arrival-order invariance, the ``β^s`` discount, FIFO eviction) in
+tests/test_properties.py.  Here: everything stateful about the server
+itself —
+
+* the version counter and the bounded checkout table (old versions age out
+  with a KeyError);
+* the checkpoint round-trip through ``train/checkpoint.py``: a server
+  stopped MID-STREAM with stale buffered rows and live int8 error-feedback
+  residuals restores into a fresh process and publishes bit-identically to
+  the never-stopped server, publish after publish;
+* cache hygiene: materialized row panels are device buffers and must be
+  RELEASED by ``engine.clear_caches()`` (weakref liveness, mirroring the
+  layout-cache drop test) and lazily rebuilt to the same bits;
+* constructor/submission validation and the ``AsyncConfig`` knob bounds;
+* the seeded :class:`ArrivalSimulator` schedule (pure function of
+  ``(seed, round)``, conservation of submissions);
+* the ``FLConfig.async_agg`` wiring: the baselines and the ProFL loop under
+  staleness-0 scheduling reproduce their sync runs exactly, and — the slow
+  convergence smoke — a moderately-stale ``β < 1`` run on the non-IID CNN
+  fixture lands within a documented tolerance of the sync FedAvg baseline.
+"""
+import gc
+import weakref
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.effective_movement import EMConfig
+from repro.fl import async_server as AS
+from repro.fl import baselines as BL
+from repro.fl import data as D
+from repro.fl import engine as ENG
+from repro.fl import faults as FLT
+from repro.fl import memory_model as MM
+from repro.fl.server import FLConfig, ProFLServer
+from repro.models.cnn import CNNConfig
+from repro.train import checkpoint as CK
+
+from test_contract import _bit_equal_rounds, _K_MIXED, build_mixed_world
+
+
+@pytest.fixture()
+def mixed():
+    plans, gtr, gbn = build_mixed_world()
+    return plans, gtr, gbn
+
+
+def _submit_cohort(srv, plans):
+    for p in plans:
+        srv.submit(p, srv.version)
+
+
+# ---------------------------------------------------------------------------
+# version counter + bounded checkout table
+# ---------------------------------------------------------------------------
+
+
+def test_version_counter_and_checkout_table(mixed):
+    plans, gtr, gbn = mixed
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED, max_versions=2)
+    assert srv.version == 0 and srv.publishes == 0
+    v, tr, bn = srv.checkout()
+    assert v == 0 and tr is gtr and bn is gbn
+    assert srv.poll() == []  # empty buffer: the async steady state
+
+    results = []
+    for _ in range(3):
+        _submit_cohort(srv, plans)
+        results.append(srv.publish())
+    assert srv.version == 3 and srv.publishes == 3
+    assert srv.buffer_rows == 0 and not srv.ready()
+
+    # the table retains exactly max_versions entries, newest last
+    v, tr, bn = srv.checkout()
+    assert v == 3 and tr is results[-1].trainable
+    v2, tr2, _ = srv.checkout(2)
+    assert v2 == 2 and tr2 is results[-2].trainable
+    with pytest.raises(KeyError):
+        srv.checkout(1)  # aged out of the bounded table
+    with pytest.raises(KeyError):
+        srv.checkout(0)
+
+    st = ENG.AGG_STATS
+    assert st["async_version"] == 3
+    assert st["async_versions_retained"] == 2
+    assert st["async_version_table_bytes"] == MM.async_version_table_bytes(
+        2, srv._n
+    )
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip: restore mid-stream -> identical publishes
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_restore_midstream_bit_equal_publishes(mixed, tmp_path):
+    """A server stopped with STALE rows in the buffer and live int8
+    error-feedback residuals, restored through train/checkpoint.py into a
+    fresh engine + server, publishes bit-identically to the never-stopped
+    server — for the restored stale publish AND the publish after it (the
+    EF residuals carry across too)."""
+    plans, gtr, gbn = mixed
+    path = str(tmp_path / "async.npz")
+
+    eng_a = ENG.make_engine("packed")
+    srv_a = AS.AsyncAggServer(eng_a, gtr, gbn, publish_at=_K_MIXED,
+                              beta=0.5, stream_dtype="int8")
+    _submit_cohort(srv_a, plans)
+    srv_a.publish()  # v1; creates the int8 EF residual state
+    assert eng_a._ef_state  # the stream really was quantized
+    # two groups report in late, trained against v0 -> stale at s=1
+    srv_a.submit(plans[0], 0)
+    srv_a.submit(plans[1], 0)
+
+    # one combined checkpoint: model + async buffer + EF residuals.  The
+    # model component is saved as f32 (npz has no bf16) and cast back by
+    # ``like=`` on load — exact for bf16 upcasts.
+    CK.save(path, {
+        "model": jax.tree.map(lambda l: np.asarray(l, np.float32),
+                              (srv_a.trainable, srv_a.bn_state)),
+        "async": AS.async_state_to_tree(srv_a),
+        "ef": ENG.ef_state_to_tree(eng_a),
+    })
+
+    # the never-stopped server publishes twice more
+    _submit_cohort(srv_a, plans)
+    res_a1 = srv_a.publish()  # fresh cohort + the two stale parked rows
+    _submit_cohort(srv_a, plans)
+    res_a2 = srv_a.publish()  # fresh-only, EF residuals from the mixed round
+
+    # fresh process: new engine, server rebuilt around the restored model
+    flat = CK.load(path)
+    tr_b, bn_b = CK.load(
+        path, like={"model": (srv_a.trainable, srv_a.bn_state)}
+    )["model"]
+    eng_b = ENG.make_engine("packed")
+    srv_b = AS.AsyncAggServer(eng_b, tr_b, bn_b, publish_at=_K_MIXED,
+                              beta=0.5, stream_dtype="int8")
+    AS.async_state_from_tree(srv_b, CK.subtree(flat, "async"))
+    ENG.ef_state_from_tree(eng_b, CK.subtree(flat, "ef"))
+
+    assert srv_b.version == 1 and srv_b.publishes == 1
+    k01 = int(plans[0].xs.shape[0]) + int(plans[1].xs.shape[0])
+    assert len(srv_b.buffer) == 2 and srv_b.buffer_rows == k01
+    assert all(e.plan is None and e.version == 0 for e in srv_b.buffer)
+    # the version table re-seeds with the restored model only
+    with pytest.raises(KeyError):
+        srv_b.checkout(0)
+    assert srv_b.checkout()[0] == 1
+    # the restored EF residual tree matches the saved one leaf-for-leaf
+    for k, v in ENG.ef_state_to_tree(eng_b).items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(flat["ef/" + k]))
+
+    _submit_cohort(srv_b, plans)
+    res_b1 = srv_b.publish()
+    _bit_equal_rounds(res_a1, res_b1)
+    _submit_cohort(srv_b, plans)
+    res_b2 = srv_b.publish()
+    _bit_equal_rounds(res_a2, res_b2)
+    for a, b in zip(jax.tree.leaves(srv_a.trainable),
+                    jax.tree.leaves(srv_b.trainable)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# clear_caches drops materialized row device buffers
+# ---------------------------------------------------------------------------
+
+
+def test_clear_caches_drops_materialized_row_buffers(mixed):
+    """Mirrors test_contract.py's layout-cache drop test: materialized
+    row panels are DEVICE buffers cached on buffer entries; a cache clear
+    must actually release them (weakref liveness, not just the attribute)
+    and the entry must lazily re-materialize to the same bits."""
+    plans, gtr, gbn = mixed
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED)
+    e = srv.submit(plans[0], 0)
+    vals, w, idx = srv._materialize(e)
+    assert e.rows is not None
+    before = np.asarray(vals, np.float32).copy()
+    wr = weakref.ref(vals)
+    del vals
+
+    ENG.clear_caches()
+    assert e.rows is None  # plan entries drop their cached panel
+    gc.collect()
+    assert wr() is None  # ... and the device buffer really was released
+
+    vals2, w2, idx2 = srv._materialize(e)  # lazy rebuild, same bits
+    np.testing.assert_array_equal(before, np.asarray(vals2, np.float32))
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+
+    # row-only submissions hold HOST arrays — a clear must NOT lose them
+    # (there is no plan to re-run)
+    r = srv.submit_rows(np.ones((1, srv._n), np.float32),
+                        np.ones((1,), np.float32), 0)
+    ENG.clear_caches()
+    assert r.rows is not None
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_server_validation_errors(mixed):
+    plans, gtr, gbn = mixed
+    eng = ENG.make_engine("packed")
+    with pytest.raises(ValueError):
+        AS.AsyncAggServer(eng, gtr, gbn, publish_at=0)
+    with pytest.raises(ValueError):
+        AS.AsyncAggServer(eng, gtr, gbn, publish_at=2, beta=0.0)
+    with pytest.raises(ValueError):
+        AS.AsyncAggServer(eng, gtr, gbn, publish_at=2, beta=1.5)
+    with pytest.raises(ValueError):
+        AS.AsyncAggServer(eng, gtr, gbn, publish_at=4, max_buffer=3)
+    with pytest.raises(ValueError):
+        AS.AsyncAggServer(eng, gtr, gbn, publish_at=2, max_versions=0)
+
+    srv = AS.AsyncAggServer(eng, gtr, gbn, publish_at=2)
+    with pytest.raises(ValueError):
+        srv.publish()  # empty buffer
+    with pytest.raises(ValueError):
+        srv.submit(plans[0], 1)  # the future is not a checkable version
+    with pytest.raises(ValueError):
+        srv.submit(plans[0], -1)
+    with pytest.raises(ValueError):  # vals do not cover idx
+        srv.submit_rows(np.ones((2, 3), np.float32),
+                        np.ones((2,), np.float32), 0,
+                        idx=np.arange(4))
+    with pytest.raises(ValueError):  # weights must be [k]
+        srv.submit_rows(np.ones((2, srv._n), np.float32),
+                        np.ones((3,), np.float32), 0)
+
+
+def test_publish_rejects_mismatched_fault_beta(mixed):
+    """An explicitly faulted publish with stale rows in flight must carry
+    the server's beta — one staleness price per publish."""
+    plans, gtr, gbn = mixed
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED, beta=0.5)
+    _submit_cohort(srv, plans)
+    srv.publish()
+    srv.submit(plans[0], 0)  # stale
+    _submit_cohort(srv, plans)
+    with pytest.raises(ValueError, match="beta"):
+        srv.publish(faults=FLT.all_ok(_K_MIXED, beta=0.9))
+    # matching beta goes through (fresh engine state for a clean publish)
+    srv2 = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                             publish_at=_K_MIXED, beta=0.5)
+    _submit_cohort(srv2, plans)
+    srv2.publish()
+    srv2.submit(plans[0], 0)
+    _submit_cohort(srv2, plans)
+    res = srv2.publish(faults=FLT.all_ok(_K_MIXED, beta=0.5))
+    assert np.isfinite(np.float32(res.loss))
+    assert ENG.AGG_STATS["async_stale_rows"] == int(plans[0].xs.shape[0])
+
+
+def test_async_config_validation():
+    AS.AsyncConfig()  # defaults are valid
+    with pytest.raises(ValueError):
+        AS.AsyncConfig(publish_at=-1)
+    with pytest.raises(ValueError):
+        AS.AsyncConfig(beta=0.0)
+    with pytest.raises(ValueError):
+        AS.AsyncConfig(max_buffer=0)
+    with pytest.raises(ValueError):
+        AS.AsyncConfig(max_versions=0)
+    with pytest.raises(ValueError):
+        AS.AsyncConfig(p_slow=1.5)
+    with pytest.raises(ValueError):
+        AS.AsyncConfig(max_delay=0)
+
+
+# ---------------------------------------------------------------------------
+# arrival simulator
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_simulator_deterministic_and_conserving():
+    cfg = AS.AsyncConfig(seed=3, p_slow=0.5, max_delay=3)
+    sims = [AS.ArrivalSimulator(cfg) for _ in range(2)]
+    waves = [[f"r{r}c{i}" for i in range(5)] for r in range(4)]
+    arrived = [[], []]
+    for r, wave in enumerate(waves):
+        for j, sim in enumerate(sims):
+            arrived[j].append(sim.step(r, wave))
+    # pure function of (seed, round sequence): identical schedules
+    assert arrived[0] == arrived[1]
+    assert sims[0].in_flight == sims[1].in_flight
+    # drain: everything submitted eventually arrives, exactly once
+    total = [x for wave_got in arrived[0] for x in wave_got]
+    r = len(waves)
+    while sims[0].in_flight:
+        total += sims[0].step(r, [])
+        r += 1
+        assert r < len(waves) + cfg.max_delay + 1
+    assert sorted(total) == sorted(x for w in waves for x in w)
+
+    # p_slow=0: staleness-0 scheduling, same-round in-order arrival
+    sim = AS.ArrivalSimulator(AS.AsyncConfig(p_slow=0.0))
+    assert sim.step(0, ["a", "b"]) == ["a", "b"] and sim.in_flight == 0
+    # p_slow=1: NOTHING arrives in its own round
+    sim = AS.ArrivalSimulator(AS.AsyncConfig(p_slow=1.0, max_delay=2))
+    assert sim.step(0, ["a", "b", "c"]) == [] and sim.in_flight == 3
+
+
+# ---------------------------------------------------------------------------
+# FLConfig wiring: staleness-0 async == the sync run, exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    rng = jax.random.PRNGKey(0)
+    xtr, ytr, xte, yte = D.make_synthetic(rng, n_train=600, n_test=200,
+                                          size=16)
+    parts = D.partition_iid(jax.random.PRNGKey(1), len(xtr), 40)
+    budgets = MM.assign_budgets_mb(np.random.default_rng(0), 40)
+    return xtr, ytr, xte, yte, parts, budgets
+
+
+def _fl(**kw):
+    base = dict(
+        n_clients=40, clients_per_round=6, local_steps=3, batch_size=16,
+        n_local_fixed=24, max_rounds_per_step=4, distill_rounds=1,
+        eval_every=100,
+        em=EMConfig(window_h=2, slope_phi=0.05, patience_w=2, fit_points=3,
+                    em_level=0.95, min_rounds=2),
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_heterofl_async_staleness0_matches_sync(tiny_world):
+    """The wiring end of the sync-oracle contract: run_heterofl under
+    ``async_agg`` with staleness-0 scheduling (p_slow=0, publish_at=cohort)
+    is the sync run BIT-exactly — same curve, same final params."""
+    xtr, ytr, xte, yte, parts, budgets = tiny_world
+    cfg = CNNConfig("vgg11", width_mult=0.0625, in_size=16)
+    fl_kw = dict(clients_per_round=6, local_steps=2, batch_size=8,
+                 n_local_fixed=16)
+    want = BL.run_heterofl(cfg, _fl(**fl_kw), xtr, ytr, xte, yte, parts,
+                           budgets, 2)
+    got = BL.run_heterofl(
+        cfg, _fl(async_agg=AS.AsyncConfig(p_slow=0.0), **fl_kw),
+        xtr, ytr, xte, yte, parts, budgets, 2,
+    )
+    assert got["curve"] == want["curve"]
+    for a, b in zip(jax.tree.leaves((want["params"], want["bn"])),
+                    jax.tree.leaves((got["params"], got["bn"]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    st = ENG.AGG_STATS
+    assert st["async_publishes"] == 2 and st["async_stale_rows"] == 0
+
+
+@pytest.mark.slow
+def test_profl_async_staleness0_matches_sync(tiny_world):
+    """Full ProFL loop (growth stages, distillation, freezing) under
+    staleness-0 async scheduling reproduces the sync run: identical round
+    losses and final accuracy (the publish makes the verbatim
+    grouped_round call; distillation stays sync by design)."""
+    xtr, ytr, xte, yte, parts, budgets = tiny_world
+    cfg = CNNConfig("vgg11", width_mult=0.125, in_size=16)
+    a = ProFLServer(cfg, _fl(), xtr, ytr, xte, yte, parts, budgets).run()
+    b = ProFLServer(
+        cfg, _fl(async_agg=AS.AsyncConfig(p_slow=0.0)),
+        xtr, ytr, xte, yte, parts, budgets,
+    ).run()
+    assert [(s["stage"], s["t"], s["rounds"]) for s in a["steps"]] == \
+           [(s["stage"], s["t"], s["rounds"]) for s in b["steps"]]
+    la = [h["loss"] for h in a["history"]]
+    lb = [h["loss"] for h in b["history"]]
+    np.testing.assert_array_equal(np.asarray(la, np.float32),
+                                  np.asarray(lb, np.float32))
+    assert a["final_acc"] == b["final_acc"]
+
+
+@pytest.mark.slow
+def test_async_convergence_smoke_non_iid(tiny_world):
+    """The convergence end: moderate staleness (p_slow=0.4, delays up to 2
+    rounds) with β=0.7 staleness discounting on the NON-IID CNN fixture,
+    vs the sync FedAvg-style baseline (the grouped weighted average
+    run_heterofl performs).  Delayed arrivals mean the async run publishes
+    FEWER updates in the same number of rounds, so the documented
+    tolerance is at MATCHED UPDATE COUNT: async accuracy after its P
+    publishes within 0.15 of the sync run after P rounds — isolating the
+    staleness discount's quality cost from the throughput deficit of
+    waiting on stragglers (measured here: the publish-matched gap is
+    ~0.01; the same-round gap is ~0.19 and is a scheduling artifact, not
+    an aggregation-quality one)."""
+    xtr, ytr, xte, yte, _, budgets = tiny_world
+    parts = D.partition_dirichlet(jax.random.PRNGKey(0), ytr, 40, alpha=0.5)
+    cfg = CNNConfig("vgg11", width_mult=0.0625, in_size=16)
+    fl_kw = dict(clients_per_round=6, local_steps=2, batch_size=8,
+                 n_local_fixed=16)
+    rounds = 16
+    sync = BL.run_heterofl(cfg, _fl(**fl_kw), xtr, ytr, xte, yte, parts,
+                           budgets, rounds)
+    asy = BL.run_heterofl(
+        cfg,
+        _fl(async_agg=AS.AsyncConfig(p_slow=0.4, max_delay=2, beta=0.7),
+            **fl_kw),
+        xtr, ytr, xte, yte, parts, budgets, rounds,
+    )
+    st = ENG.AGG_STATS
+    publishes = st["async_publishes"]
+    assert publishes >= rounds // 2  # the stream really flowed
+    assert all(s >= 0 and rows > 0
+               for s, rows in st["async_staleness_hist"].items())
+    # matched update count, smoothed over 3 eval points (accuracy on the
+    # 200-image test set is discrete in 0.005 steps and noisy round to
+    # round): async's last 3 rounds vs sync's rounds publishes-2..publishes
+    a_acc = float(np.mean(asy["curve"][-3:]))
+    s_acc = float(np.mean(sync["curve"][max(0, publishes - 3):publishes]))
+    assert abs(a_acc - s_acc) <= 0.15, (a_acc, s_acc, publishes)
+    assert asy["curve"][-1] > 0.25  # and it genuinely learned (chance=0.1)

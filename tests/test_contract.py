@@ -59,6 +59,19 @@ merge at the staleness-discounted weight ``w·beta**s`` identically on the
 fused and serial paths, the one-dispatch/one-sync round contracts must
 hold UNDER injection, and ``AGG_STATS``'s fault telemetry must equal the
 ``fl/memory_model.py`` twins exactly — including on the composed mesh.
+
+The ASYNC axis (ISSUE 9) re-proves every round contract with the control
+flow inverted: ``fl/async_server.py::AsyncAggServer`` at staleness-0
+scheduling with ``publish_at == cohort size`` must reproduce
+``grouped_round`` BIT-exactly in every matrix cell (the sync round is a
+special case of the async server, not a parallel code path — including
+frozen, faulted, and int8-stream cells), every publish — fresh, mixed
+fresh+stale, and stale-only — must stay one logical ``fedavg_grouped``
+dispatch + one ``block_until_ready``, stale publishes keep replicated ≡
+sharded bit-equality, the ``async_*`` telemetry must equal the
+``fl/memory_model.py`` buffer/version-table/staleness twins exactly, and
+the composed mesh runs the same equivalence + stale-publish contracts in
+the 8-virtual-device subprocess.
 """
 import os
 import subprocess
@@ -70,6 +83,7 @@ import numpy as np
 import pytest
 
 from repro.core import progressive as P
+from repro.fl import async_server as AS
 from repro.fl import engine as ENG
 from repro.fl import faults as FLT
 from repro.fl import memory_model as MM
@@ -1018,6 +1032,30 @@ assert ENG.AGG_STATS["fault_staged_rows"] == 0, dict(ENG.AGG_STATS)
 assert all(bool(jnp.all(jnp.isfinite(l)))
            for l in jax.tree.leaves(merged.trainable))
 print("FAULTS_OK", err_f)
+
+# ASYNC (ISSUE 9) on the composed mesh: staleness-0 + publish_at=cohort
+# reproduces the sync column-sharded round bit-exactly, and a stale
+# follow-up publish folds through one dispatch + one sync and stays finite
+from repro.fl import async_server as ASY
+from repro.kernels import ops as OPS3
+want_async = eng.grouped_round(plans, tr, {}, agg="sharded")
+srv = ASY.AsyncAggServer(eng, tr, {}, publish_at=6, agg="sharded", beta=0.5)
+for p in plans:
+    srv.submit(p, srv.version)
+got_async = srv.publish()
+for a, b in zip(jax.tree.leaves(want_async.trainable),
+                jax.tree.leaves(got_async.trainable)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+srv.submit(plans[0], 0)  # stale: trained against v0, server is at v1
+OPS3.reset_dispatches()
+ENG.reset_syncs()
+got_stale = srv.publish()
+assert OPS3.DISPATCHES["fedavg_grouped"] == 1, dict(OPS3.DISPATCHES)
+assert ENG.SYNCS["aggregation_barrier"] == 1, dict(ENG.SYNCS)
+assert all(bool(jnp.all(jnp.isfinite(l)))
+           for l in jax.tree.leaves(got_stale.trainable))
+assert ENG.AGG_STATS["async_stale_rows"] == 3, dict(ENG.AGG_STATS)
+print("ASYNC_OK", srv.version)
 """
 
 
@@ -1042,6 +1080,7 @@ def test_composed_mesh_sharded_agg_subprocess():
     assert "FROZEN_OK" in out.stdout
     assert "TRANSPORT_OK" in out.stdout
     assert "FAULTS_OK" in out.stdout
+    assert "ASYNC_OK" in out.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -1614,3 +1653,215 @@ def test_faults_knob_validation(mixed_world):
         eng.grouped_round(plans, gtr, gbn, impl="fused_masked",
                           faults=FLT.all_ok(_K_MIXED))
     eng.reset_faults()
+
+
+# ---------------------------------------------------------------------------
+# async buffered aggregation (ISSUE 9): the sync round as a special case
+# ---------------------------------------------------------------------------
+
+# tier-1 allowlist for the sync-equivalence cells; the rest run slow
+ASYNC_TIER1 = {
+    ("vmap", "serial", "replicated"),
+    ("packed", "serial", "replicated"),
+    ("packed", "fused", "replicated"),
+    ("packed", "fused", "sharded"),
+    ("packed", "fused_masked", "replicated"),
+    ("sharded", "fused", "sharded"),
+}
+
+
+def _async_matrix():
+    for mode in MODES:
+        for impl in IMPLS:
+            for agg in AGGS:
+                marks = ()
+                if (mode, impl, agg) not in ASYNC_TIER1:
+                    marks = (pytest.mark.slow,)
+                yield pytest.param(mode, impl, agg, marks=marks,
+                                   id=f"{mode}-{impl}-{agg}")
+
+
+def _submit_cohort(srv, plans):
+    for p in plans:
+        srv.submit(p, srv.version)
+
+
+@pytest.mark.parametrize("mode,impl,agg", list(_async_matrix()))
+def test_async_sync_equivalence(mode, impl, agg, mixed_world):
+    """THE load-bearing invariant: with staleness-0 scheduling and
+    ``publish_at == cohort size``, the async server's publish IS the sync
+    ``grouped_round`` — bit-equal in every matrix cell, because the server
+    makes the verbatim call rather than reimplementing it."""
+    plans, gtr, gbn, _ = mixed_world
+    want = ENG.make_engine(mode).grouped_round(
+        plans, gtr, gbn, impl=impl, agg=agg
+    )
+    srv = AS.AsyncAggServer(ENG.make_engine(mode), gtr, gbn,
+                            publish_at=_K_MIXED, impl=impl, agg=agg)
+    _submit_cohort(srv, plans)
+    assert srv.ready()
+    got = srv.publish()
+    _bit_equal_rounds(want, got)
+    assert srv.version == 1 and not srv.buffer
+
+
+def test_async_sync_equivalence_frozen(mixed_frozen):
+    """The sync-oracle contract holds under a frozen-column epoch (the
+    frozen leaf passes through bit-equal on the async path too)."""
+    plans, gtr, gbn, _, fro = mixed_frozen
+    want = ENG.make_engine("packed").grouped_round(
+        plans, gtr, gbn, agg="sharded", frozen=fro
+    )
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED, agg="sharded", frozen=fro)
+    _submit_cohort(srv, plans)
+    got = srv.publish()
+    _bit_equal_rounds(want, got)
+    np.testing.assert_array_equal(
+        np.asarray(got.trainable["blocks"][1]), np.asarray(gtr["blocks"][1])
+    )
+
+
+def test_async_sync_equivalence_faulted(mixed_world):
+    """The sync-oracle contract holds under an armed FaultPlan: an async
+    publish with the identical plan (drop + quarantine + parked straggler,
+    then the merge publish) is bit-equal to the sync faulted rounds."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({
+        1: FLT.ClientFault("dropped"),
+        2: FLT.ClientFault("straggler", delay=1),
+        4: FLT.ClientFault("corrupt", mode="norm_blowup"),
+    }, norm_bound=1e6)
+    ok = FLT.all_ok(_K_MIXED, norm_bound=1e6)
+    eng_sync = ENG.make_engine("packed")
+    want1 = eng_sync.grouped_round(plans, gtr, gbn, faults=fp)
+    want2 = eng_sync.grouped_round(plans, gtr, gbn, faults=ok)
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED, beta=fp.beta)
+    _submit_cohort(srv, plans)
+    got1 = srv.publish(faults=fp)
+    _submit_cohort(srv, plans)
+    got2 = srv.publish(faults=ok)
+    _bit_equal_rounds(want1, got1)
+    _bit_equal_rounds(want2, got2)
+
+
+def test_async_sync_equivalence_int8_stream(mixed_world):
+    """The sync-oracle contract holds on the quantized wire (fresh engines
+    per side so the int8 error-feedback residuals start identical)."""
+    plans, gtr, gbn, _ = mixed_world
+    want = ENG.make_engine("packed", stream_dtype="int8").grouped_round(
+        plans, gtr, gbn, agg="sharded"
+    )
+    srv = AS.AsyncAggServer(
+        ENG.make_engine("packed", stream_dtype="int8"), gtr, gbn,
+        publish_at=_K_MIXED, agg="sharded",
+    )
+    _submit_cohort(srv, plans)
+    got = srv.publish()
+    _bit_equal_rounds(want, got)
+
+
+def _publish_with_stale(agg, plans, gtr, gbn):
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED, agg=agg, beta=0.5)
+    _submit_cohort(srv, plans)
+    srv.publish()
+    srv.submit(plans[0], 0)  # stale: trained against v0, server is at v1
+    _submit_cohort(srv, plans)
+    return srv.publish()
+
+
+def test_async_stale_replicated_vs_sharded_bit_equal(mixed_world):
+    """A mixed fresh+stale publish preserves the exactness contract: the
+    ``w·β^s`` side merge rides the column split bit-equally."""
+    plans, gtr, gbn, _ = mixed_world
+    got_r = _publish_with_stale("replicated", plans, gtr, gbn)
+    got_s = _publish_with_stale("sharded", plans, gtr, gbn)
+    _bit_equal_rounds(got_r, got_s)
+
+
+def test_async_round_contracts_per_publish(mixed_world):
+    """Every publish flavor — fresh-only, mixed fresh+stale, stale-only
+    (the zero-weight carrier dispatch) — issues exactly one logical
+    ``fedavg_grouped`` dispatch and one ``block_until_ready``."""
+    plans, gtr, gbn, _ = mixed_world
+
+    def drive(srv):
+        # publish 1: fresh only; 2: fresh + stale; 3: stale only
+        _submit_cohort(srv, plans)
+        yield srv
+        srv.submit(plans[0], 0)
+        _submit_cohort(srv, plans)
+        yield srv
+        srv.submit(plans[1], 0)
+        yield srv
+
+    eng = ENG.make_engine("packed")
+    for srv in drive(AS.AsyncAggServer(eng, gtr, gbn, publish_at=_K_MIXED,
+                                       agg="sharded", beta=0.5)):
+        srv.publish()  # warm the compiles
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    srv = AS.AsyncAggServer(eng, gtr, gbn, publish_at=_K_MIXED,
+                            agg="sharded", beta=0.5)
+    jax.block_until_ready = counting
+    try:
+        for srv in drive(srv):
+            OPS.reset_dispatches()
+            ENG.reset_syncs()
+            calls.clear()
+            srv.publish()
+            assert OPS.DISPATCHES["fedavg_grouped"] == 1
+            assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+            assert ENG.SYNCS["aggregation_barrier"] == 1
+    finally:
+        jax.block_until_ready = real
+    ENG.reset_syncs()
+    OPS.reset_dispatches()
+
+
+def test_async_agg_stats_match_memory_model_twins(mixed_world):
+    """The ``async_*`` telemetry is metadata, never a sync — and equals the
+    ``fl/memory_model.py`` twins exactly: buffer bytes via
+    ``async_buffer_bytes``, the bounded checkout table via
+    ``async_version_table_bytes``, staleness via ``async_staleness_hist``."""
+    plans, gtr, gbn, _ = mixed_world
+    srv = AS.AsyncAggServer(ENG.make_engine("packed"), gtr, gbn,
+                            publish_at=_K_MIXED, beta=0.5, max_versions=3)
+    n = srv._n
+    _submit_cohort(srv, plans)
+    entries = [(e.k, e.n_cols) for e in srv.buffer]
+    assert srv.buffer_bytes() == MM.async_buffer_bytes(entries)
+    srv.publish()
+    st = dict(ENG.AGG_STATS)
+    assert st["async_buffer_bytes"] == MM.async_buffer_bytes(entries)
+    assert st["async_buffer_rows"] == _K_MIXED
+    assert st["async_published_rows"] == _K_MIXED
+    assert st["async_fresh_rows"] == _K_MIXED and st["async_stale_rows"] == 0
+    assert st["async_staleness_hist"] == MM.async_staleness_hist(
+        [(0, _K_MIXED)]
+    )
+    assert st["async_versions_retained"] == 2
+    assert st["async_version_table_bytes"] == MM.async_version_table_bytes(
+        2, n
+    )
+    k0 = int(plans[0].xs.shape[0])
+    srv.submit(plans[0], 0)  # stale at s=1
+    _submit_cohort(srv, plans)
+    srv.publish()
+    st = dict(ENG.AGG_STATS)
+    assert st["async_fresh_rows"] == _K_MIXED
+    assert st["async_stale_rows"] == k0
+    assert st["async_staleness_hist"] == MM.async_staleness_hist(
+        [(0, _K_MIXED), (1, k0)]
+    )
+    assert st["async_versions_retained"] == 3
+    assert st["async_version_table_bytes"] == MM.async_version_table_bytes(
+        3, n
+    )

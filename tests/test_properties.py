@@ -620,3 +620,93 @@ def test_ragged_stream_plan_widths_invariants(seed, widths, n_shards):
                 if valid.size:
                     # live entries packed at the front of the pass slice
                     assert int(valid.max()) < w
+
+
+# ---------------------------------------------------------------------------
+# async buffered aggregation (ISSUE 9): fl/async_server.py invariants
+# ---------------------------------------------------------------------------
+
+from repro.fl import async_server as AS  # noqa: E402
+from repro.fl import engine as ENG  # noqa: E402
+
+
+def _async_srv(gtr, **kw):
+    return AS.AsyncAggServer(ENG.make_engine("packed"), gtr, {}, **kw)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(3, 24))
+@settings(max_examples=10, deadline=None)
+def test_async_arrival_order_invariance(seed, k, n):
+    """Any arrival-order permutation of same-version submissions carrying
+    stable tags publishes the IDENTICAL model: the num/den merge is
+    associative and the server folds in canonical (version, tag, seq)
+    order, so arrival order cannot leak into the result."""
+    rng = np.random.default_rng(seed)
+    gtr = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    vals = rng.normal(size=(k, n)).astype(np.float32)
+    w = rng.uniform(0.1, 2.0, size=k).astype(np.float32)
+
+    def run(order):
+        srv = _async_srv(gtr, publish_at=k)
+        for i in order:
+            srv.submit_rows(vals[i:i + 1], w[i:i + 1], 0, tag=int(i))
+        return srv.publish()
+
+    a = run(range(k))
+    b = run(rng.permutation(k))
+    for x, y in zip(jax.tree.leaves(a.trainable), jax.tree.leaves(b.trainable)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(2, 8),
+       st.floats(0.3, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_async_staleness_discount_matches_host_reference(seed, V, k, beta):
+    """A publish over rows with random staleness s must equal the host
+    reference ``Σ w·β^s·vals / Σ w·β^s`` per column — the ``β^s`` discount
+    the engine's ``_staged_side`` applies, priced per submission."""
+    rng = np.random.default_rng(seed)
+    n = 6
+    gtr = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    srv = _async_srv(gtr, publish_at=k, beta=float(beta))
+    srv.version = V  # as if V publishes already happened
+    s = rng.integers(0, V + 1, size=k)
+    vals = rng.normal(size=(k, n)).astype(np.float32)
+    w = rng.uniform(0.1, 2.0, size=k).astype(np.float32)
+    for i in range(k):
+        srv.submit_rows(vals[i:i + 1], w[i:i + 1], int(V - s[i]))
+    res = srv.publish()
+    disc = (w.astype(np.float64) * np.float64(beta) ** s)
+    want = (disc[:, None] * vals.astype(np.float64)).sum(0) / disc.sum()
+    np.testing.assert_allclose(
+        np.asarray(res.trainable["w"], np.float64), want,
+        rtol=2e-4, atol=2e-5,
+    )
+    hist = {}
+    for si in s:
+        hist[int(si)] = hist.get(int(si), 0) + 1
+    assert ENG.AGG_STATS["async_staleness_hist"] == hist
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12), st.integers(1, 30))
+@settings(max_examples=20, deadline=None)
+def test_async_buffer_fifo_eviction_invariants(seed, max_buffer, n_subs):
+    """Under any random submission stream the buffer stays row-bounded
+    (modulo a lone over-sized submission), evicts strictly oldest-first
+    (the retained entries are a contiguous SUFFIX of the stream), and
+    conserves rows (submitted == held + evicted)."""
+    rng = np.random.default_rng(seed)
+    gtr = {"w": jnp.zeros((4,), jnp.float32)}
+    srv = _async_srv(gtr, publish_at=1, max_buffer=max_buffer)
+    total = 0
+    for i in range(n_subs):
+        k = int(rng.integers(1, 5))
+        srv.submit_rows(np.zeros((k, 4), np.float32),
+                        np.ones((k,), np.float32), 0)
+        total += k
+        if len(srv.buffer) > 1:
+            assert srv.buffer_rows <= max_buffer
+        seqs = [e.seq for e in srv.buffer]
+        assert seqs == list(range(seqs[0], i + 1))
+        assert total == srv.buffer_rows + srv.evicted
