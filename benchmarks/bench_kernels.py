@@ -79,6 +79,19 @@ Smoke gates (``--smoke``), all on the fused grouped round:
     one-dispatch check per publish, and an ungated stale-publish data
     point (one group a version behind, β=0.9) recording the staleness
     histogram and wall clock of the side-merge path.
+  * NEW (PR 10): the ``hierarchy`` record builds the pop=1M client
+    registry (``fl/population.py``), admits a memory-budgeted cohort of
+    512 through the device-budget and server-peak gates (recording the
+    admission-rejection counts; gated: the admission must replay
+    bit-identically from ``(seed, round)``), then runs that cohort flat
+    vs two-tier hierarchical at E ∈ {4, 8} edge aggregators.  Gated
+    (deterministic, always): the measured hier per-tier bytes
+    (``AGG_STATS["hier_server_peak_bytes"]`` /
+    ``["hier_edge_partial_bytes"]``) equal their ``memory_model`` twins,
+    the round keeps ONE logical carrier dispatch plus E per-edge folds,
+    and the hier server peak stays STRICTLY below the flat-round server
+    peak at every edge count — the memory-wall claim the two-tier fold
+    exists for, re-enforced on the fresh record by ``--compare``.
 
 The per-shard kernel launches a sharded round fans out to are recorded in
 the JSON under ``dispatches`` (``fedavg_grouped_shards`` = D per logical
@@ -109,6 +122,7 @@ from __future__ import annotations
 
 import functools
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -181,6 +195,7 @@ def bench(ctx: dict, full: bool = False, record: dict = None):
         "transport": _bench_transport(smoke=False, sink=record),
         "faults": _bench_faults(smoke=False, sink=record),
         "async": _bench_async(smoke=False, sink=record),
+        "hierarchy": _bench_hierarchy(smoke=False, sink=record),
     }
 
 
@@ -942,6 +957,186 @@ def _bench_freeze_decay(smoke: bool, sink: dict = None, iters: int = 3) -> dict:
     return res
 
 
+# two-tier hierarchy (ISSUE 10): the population the registry materializes,
+# the cohort admission draws from it, and the edge counts the gate cell's
+# hierarchical round runs at.  The pop=1M registry is columnar numpy and
+# builds in well under a second, so even smoke mode keeps the full million.
+HIER_POPULATION = 1_000_000
+HIER_COHORT = 512
+HIER_EDGES = (4, 8)
+HIER_ROUND = 3  # arbitrary non-zero round index: admission replays from it
+
+
+def _make_cohort_plans(d: int, ks, weights, out: int = 16):
+    """``_make_width_plans`` with RAGGED per-group client counts and real
+    aggregation weights — the shape a memory-budgeted admitted cohort has
+    (``fl/population.py``): group g holds ``ks[g]`` clients carrying
+    ``weights[g]``."""
+    from repro.fl import engine as ENG
+
+    G = len(ks)
+    rng = jax.random.PRNGKey(0)
+    gtr = {"w": jax.random.normal(rng, (d, out)), "b": jnp.zeros((out,))}
+    fracs = [(i + 1) / (G + 1) for i in range(G)]
+    plans = []
+    for gi, r in enumerate(fracs):
+        f = max(1, int(d * r))
+        k = int(ks[gi])
+        sub = {"w": gtr["w"][:f], "b": gtr["b"]}
+        xs = jax.random.normal(jax.random.fold_in(rng, gi), (k, 16, d))
+        ys = jax.random.normal(jax.random.fold_in(rng, 50 + gi), (k, 16))
+        rngs = jax.random.split(jax.random.fold_in(rng, 100 + gi), k)
+        plans.append(ENG.GroupPlan(
+            _width_loss_factory(f), sub, {}, {}, xs, ys, rngs,
+            jnp.asarray(weights[gi], jnp.float32), 0.1, 2, 8,
+        ))
+    return plans, gtr
+
+
+def _bench_hierarchy(smoke: bool, sink: dict = None, iters: int = 3) -> dict:
+    """Million-client round record (ISSUE 10): build the pop=1M registry
+    (``fl/population.py``), admit a memory-budgeted cohort of
+    ``HIER_COHORT`` through the two admission gates, then run that cohort
+    as ONE round — flat (single-tier fused) and two-tier hierarchical at
+    ``HIER_EDGES`` edge aggregators — recording admission counts, wall
+    clocks, and per-tier peak bytes.  Gated here (deterministic figures,
+    no retry): admission must replay bit-identically from ``(seed,
+    round)``; the measured ``AGG_STATS`` hier peaks must equal their
+    ``memory_model`` twins; and every edge count's server peak must stay
+    STRICTLY below the flat-round server peak — the memory-wall win the
+    two-tier fold exists for.  ``--compare`` re-enforces the
+    below-flat shape on the fresh record (compare_trajectories).
+    ``sink`` receives the result dict before any gate can fire."""
+    from repro.fl import engine as ENG
+    from repro.fl import memory_model as MM
+    from repro.fl import population as POP
+    from repro.models import cnn as CNN
+
+    d = 128 if smoke else 1024
+    G = 4
+    cfg = POP.PopulationConfig(n_clients=HIER_POPULATION, n_groups=G, seed=0)
+    t0 = time.perf_counter()
+    pop = POP.build_population(cfg)
+    build_us = (time.perf_counter() - t0) * 1e6
+    # resnet34's top-tier footprint (≈735 MB) sits ABOVE group 3's 700 MB
+    # budget floor, so the device-budget gate genuinely rejects — the
+    # recorded rejection counts are a live figure, not a vacuous zero
+    need = POP.group_train_need_mb(CNN.CNNConfig("resnet34"), G)
+    t0 = time.perf_counter()
+    cohort = POP.sample_cohort(pop, HIER_ROUND, cohort_size=HIER_COHORT,
+                               need_mb=need)
+    sample_us = (time.perf_counter() - t0) * 1e6
+    replay = POP.sample_cohort(pop, HIER_ROUND, cohort_size=HIER_COHORT,
+                               need_mb=need)
+    assert np.array_equal(cohort.ids, replay.ids), (
+        "hierarchy: cohort admission is not reproducible from "
+        "(seed, round) — sample_cohort must be a pure function"
+    )
+    ks = [int(np.sum(cohort.groups == g)) for g in range(G)]
+    assert all(k > 0 for k in ks), f"empty structure group in cohort: {ks}"
+    gw = [cohort.weights[cohort.groups == g] for g in range(G)]
+    plans, gtr = _make_cohort_plans(d, ks, gw)
+    eng = ENG.make_engine("packed")
+    layout = ENG.make_group_layout(plans, gtr, {})
+    k_total = int(sum(ks))
+    res = {
+        "d": d, "G": G, "n": layout.n, "k_total": k_total,
+        "n_local_devices": len(jax.devices()),
+        "population": {
+            "n_clients": pop.n_clients, "n_groups": G, "seed": cfg.seed,
+            "build_us": build_us,
+            "strata": [int(len(s)) for s in pop.strata],
+        },
+        "cohort": {
+            "round": cohort.round_idx, "k": cohort.k,
+            "cohort_size": HIER_COHORT, "sample_us": sample_us,
+            "group_counts": ks,
+        },
+        "admission": {
+            "considered": cohort.considered,
+            "rejected_budget": cohort.rejected_budget,
+            "rejected_server": cohort.rejected_server,
+        },
+    }
+    if sink is not None:
+        sink["hierarchy"] = res
+
+    # the flat (single-tier) round the hierarchy competes with: its server
+    # peak is the memory_model flat-round twin; cross-check the measured
+    # panel against the twin's dominant term so the figures stay honest
+    eng.grouped_round(plans, gtr, {})  # warm compiles
+    st_flat = dict(ENG.AGG_STATS)
+    flat_peak = int(MM.server_aggregation_peak_bytes(k_total, layout.n, G))
+    assert st_flat["per_device_panel_elems"] == (
+        k_total * MM.agg_columns_per_device(layout.n)
+    ), "hierarchy: flat panel elems drifted from the memory-model twin"
+    us_flat = C.time_call(
+        lambda: eng.grouped_round(plans, gtr, {}).loss, iters=iters
+    )
+    res["flat"] = {"round_us": us_flat, "server_peak_bytes": flat_peak,
+                   "per_device_panel_bytes":
+                       int(st_flat["per_device_panel_bytes"])}
+    C.emit("kernels/hier_flat_round", us_flat,
+           f"k={k_total} n={layout.n} flat_peak_bytes={flat_peak}")
+
+    res["edges"] = {}
+    for E in HIER_EDGES:
+        eng.grouped_round(plans, gtr, {}, edges=E)  # warm compiles
+        ops.reset_dispatches()
+        eng.grouped_round(plans, gtr, {}, edges=E)
+        disp = dict(ops.DISPATCHES)
+        assert disp.get("fedavg_grouped") == 1, (
+            f"hierarchical round must keep the ONE logical carrier "
+            f"dispatch, saw {disp}"
+        )
+        assert disp.get("fedavg_grouped_edges") == E, (
+            f"expected {E} per-edge folds, saw {disp}"
+        )
+        st = dict(ENG.AGG_STATS)
+        assert st["hier_edges_used"] == E
+        assert st["hier_server_peak_bytes"] == MM.hier_server_peak_bytes(
+            layout.n, E
+        ), (
+            f"hierarchy: measured server peak "
+            f"{st['hier_server_peak_bytes']} != memory-model twin "
+            f"{MM.hier_server_peak_bytes(layout.n, E)} at E={E}"
+        )
+        assert st["hier_edge_partial_bytes"] == MM.edge_partial_bytes(
+            layout.n
+        ), (
+            f"hierarchy: measured edge partial "
+            f"{st['hier_edge_partial_bytes']} != memory-model twin "
+            f"{MM.edge_partial_bytes(layout.n)}"
+        )
+        ops.reset_dispatches()
+        us_h = C.time_call(
+            lambda: eng.grouped_round(plans, gtr, {}, edges=E).loss,
+            iters=iters,
+        )
+        res["edges"][str(E)] = {
+            "round_us": us_h,
+            "hier_server_peak_bytes": int(st["hier_server_peak_bytes"]),
+            "edge_partial_bytes": int(st["hier_edge_partial_bytes"]),
+            "edges_used": int(st["hier_edges_used"]),
+            "wire_bytes": int(st["wire_bytes"]),
+        }
+        C.emit(f"kernels/hier_round_e{E}", us_h,
+               f"flat_us={us_flat:.1f} "
+               f"hier_peak_bytes={st['hier_server_peak_bytes']} "
+               f"flat_peak_bytes={flat_peak}")
+    # the memory-wall gate (deterministic, always): the two-tier server
+    # only ever holds E (num, den) partial pairs plus the carrier — it
+    # must beat the flat K-row panel at every recorded edge count
+    for E in HIER_EDGES:
+        hp = res["edges"][str(E)]["hier_server_peak_bytes"]
+        assert hp < flat_peak, (
+            f"hierarchy: server peak {hp} at E={E} is not strictly below "
+            f"the flat-round peak {flat_peak} — the two-tier fold lost "
+            f"its memory-wall win"
+        )
+    return res
+
+
 def _bench_kernel_compare(smoke: bool, sink: dict = None) -> dict:
     """Aggregation-kernel wall clock in isolation: dense-mask fedavg_masked
     vs group-compressed fedavg_grouped on the same panel (jnp paths, jitted;
@@ -1036,6 +1231,14 @@ COMPARE_FAULTS_KEYS = (("overhead_faulted_vs_clean", True),
 COMPARE_ASYNC_KEYS = (("overhead_async_vs_sync", True),
                       ("async_publish_us", True),
                       ("buffer_peak_bytes", False))
+# hierarchy gate (ISSUE 10): per-tier peak bytes are deterministic plan
+# metadata (x1.5 vs seed, per edge count), round wall clocks gate at x3;
+# the section ALSO gates on shape like freeze_decay — the fresh record's
+# hier server peak must stay strictly below the fresh flat-round peak at
+# every edge count, independent of the seed's absolute numbers
+COMPARE_HIER_KEYS = (("round_us", True),
+                     ("hier_server_peak_bytes", False),
+                     ("edge_partial_bytes", False))
 
 
 def compare_trajectories(new: dict, seed: dict,
@@ -1188,6 +1391,40 @@ def compare_trajectories(new: dict, seed: dict,
         )
     for mkey, wall in COMPARE_ASYNC_KEYS:
         check(f"async.{mkey}", nas.get(mkey), sas.get(mkey), wall)
+    # hierarchy gate (ISSUE 10): wall clocks at x3 and deterministic
+    # per-tier bytes at x1.5 vs the seed (iterating the SEED's edge
+    # entries so a dropped edge count fails), plus the SHAPE gate on the
+    # fresh record: every hier server peak strictly below the fresh
+    # flat-round peak — the memory-wall win must survive --compare even
+    # when the seed predates the section
+    nh, sh = new.get("hierarchy", {}), seed.get("hierarchy", {})
+    if sh and not nh:
+        fails.append(
+            ("hierarchy: section missing from the fresh record", False)
+        )
+    nfl, sfl = nh.get("flat", {}), sh.get("flat", {})
+    check("hierarchy.flat.round_us", nfl.get("round_us"),
+          sfl.get("round_us"), True)
+    check("hierarchy.flat.server_peak_bytes", nfl.get("server_peak_bytes"),
+          sfl.get("server_peak_bytes"), False)
+    for e, s_ent in sh.get("edges", {}).items():
+        n_ent = nh.get("edges", {}).get(e, {})
+        for mkey, wall in COMPARE_HIER_KEYS:
+            check(f"hierarchy.edges[{e}].{mkey}", n_ent.get(mkey),
+                  s_ent.get(mkey), wall)
+    flat_peak = nfl.get("server_peak_bytes")
+    for e, n_ent in nh.get("edges", {}).items():
+        hp = n_ent.get("hier_server_peak_bytes")
+        if flat_peak is None or hp is None:
+            continue
+        checked[0] += 1
+        if not hp < flat_peak:
+            fails.append((
+                f"hierarchy.edges[{e}].hier_server_peak_bytes: {hp} not "
+                f"strictly below the flat-round peak {flat_peak} — the "
+                f"two-tier fold lost its memory-wall win",
+                False,
+            ))
     return fails, checked[0]
 
 
@@ -1231,6 +1468,7 @@ def main() -> None:
             _bench_transport(smoke=True, sink=sink)
             _bench_faults(smoke=True, sink=sink)
             _bench_async(smoke=True, sink=sink)
+            _bench_hierarchy(smoke=True, sink=sink)
         else:
             bench({}, full=args.full, record=sink)
 

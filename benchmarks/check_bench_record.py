@@ -1,0 +1,113 @@
+"""Declarative bench-artifact gate (ISSUE 10, CI headline).
+
+CI's slow job regenerates the benchmark trajectory and must fail loud if
+any GATED section silently vanishes from the uploaded artifact.  That
+check used to live as inline Python in ``.github/workflows/ci.yml`` and
+only covered ``transport`` + ``async`` — the ``faults`` (PR 8) and
+``freeze_decay`` (PR 6) sections could disappear without a peep.  This
+module replaces it with ONE declarative spec: ``REQUIRED_SECTIONS`` maps
+each gated section to the dotted key paths that must be present, so
+adding a gated bench section without registering it here fails the
+tier-1 unit test (tests/test_population.py::test_check_bench_record_*)
+and a section dropping out of the artifact fails the CI step.
+
+Usage: ``python benchmarks/check_bench_record.py BENCH_kernels.regen.json``
+— exits 0 when every required section and key is present, else prints
+every violation and exits 1.  Stdlib only (runs before/without the jax
+environment).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# section -> dotted key paths that must exist (and be non-None) in the
+# record.  One entry per GATED bench section — benchmarks/bench_kernels.py
+# sections whose disappearance would silently disable a regression gate.
+REQUIRED_SECTIONS: dict = {
+    "transport": (
+        "dtypes.f32.wire_bytes",
+        "dtypes.bf16.wire_bytes",
+        "dtypes.int8.wire_bytes",
+        "int8_over_f32_wire",
+    ),
+    "async": (
+        "overhead_async_vs_sync",
+        "buffer_peak_bytes",
+    ),
+    "faults": (
+        "overhead_faulted_vs_clean",
+        "straggler.staging_bytes",
+        "counters.fault_ok",
+    ),
+    "freeze_decay": (
+        "points",
+    ),
+    "hierarchy": (
+        "population",
+        "cohort",
+        "admission.rejected_budget",
+        "flat.round_us",
+        "flat.server_peak_bytes",
+        "edges.4.hier_server_peak_bytes",
+        "edges.8.hier_server_peak_bytes",
+    ),
+}
+
+
+def _lookup(d, path: str):
+    """Walk a dotted path through nested dicts; returns (found, value)."""
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return False, None
+        cur = cur[part]
+    return True, cur
+
+
+def check_record(rec: dict) -> list:
+    """All violations of ``REQUIRED_SECTIONS`` in ``rec`` (empty = ok)."""
+    problems = []
+    for section, keys in REQUIRED_SECTIONS.items():
+        sec = rec.get(section)
+        if not isinstance(sec, dict):
+            problems.append(
+                f"section {section!r} missing from the bench record — its "
+                f"regression gate silently vanished"
+            )
+            continue
+        for path in keys:
+            found, val = _lookup(sec, path)
+            if not found or val is None:
+                problems.append(
+                    f"section {section!r} lacks required key {path!r}"
+                )
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(f"usage: {argv[0]} <bench_record.json>", file=sys.stderr)
+        return 2
+    try:
+        with open(argv[1]) as f:
+            rec = json.load(f)
+    except OSError as e:
+        print(f"{argv[1]} unreadable ({e}) — the bench smoke died before "
+              f"emitting the record", file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"{argv[1]} is not valid JSON ({e})", file=sys.stderr)
+        return 1
+    problems = check_record(rec)
+    if problems:
+        for p in problems:
+            print(p, file=sys.stderr)
+        return 1
+    print(f"bench record ok: all {len(REQUIRED_SECTIONS)} gated sections "
+          f"present ({', '.join(sorted(REQUIRED_SECTIONS))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -278,6 +278,33 @@ the fault fields (``faults_armed``, ``quarantine_bound``, ``fault_ok`` /
 sync — twinned exactly by ``fl/memory_model.py::fault_counts`` /
 ``fault_staging_bytes``, and the staging bytes join the peak-memory model.
 
+Two-tier hierarchical rounds (ISSUE 10).  ``grouped_round(...,
+edges=E)`` with ``E > 1`` routes the fused path through ``E`` EDGE
+aggregators instead of one shared panel: each edge folds its slice of
+every group panel (deterministic round-robin over the concatenated
+client order — row ``r`` of the cohort belongs to edge ``r % E``) into
+an associative ``(num, den)`` partial via
+``kernels/ops.py::fedavg_grouped_edge`` — exactly the per-row terms of
+``fedavg_grouped``, including the quarantine gate and the int8
+dequantization, evaluated at the edge.  The ``E`` partials reduce
+tree-wise and enter the global round as ``(snum, sden)`` SIDE inputs of
+a zero-weight single-row carrier dispatch (the PR 9
+``_publish_side_only`` pattern), so the amended round contract holds
+verbatim: still exactly ONE logical ``fedavg_grouped`` dispatch and ONE
+``block_until_ready`` per round, with the per-edge launches reported
+under ``DISPATCHES["fedavg_grouped_edges"]`` like the sharded per-shard
+counters.  ``edges=1`` (or ``None``) routes VERBATIM to the flat fused
+path — bit-equality at ``E=1`` is by construction, the same way sync
+publishes are a special case of async.  The server never materializes
+the ``[K_total, n]`` cohort panel: its peak is the fan-in — ``E``
+partial pairs plus the carrier operands — measured into
+``AGG_STATS["hier_server_peak_bytes"]`` (and per-edge
+``hier_edge_partial_bytes``) from real array/sharding metadata and
+twinned exactly by ``fl/memory_model.py::hier_server_peak_bytes`` /
+``edge_partial_bytes``.  The serial oracle accepts and ignores
+``edges`` (its host num/den accumulation is already edge-order-free);
+``fused_masked`` rejects ``E > 1`` (its kernel has no side operands).
+
 The serial per-group oracle (``impl="serial"``, default under the ``vmap``
 mode) runs each group through ``client.cohort_round`` and accumulates the
 same num/den host-side; equivalence is asserted in tests/test_engine.py.
@@ -1594,7 +1621,7 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     dev0 = mesh.devices.reshape(-1)[0] if submeshes is not None else None
     scales_panel = None
     if sharded:
-        from repro.launch.mesh import (put_model_ragged, put_scales_ragged)
+        from repro.launch.mesh import put_model_ragged, put_scales_ragged
 
         cs = layout.column_shards(agg_mesh.shape["model"])
         # replication sharding for the tiny [K_g] loss vectors ONLY — the
@@ -1936,6 +1963,320 @@ def _grouped_fused(plans, global_trainable, global_bn, layout: GroupLayout,
     return GroupedResult(new_tr, new_bn, loss, layout.gspec_tr.pack(new_tr))
 
 
+def _shard_elems(x: jax.Array) -> int:
+    """Per-device element count of ``x`` from sharding metadata (no sync)."""
+    return math.prod(x.sharding.shard_shape(x.shape))
+
+
+def _grouped_hier(plans, global_trainable, global_bn, layout: GroupLayout,
+                  mesh: Optional[Mesh], *, edges: int,
+                  agg: str = "replicated",
+                  agg_mesh: Optional[Mesh] = None,
+                  stream_dtype: str = "f32", inflight: int = 2,
+                  ef_state: Optional[dict] = None,
+                  faults: Optional[FLT.FaultPlan] = None,
+                  staging: Optional[list] = None, fault_round: int = 0):
+    """Two-tier hierarchical round (ISSUE 10; module docstring, "Two-tier
+    hierarchical rounds"): local SGD and the per-group wire conversion run
+    exactly as in :func:`_grouped_fused`, but instead of streaming every
+    client row into one shared ``[K_total, n_active]`` panel, each of
+    ``edges`` EDGE aggregators folds its round-robin slice of the cohort
+    into an associative ``(num, den)`` partial
+    (``ops.fedavg_grouped_edge`` — the flat kernel's per-row terms,
+    quarantine gate and int8 dequant included).  The partials reduce
+    tree-wise, straggler side inputs add on top, and ONE zero-weight
+    single-row carrier ``fedavg_grouped`` dispatch closes the round with
+    the reduced pair as its ``side`` operand — one logical dispatch, one
+    ``block_until_ready``, same as flat.  Under ``agg="sharded"`` the
+    partial pairs and the carrier operands column-shard over the agg
+    mesh's ``model`` axis before the reduce; the per-column ratio has no
+    cross-column coupling, so replicated and sharded hierarchies are
+    bit-equal at any fan-in.
+
+    Server peak memory is the FAN-IN, not the cohort: the top tier holds
+    ``E`` partial pairs, the reduced pair, and the carrier operands —
+    measured into ``AGG_STATS["hier_server_peak_bytes"]`` from array +
+    sharding metadata only and twinned exactly by
+    ``fl/memory_model.py::hier_server_peak_bytes``."""
+    sharded = agg == "sharded"
+    if sharded and agg_mesh is None:
+        raise ValueError("agg='sharded' needs an agg_mesh with a 'model' axis")
+    if edges < 1:
+        raise ValueError("edges must be >= 1")
+    eb = STREAM_ELEM_BYTES[stream_dtype]
+    quant = stream_dtype == "int8"
+    submeshes = _group_submeshes(mesh, layout.ks) if mesh is not None else None
+    dev0 = jax.devices()[0]
+    cs = layout.column_shards(agg_mesh.shape["model"]) if sharded else None
+    repl = NamedSharding(agg_mesh, P()) if sharded else None
+    group_w = [jnp.asarray(p.weights, jnp.float32).reshape(-1) for p in plans]
+    fault_groups = None
+    if faults is not None:
+        fault_groups = faults.for_cohort(layout.ks)
+        group_w = [
+            _masked_group_w(gw, gv, ("dropped", "straggler"))
+            for gw, gv in zip(group_w, fault_groups)
+        ]
+    # quarantine gate at the EDGE tier: same arming rule as the flat path
+    # (an infinite bound still gates non-finite entries)
+    bound = faults.norm_bound if faults is not None else None
+    losses = []
+    # per-edge entry lists: edge e folds its slice of every group panel
+    entries: list = [[] for _ in range(edges)]
+    stream_elems = 0  # largest edge-bound panel slice (per-entry elems)
+    stream_chunks = 0  # entries shipped client-tier -> edge tier
+    wire_bytes = 0  # client->edge rows + scales, then edge->server partials
+    for gi, plan in enumerate(plans):
+        kw = dict(lr=plan.lr, local_steps=plan.local_steps,
+                  batch_size=plan.batch_size)
+        if mesh is not None:
+            gmesh = submeshes[gi] if submeshes is not None else mesh
+            tr_g, fro_g, bn_g, xs_g, ys_g, rngs_g = _align_for_mesh(
+                gmesh, (plan.trainable, plan.frozen, plan.bn_state,
+                        plan.xs, plan.ys, plan.rngs)
+            )
+            gpanel, loss = _group_local_pack_sharded(
+                plan.loss_fn, tr_g, fro_g, bn_g, xs_g, ys_g, rngs_g,
+                mesh=gmesh, **kw,
+            )
+            if submeshes is not None:
+                loss = jax.device_put(loss, dev0 if not sharded else repl)
+        else:
+            gpanel, loss = _group_local_pack(
+                plan.loss_fn, plan.trainable, plan.frozen, plan.bn_state,
+                plan.xs, plan.ys, plan.rngs, **kw,
+            )
+        if fault_groups is not None:
+            for r, v in enumerate(fault_groups[gi]):
+                if v.kind == "straggler":
+                    staging.append(StagedPanel(
+                        vals=gpanel[r].astype(jnp.float32),
+                        idx=layout.idx[gi],
+                        weight=float(plan.weights[r]),
+                        born=fault_round,
+                        due=fault_round + v.delay,
+                        n=layout.n,
+                    ))
+                elif v.kind == "corrupt":
+                    gpanel = FLT.inject_panel(gpanel, r, v)
+        # wire-dtype conversion at the SOURCE, on the FULL [K_g, n_g]
+        # panel — same EF keying as the flat path, so a mixed flat/hier
+        # run carries ONE residual stream per group
+        scale_row = None
+        if quant:
+            ekey = (gi, gpanel.shape)
+            ef = None if ef_state is None else ef_state.get(ekey)
+            if ef is None:
+                ef = jnp.zeros(gpanel.shape, jnp.float32)
+            elif ef.sharding != gpanel.sharding:
+                ef = jax.device_put(ef, gpanel.sharding)
+            gpanel, scale_row, _, _, ef_new = _quantize_panel_ef(gpanel, ef)
+            if ef_state is not None:
+                ef_state[ekey] = ef_new
+        elif stream_dtype == "bf16":
+            gpanel = _to_bf16(gpanel)
+        if layout.frozen is not None:
+            # frozen columns leave the wire before the edge tier
+            gpanel = _live_take(gpanel, layout.live_pos_dev[gi])
+            if quant:
+                scale_row = _live_take_vec(scale_row,
+                                           layout.live_pos_dev[gi])
+        if mesh is not None:
+            # the edge tier is simulated on the default device: stream the
+            # finished group panel off its (sub-)mesh — async device_put,
+            # pipelines behind the other groups' local SGD
+            gpanel = jax.device_put(gpanel, dev0)
+            if quant:
+                scale_row = jax.device_put(scale_row, dev0)
+        losses.append(loss)
+        if layout.n_active == 0:
+            continue
+        k_g, n_live = int(gpanel.shape[0]), int(gpanel.shape[1])
+        gw = group_w[gi]
+        # deterministic edge assignment: global cohort row -> row % edges
+        eids = (layout.rows[gi] + np.arange(k_g)) % edges
+        edges_touched = 0
+        for e in range(edges):
+            rs = np.nonzero(eids == e)[0]
+            if rs.size == 0:
+                continue
+            rsd = jnp.asarray(rs)
+            entries[e].append((
+                jnp.take(gpanel, rsd, axis=0),
+                jnp.take(gw, rsd),
+                layout.idx_dev[gi],
+                scale_row,
+            ))
+            edges_touched += 1
+            stream_elems = max(stream_elems, rs.size * n_live)
+            stream_chunks += 1
+        wire_bytes += k_g * n_live * eb
+        if quant:
+            # the bf16 scale row travels to every edge holding group rows
+            wire_bytes += 2 * n_live * edges_touched
+    # edge tier: one partial fold per (non-empty) edge, each counted under
+    # DISPATCHES["fedavg_grouped_edges"] — async scatter-adds, no sync
+    pairs = []
+    if layout.n_active > 0:
+        pairs = [
+            ops.fedavg_grouped_edge(ent, layout.n_active, bound=bound)
+            for ent in entries if ent
+        ]
+    edges_used = len(pairs)
+    edge_pair_bytes = (4 * (pairs[0][0].size + pairs[0][1].size)
+                       if pairs else 0)
+    wire_bytes += edges_used * edge_pair_bytes  # edge->server partial uplink
+    # fault handling, part 2: straggler merge side inputs add on top of the
+    # reduced partials — same staging semantics as the flat path
+    side = None
+    merged_rows = evicted_rows = 0
+    if faults is not None:
+        due, evicted_rows = _collect_due_staged(staging, fault_round,
+                                                layout.n)
+        while len(staging) > faults.max_staged:
+            staging.pop(0)
+            evicted_rows += 1
+        merged_rows = len(due)
+        if due and layout.n_active > 0:
+            snum, sden = _staged_side(due, faults.beta, fault_round,
+                                      layout.n)
+            if layout.frozen is not None:
+                snum = jnp.take(snum, layout.active_idx_dev)
+                sden = jnp.take(sden, layout.active_idx_dev)
+            side = (snum, sden)
+    prev = _grouped_prev(layout, global_trainable, global_bn)
+    prev_act = (prev if layout.frozen is None
+                else jnp.take(prev, layout.active_idx_dev))
+    peak_elems = 2  # carrier w + wsum f32 scalars
+    if layout.n_active == 0:
+        # fully frozen layout: nothing left to aggregate
+        flat = prev
+        carrier_elems = 0
+    else:
+        if sharded:
+            pad = cs.n_padded - layout.n_active
+            sh_m = NamedSharding(agg_mesh, P("model"))
+            col_sh = NamedSharding(agg_mesh, P(None, "model"))
+
+            def _place(v):
+                return jax.device_put(
+                    jnp.pad(v, (0, pad)) if pad else v, sh_m
+                )
+        else:
+            def _place(v):
+                return v
+        # the partial pairs ARRIVE at the top tier (column-sharded under
+        # agg="sharded"), then reduce tree-wise — per-column adds, so the
+        # shard decomposition stays bitwise exact at any fan-in
+        pairs = [(_place(pn), _place(pd)) for pn, pd in pairs]
+        peak_elems += sum(
+            _shard_elems(a) for pair in pairs for a in pair
+        )
+        while len(pairs) > 1:
+            nxt = [
+                (pairs[i][0] + pairs[i + 1][0], pairs[i][1] + pairs[i + 1][1])
+                for i in range(0, len(pairs) - 1, 2)
+            ]
+            if len(pairs) % 2:
+                nxt.append(pairs[-1])
+            pairs = nxt
+        rnum, rden = pairs[0] if pairs else (
+            _place(jnp.zeros((layout.n_active,), jnp.float32)),
+            _place(jnp.zeros((layout.n_active,), jnp.float32)),
+        )
+        if side is not None:
+            rnum = rnum + _place(side[0])
+            rden = rden + _place(side[1])
+        peak_elems += _shard_elems(rnum) + _shard_elems(rden)
+        cw = jnp.zeros((1,), jnp.float32)
+        cwsum = jnp.zeros((1,), jnp.float32)
+        if sharded:
+            # zero-weight single-row carrier, born column-sharded: the
+            # reduced pair rides as the side operand, wsum=0 makes the
+            # gmask term vanish, and padded columns (sden=0) pass prev
+            # (also zero-padded) through — the _publish_side_only pattern
+            carrier = _sharded_zeros_fn((1, cs.n_padded), col_sh,
+                                        "float32")()
+            cgmask = jax.device_put(
+                jnp.ones((1, cs.n_padded), jnp.float32), col_sh
+            )
+            prev_p = jnp.pad(prev_act, (0, pad)) if pad else prev_act
+            prev_p = jax.device_put(prev_p, sh_m)
+            peak_elems += (_shard_elems(carrier) + _shard_elems(cgmask)
+                           + _shard_elems(prev_p))
+            carrier_elems = _shard_elems(carrier)
+            flat = ops.fedavg_grouped_sharded(
+                carrier, cw, cgmask, cwsum, prev_p, mesh=agg_mesh,
+                side=(rnum, rden),
+            )
+            flat = jax.device_put(flat[: layout.n_active], dev0)
+        else:
+            carrier = jnp.zeros((1, layout.n_active), jnp.float32)
+            cgmask = jnp.ones((1, layout.n_active), jnp.float32)
+            peak_elems += (_shard_elems(carrier) + _shard_elems(cgmask)
+                           + _shard_elems(prev_act))
+            carrier_elems = _shard_elems(carrier)
+            flat = ops.fedavg_grouped(
+                carrier, cw, cgmask, cwsum, prev_act, side=(rnum, rden),
+            )
+    AGG_STATS.clear()
+    AGG_STATS.update(
+        agg=agg, kernel="grouped", n=layout.n, k_total=layout.k_total,
+        n_active=layout.n_active, n_frozen=layout.n - layout.n_active,
+        n_shards=cs.n_shards if sharded else 1,
+        n_padded=cs.n_padded if sharded else layout.n_active,
+        # the top tier's resident "panel" is the 1-row carrier — the
+        # [K_total, n] cohort panel never exists on any server device
+        per_device_panel_elems=carrier_elems,
+        stream="hier",
+        per_device_stream_elems=stream_elems,
+        stream_chunks=stream_chunks,
+        stream_dtype=stream_dtype,
+        inflight=inflight,
+        panel_elem_bytes=eb,
+        per_device_panel_bytes=carrier_elems * 4,
+        per_device_scales_bytes=0,
+        per_device_stream_bytes=stream_elems * eb,
+        # client->edge rows (+ int8 scale rows per receiving edge) plus the
+        # edge->server f32 partial uplink; no uniform-split counterfactual
+        # on this path, so both wire fields carry the same figure
+        wire_bytes=wire_bytes,
+        wire_bytes_uniform=wire_bytes,
+        # hierarchy telemetry (ISSUE 10), from array/sharding metadata
+        # only — fl/memory_model.py::edge_partial_bytes /
+        # hier_server_peak_bytes twin these exactly
+        hier_edges=edges,
+        hier_edges_used=edges_used,
+        hier_edge_partial_bytes=edge_pair_bytes,
+        hier_server_peak_bytes=4 * peak_elems,
+    )
+    fc = (faults.counts() if faults is not None
+          else {k: 0 for k in FLT.KINDS})
+    AGG_STATS.update(
+        faults_armed=faults is not None,
+        quarantine_bound=(float(faults.norm_bound) if faults is not None
+                          else None),
+        fault_ok=fc["ok"], fault_dropped=fc["dropped"],
+        fault_stragglers=fc["straggler"], fault_corrupt=fc["corrupt"],
+        fault_merged_rows=merged_rows,
+        fault_evicted_rows=evicted_rows,
+        fault_staged_rows=len(staging) if staging is not None else 0,
+        fault_staging_bytes=(
+            sum(4 * int(e.vals.shape[0]) for e in staging)
+            if staging is not None else 0
+        ),
+    )
+    if layout.frozen is not None and layout.n_active > 0:
+        flat = prev.at[layout.active_idx_dev].set(flat)
+    w = jnp.concatenate(group_w)
+    losses_w = sum(
+        jnp.sum(gw * l) for gw, l in zip(group_w, losses)
+    )
+    flat = _barrier(flat)  # the round's ONE host sync
+    new_tr, new_bn, loss = _grouped_unpack(layout, flat, losses_w, jnp.sum(w))
+    return GroupedResult(new_tr, new_bn, loss, layout.gspec_tr.pack(new_tr))
+
+
 def _grouped_serial(plans, global_trainable, global_bn, layout: GroupLayout,
                     faults: Optional[FLT.FaultPlan] = None,
                     staging: Optional[list] = None, fault_round: int = 0):
@@ -2156,6 +2497,7 @@ class CohortEngine:
         stream_dtype: Optional[str] = None,
         inflight: Optional[int] = None,
         faults: Optional[FLT.FaultPlan] = None,
+        edges: Optional[int] = None,
     ) -> GroupedResult:
         """One heterogeneous round over ``plans`` (see module docstring).
 
@@ -2200,7 +2542,17 @@ class CohortEngine:
         is bit-equal to ``faults=None``.  ``fused_masked`` supports
         dropped-only plans (its kernel has no quarantine or merge
         operands); the serial oracle supports everything, with corrupt ≡
-        zero-weight as the semantics of record."""
+        zero-weight as the semantics of record.
+
+        ``edges`` (ISSUE 10) sets the hierarchical fan-in: ``E > 1``
+        routes the fused path through ``E`` edge aggregators whose
+        associative ``(num, den)`` partials reduce tree-wise into a
+        zero-weight carrier dispatch — still one logical
+        ``fedavg_grouped`` dispatch and one sync per round (module
+        docstring, "Two-tier hierarchical rounds").  ``None``/``1`` is
+        the flat round VERBATIM; the serial oracle accepts and ignores
+        the knob (host num/den accumulation is edge-order-free);
+        ``fused_masked`` rejects ``E > 1`` (no side operands)."""
         if not plans:
             raise ValueError("grouped_round needs at least one GroupPlan")
         if impl is None:
@@ -2218,6 +2570,13 @@ class CohortEngine:
         if impl == "fused_masked" and stream_dtype != "f32":
             raise ValueError("the masked kernel has no dequant variant: "
                              "fused_masked supports stream_dtype='f32' only")
+        edges = 1 if edges is None else edges
+        if not isinstance(edges, int) or edges < 1:
+            raise ValueError(f"edges must be a positive int, got {edges!r}")
+        if impl == "fused_masked" and edges > 1:
+            raise ValueError("the masked kernel has no side operands: "
+                             "hierarchical aggregation (edges > 1) needs "
+                             "impl='fused' or 'serial'")
         agg = self.agg if agg is None else agg
         if agg == "auto":
             agg = ("sharded" if self.agg_mesh is not None
@@ -2251,8 +2610,12 @@ class CohortEngine:
                         "staging buffer): the masked kernel has no "
                         "quarantine or merge operands"
                     )
-        layout = make_group_layout(plans, global_trainable, global_bn,
-                                   frozen=frozen, force_index=armed)
+        # a hierarchical round always needs the index machinery: the edge
+        # folds scatter by panel-space column ids even for one group
+        layout = make_group_layout(
+            plans, global_trainable, global_bn, frozen=frozen,
+            force_index=armed or (edges > 1 and impl != "serial"),
+        )
         fault_round = 0
         if faults is not None:
             self._fault_round += 1
@@ -2278,6 +2641,15 @@ class CohortEngine:
             if ekey != self._ef_epoch:
                 self._ef_state.clear()
                 self._ef_epoch = ekey
+        if edges > 1:
+            return _grouped_hier(
+                plans, global_trainable, global_bn, layout, mesh,
+                edges=edges, agg=agg, agg_mesh=agg_mesh,
+                stream_dtype=stream_dtype, inflight=inflight,
+                ef_state=self._ef_state if stream_dtype == "int8" else None,
+                faults=faults, staging=self._staging,
+                fault_round=fault_round,
+            )
         return _grouped_fused(
             plans, global_trainable, global_bn, layout, mesh,
             kernel="masked" if impl == "fused_masked" else "grouped",

@@ -19,6 +19,18 @@ peak ≈ params_term + act_term + transient.
 wall — the server's fused grouped aggregation (fl/engine.py) — per
 aggregation placement mode, so the column-sharded path's ``≈ K_total·n/D``
 per-device claim is pinned by a regression test instead of vibes.
+
+Two-tier hierarchical rounds (ISSUE 10): under ``grouped_round(...,
+edges=E)`` the server never holds the ``[K_total, n]`` cohort panel at
+all — its peak is the fan-in (``E`` edge partial pairs + the carrier
+operands), modeled by :func:`hier_server_peak_bytes` with
+:func:`edge_partial_bytes` as the per-edge term; both twin the engine's
+``AGG_STATS["hier_server_peak_bytes"]`` / ``["hier_edge_partial_bytes"]``
+exactly.  This module is also the round ADMISSION policy:
+``fl/population.py`` filters cohort candidates through
+:func:`submodel_train_memory_mb` (device side) and
+:func:`server_aggregation_peak_bytes` (server side) — the memory wall
+turned into a scheduler.
 """
 from __future__ import annotations
 
@@ -477,6 +489,52 @@ def server_aggregation_peak_bytes(
     return panel_eb * (k_total * n_dev + stream) + elem_bytes * (
         n_groups * n_dev + 4 * n_dev + k_total + n_groups
     ) + scales + staging_bytes
+
+
+def edge_partial_bytes(n: int, *, n_frozen: int = 0,
+                       elem_bytes: int = 4) -> int:
+    """Resident bytes of ONE edge aggregator's partial: the associative
+    ``(num, den)`` pair — two f32 vectors over the ``n_active = n -
+    n_frozen`` live panel columns (kernels/ops.py::fedavg_grouped_edge
+    folds the edge's client rows into exactly this pair).  Analytic twin
+    of ``engine.AGG_STATS["hier_edge_partial_bytes"]``; the edge→server
+    uplink of a hierarchical round is ``E`` of these per round instead of
+    ``K_total`` client rows."""
+    if not 0 <= n_frozen <= n:
+        raise ValueError(f"n_frozen={n_frozen} outside [0, {n}]")
+    return elem_bytes * 2 * (n - n_frozen)
+
+
+def hier_server_peak_bytes(n: int, n_edges: int, *, n_devices: int = 1,
+                           agg: str = "replicated", tile: int = AGG_TILE,
+                           n_frozen: int = 0) -> int:
+    """Per-DEVICE peak bytes of the TOP (server) tier of a two-tier
+    hierarchical round (fl/engine.py::_grouped_hier):
+
+        partials  [2·E, n_dev]  — the E arriving edge (num, den) pairs
+        reduced   [2, n_dev]    — the tree-reduced pair (the carrier side)
+        carrier   [1, n_dev]    — the zero-weight single-row dispatch panel
+        gmask     [1, n_dev]    + prev [n_dev] + w/wsum scalars
+
+    where ``n_dev`` is :func:`agg_columns_per_device` over the live
+    columns (partials and carrier column-shard over the ``model`` axis
+    under ``agg="sharded"``, tile-padded like every other operand).  The
+    cohort panel term (``K_total·n``, the dominant flat-round term in
+    :func:`server_aggregation_peak_bytes`) is GONE: server peak is a
+    function of fan-in ``E`` and the edge-partial width, not of cohort
+    size — the bench gate pins the hierarchical figure strictly below the
+    flat round's at the "cohort=512 from pop=1M" cell.  Analytic twin of
+    ``engine.AGG_STATS["hier_server_peak_bytes"]`` (measured from array +
+    sharding metadata; tests pin the two equal).  Straggler staging
+    stays its own additive figure (:func:`fault_staging_bytes`), as in
+    the flat model."""
+    if n_edges < 0:
+        raise ValueError(f"n_edges must be >= 0, got {n_edges}")
+    n_dev = agg_columns_per_device(n, n_devices=n_devices, agg=agg,
+                                   tile=tile, n_frozen=n_frozen)
+    # 2E partial vectors + 2 reduced + carrier + gmask + prev, all f32,
+    # plus the two carrier weight scalars
+    return 4 * ((2 * n_edges + 5) * n_dev + 2)
 
 
 def _depthfl_memory_mb(cfg: C.CNNConfig, depth: int, *, batch: int) -> float:

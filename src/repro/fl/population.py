@@ -1,0 +1,308 @@
+"""Client-population registry + memory-budgeted cohort admission (ISSUE 10).
+
+Production FL samples a round's cohort of ~10²–10³ clients from a REGISTRY
+of ~10⁶⁺ — this module is that registry plus the sampler, with
+``fl/memory_model.py`` acting as the ADMISSION policy: a client enters a
+round only if (a) its device budget covers the training footprint of its
+structure group (:func:`repro.fl.memory_model.submodel_train_memory_mb`)
+and (b) the server's configured peak budget still admits the grown cohort
+(:func:`repro.fl.memory_model.server_aggregation_peak_bytes`).  The
+paper's memory-wall constraint becomes a scheduler.
+
+* :func:`build_population` — a columnar registry over a synthetic ``N ≥
+  1M`` population: per-client structure-group assignment (budget-driven,
+  HeteroFL-style tiers), memory budget in MB
+  (``memory_model.assign_budgets_mb``), and aggregation weight drawn from
+  the empirical shard-size distribution of an ``fl/data.py`` Dirichlet
+  prototype partition — the registry scales to millions of clients
+  without materializing millions of shards.
+* :func:`sample_cohort` — seeded, weighted, stratified sampling: a PURE
+  function of ``(seed, round_idx)`` (``np.random.default_rng((seed,
+  round))``, the ``fl/faults.py`` idiom), so admission decisions are
+  reproducible across processes and resumable mid-run.  Strata are the
+  structure groups with largest-remainder proportional quotas; within a
+  stratum candidates are drawn weighted-without-replacement via Gumbel
+  top-k, then admitted in draw order through the two memory gates.
+* :class:`CohortSampler` — the resumable cursor: ``next_cohort()``
+  advances a round counter that round-trips through
+  ``train/checkpoint.py`` (:meth:`CohortSampler.state_to_tree`), so a
+  restored run continues the exact cohort sequence it would have drawn.
+
+tests/test_population.py pins two-process determinism and the admission /
+strata / resume invariants (hypothesis properties in
+tests/test_properties.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.fl import data as DATA
+from repro.fl import memory_model as MM
+from repro.models import cnn as C
+
+
+@dataclass(frozen=True)
+class PopulationConfig:
+    """Knobs of the synthetic registry.  ``proto_clients``/``proto_samples``
+    size the ``fl/data.py`` Dirichlet prototype partition whose empirical
+    shard-size distribution the per-client weights are drawn from."""
+
+    n_clients: int = 1_000_000
+    n_groups: int = 4
+    seed: int = 0
+    budget_lo: float = 100.0
+    budget_hi: float = 900.0
+    proto_clients: int = 128
+    proto_samples: int = 4096
+    alpha: float = 1.0  # Dirichlet label-skew of the prototype partition
+
+
+@dataclass(frozen=True)
+class Population:
+    """Columnar client registry: row ``c`` is client ``c``."""
+
+    cfg: PopulationConfig
+    groups: np.ndarray  # [N] int16 structure-group id (0 = smallest budget)
+    budgets_mb: np.ndarray  # [N] f32 device memory budget
+    weights: np.ndarray  # [N] f32 aggregation weight (shard size)
+    thresholds: np.ndarray  # [n_groups-1] budget cut points of the tiers
+    _strata: Tuple[np.ndarray, ...] = field(default=(), repr=False)
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.groups.shape[0])
+
+    @property
+    def strata(self) -> Tuple[np.ndarray, ...]:
+        """Per-group client-id arrays (ascending ids), built once."""
+        return self._strata
+
+
+@dataclass(frozen=True)
+class Cohort:
+    """One round's admitted cohort, in deterministic admission order."""
+
+    round_idx: int
+    ids: np.ndarray  # [k] int64 client ids
+    groups: np.ndarray  # [k] int16 group per admitted client
+    weights: np.ndarray  # [k] f32 aggregation weights
+    considered: int  # candidates drawn across all strata
+    rejected_budget: int  # device-budget gate rejections
+    rejected_server: int  # server-peak gate rejections (incl. quota spill)
+
+    @property
+    def k(self) -> int:
+        return int(self.ids.shape[0])
+
+
+def build_population(cfg: PopulationConfig) -> Population:
+    """Materialize the registry: budgets, budget-tier group assignment, and
+    weights from an ``fl/data.py`` shard-size distribution — all from
+    ``cfg.seed`` alone (two processes build identical registries)."""
+    if cfg.n_clients < 1:
+        raise ValueError("n_clients must be >= 1")
+    if cfg.n_groups < 1:
+        raise ValueError("n_groups must be >= 1")
+    rng = np.random.default_rng(cfg.seed)
+    # empirical shard sizes: one Dirichlet prototype partition over a
+    # synthetic label pool (fl/data.py), then resampled out to N clients —
+    # the non-IID size spread at registry scale without N actual shards
+    key = jax.random.PRNGKey(cfg.seed)
+    labels = np.asarray(
+        jax.random.randint(key, (cfg.proto_samples,), 0, 10)
+    )
+    parts = DATA.partition_dirichlet(
+        key, labels, cfg.proto_clients, alpha=cfg.alpha, min_per_client=1
+    )
+    proto_sizes = np.asarray([len(p) for p in parts], np.float32)
+    weights = rng.choice(proto_sizes, size=cfg.n_clients, replace=True)
+    weights = np.maximum(weights, 1.0).astype(np.float32)
+    budgets = MM.assign_budgets_mb(
+        rng, cfg.n_clients, cfg.budget_lo, cfg.budget_hi
+    ).astype(np.float32)
+    # budget-driven structure tiers (HeteroFL-style): evenly spaced cut
+    # points over [lo, hi]; group 0 is the tightest-budget tier
+    thresholds = cfg.budget_lo + (cfg.budget_hi - cfg.budget_lo) * (
+        np.arange(1, cfg.n_groups) / cfg.n_groups
+    )
+    groups = np.searchsorted(thresholds, budgets).astype(np.int16)
+    strata = tuple(
+        np.nonzero(groups == g)[0].astype(np.int64)
+        for g in range(cfg.n_groups)
+    )
+    return Population(cfg, groups, budgets, weights,
+                      thresholds.astype(np.float32), strata)
+
+
+def group_train_need_mb(
+    model_cfg: C.CNNConfig,
+    n_groups: int,
+    *,
+    t: int = 0,
+    batch: int = MM.PAPER_BATCH,
+) -> np.ndarray:
+    """Per-group device-side training footprint: group ``g`` trains the
+    progressive sub-model at step ``t`` and HeteroFL width ratio
+    ``2^-(n_groups-1-g)`` (group 0 = narrowest), evaluated by
+    ``memory_model.submodel_train_memory_mb`` — the admission gate's
+    device-side threshold vector."""
+    return np.asarray([
+        MM.submodel_train_memory_mb(
+            model_cfg, t, batch=batch, ratio=2.0 ** -(n_groups - 1 - g)
+        )
+        for g in range(n_groups)
+    ], np.float64)
+
+
+def _quotas(shares: np.ndarray, cohort_size: int) -> np.ndarray:
+    """Largest-remainder proportional quotas summing exactly to
+    ``cohort_size`` (deterministic tie-break by stratum index)."""
+    raw = shares / shares.sum() * cohort_size
+    q = np.floor(raw).astype(np.int64)
+    rem = cohort_size - int(q.sum())
+    if rem > 0:
+        order = np.lexsort((np.arange(len(raw)), -(raw - q)))
+        q[order[:rem]] += 1
+    return q
+
+
+def sample_cohort(
+    pop: Population,
+    round_idx: int,
+    *,
+    cohort_size: int,
+    need_mb: Sequence[float],
+    seed: Optional[int] = None,
+    server_peak_budget_bytes: Optional[int] = None,
+    n_cols: Optional[int] = None,
+    agg: str = "replicated",
+    n_devices: int = 1,
+    oversample: int = 4,
+) -> Cohort:
+    """Draw one round's cohort — a PURE function of ``(seed, round_idx)``
+    (default seed: ``pop.cfg.seed``); nothing else mutates, so replaying a
+    round re-derives the identical admission decisions.
+
+    Sampling: per-stratum quotas proportional to stratum population
+    (largest remainder), then weighted-without-replacement draw order
+    within each stratum (Gumbel top-k over ``log w``), oversampled
+    ``oversample×`` so budget rejections can backfill.  Admission walks
+    the draw order: a candidate needs ``budget ≥ need_mb[group]``
+    (:func:`group_train_need_mb` builds that vector from the memory
+    model); with ``server_peak_budget_bytes`` set, candidates (interleaved
+    round-robin across strata) are then cut off once
+    ``memory_model.server_aggregation_peak_bytes(k+1, n_cols, G, ...)``
+    would exceed the server budget — the two sides of the memory wall as
+    one admission filter.  Raising a client's budget can only help that
+    client (admission is monotone in budget; pinned by a hypothesis
+    property)."""
+    if cohort_size < 1:
+        raise ValueError("cohort_size must be >= 1")
+    need = np.asarray(need_mb, np.float64)
+    if need.shape != (pop.cfg.n_groups,):
+        raise ValueError(
+            f"need_mb must have one entry per group "
+            f"({pop.cfg.n_groups}), got shape {need.shape}"
+        )
+    if server_peak_budget_bytes is not None and n_cols is None:
+        raise ValueError("server admission needs n_cols (the round's "
+                         "packed column count)")
+    seed = pop.cfg.seed if seed is None else seed
+    rng = np.random.default_rng((seed, round_idx))
+    shares = np.asarray([len(s) for s in pop.strata], np.float64)
+    quotas = _quotas(np.maximum(shares, 1e-9), cohort_size)
+    considered = rejected_budget = rejected_server = 0
+    admitted: list = []  # per-stratum admitted id lists
+    for g, ids in enumerate(pop.strata):
+        # one gumbel draw per stratum member EVERY round regardless of the
+        # quota, so the draw order of stratum g is independent of the
+        # other knobs (budget edits never reshuffle the order)
+        gum = rng.gumbel(size=len(ids))
+        adm_g: list = []
+        if len(ids) == 0 or quotas[g] == 0:
+            admitted.append(adm_g)
+            continue
+        m = min(len(ids), int(quotas[g]) * oversample)
+        keys = np.log(pop.weights[ids]) + gum
+        top = np.argpartition(-keys, m - 1)[:m]
+        order = top[np.argsort(-keys[top], kind="stable")]
+        for c in ids[order]:
+            if len(adm_g) >= quotas[g]:
+                break
+            considered += 1
+            if pop.budgets_mb[c] < need[g]:
+                rejected_budget += 1
+                continue
+            adm_g.append(int(c))
+        admitted.append(adm_g)
+    # server-side gate: interleave strata round-robin (the truncation hits
+    # every tier evenly) and stop admitting once the NEXT client would push
+    # the modeled flat-round server peak past the budget
+    final_ids: list = []
+    final_groups: list = []
+    depth = max((len(a) for a in admitted), default=0)
+    for pos in range(depth):
+        for g, adm_g in enumerate(admitted):
+            if pos >= len(adm_g):
+                continue
+            c = adm_g[pos]
+            if server_peak_budget_bytes is not None:
+                peak = MM.server_aggregation_peak_bytes(
+                    len(final_ids) + 1, int(n_cols), pop.cfg.n_groups,
+                    n_devices=n_devices, agg=agg,
+                )
+                if peak > server_peak_budget_bytes:
+                    rejected_server += 1
+                    continue
+            final_ids.append(c)
+            final_groups.append(g)
+    ids = np.asarray(final_ids, np.int64)
+    return Cohort(
+        round_idx=int(round_idx),
+        ids=ids,
+        groups=np.asarray(final_groups, np.int16),
+        weights=pop.weights[ids] if ids.size else np.zeros(0, np.float32),
+        considered=considered,
+        rejected_budget=rejected_budget,
+        rejected_server=rejected_server,
+    )
+
+
+class CohortSampler:
+    """Resumable sampler: a cursor over :func:`sample_cohort` rounds.
+
+    The cursor is deliberately tiny — the next round index — because each
+    round is a pure function of ``(seed, round)``: checkpointing the
+    cursor checkpoints the whole sampling stream.  ``state_to_tree`` /
+    ``state_from_tree`` speak ``train/checkpoint.py``'s flat string-keyed
+    array trees (tests pin the save→load→continue round-trip equal to
+    never having stopped)."""
+
+    def __init__(self, pop: Population, *, cohort_size: int,
+                 need_mb: Sequence[float], seed: Optional[int] = None,
+                 server_peak_budget_bytes: Optional[int] = None,
+                 n_cols: Optional[int] = None, agg: str = "replicated",
+                 n_devices: int = 1, oversample: int = 4):
+        self.pop = pop
+        self.kw = dict(
+            cohort_size=cohort_size, need_mb=np.asarray(need_mb, np.float64),
+            seed=seed, server_peak_budget_bytes=server_peak_budget_bytes,
+            n_cols=n_cols, agg=agg, n_devices=n_devices,
+            oversample=oversample,
+        )
+        self.round = 0
+
+    def next_cohort(self) -> Cohort:
+        c = sample_cohort(self.pop, self.round, **self.kw)
+        self.round += 1
+        return c
+
+    def state_to_tree(self) -> dict:
+        return {"round": np.asarray([self.round], np.int64)}
+
+    def state_from_tree(self, tree: dict) -> None:
+        self.round = int(np.asarray(tree["round"]).reshape(-1)[0])

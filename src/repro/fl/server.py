@@ -110,6 +110,11 @@ class ProFLServer:
         self._async_sim: AS.ArrivalSimulator = None
         self._async_spec = None
         self._async_round = 0
+        # cumulative step-boundary drop counters (ISSUE 10 bugfix): rows /
+        # resident bytes of buffered + in-flight submissions discarded when
+        # a model-structure change rebuilt the async server
+        self.async_dropped_on_growth = 0
+        self.async_dropped_bytes_on_growth = 0
 
     def _next_fault_plan(self, k_total: int):
         """Deterministic per-round FaultPlan under ``fl.faults`` (None when
@@ -132,6 +137,28 @@ class ProFLServer:
         spec_key = (ENG.make_pack_spec(trainable),
                     ENG.make_pack_spec(self.bn_state))
         if self._async_srv is None or self._async_spec != spec_key:
+            if self._async_srv is not None:
+                # step boundary under async aggregation (ISSUE 10 bugfix):
+                # submissions buffered or still in flight were trained
+                # against the OLD pack spec — the grown column space
+                # invalidates them and they are dropped (re-projection onto
+                # the new spec stays a ROADMAP residual).  The drop used to
+                # vanish silently; count rows + resident bytes into
+                # AGG_STATS (cumulative on the server too), with the bytes
+                # pinned to the memory-model twin MM.async_buffer_bytes of
+                # exactly the discarded buffer.
+                dropped_rows = (self._async_srv.buffer_rows
+                                + sum(int(item[0].xs.shape[0]) for _, _, item
+                                      in self._async_sim._pending))
+                dropped_bytes = self._async_srv.buffer_bytes()
+                self.async_dropped_on_growth += dropped_rows
+                self.async_dropped_bytes_on_growth += dropped_bytes
+                ENG.AGG_STATS.update(
+                    async_dropped_on_growth=self.async_dropped_on_growth,
+                    async_dropped_bytes_on_growth=(
+                        self.async_dropped_bytes_on_growth
+                    ),
+                )
             publish_at = ac.publish_at or int(plan.xs.shape[0])
             self._async_srv = AS.AsyncAggServer(
                 self.engine, trainable, self.bn_state,
@@ -152,6 +179,15 @@ class ProFLServer:
         res = None
         while srv.ready():
             res = srv.publish(faults_fn=self._next_fault_plan)
+        if self.async_dropped_on_growth:
+            # a publish clears AGG_STATS: keep the cumulative step-boundary
+            # drop counters visible on every async round after the first drop
+            ENG.AGG_STATS.update(
+                async_dropped_on_growth=self.async_dropped_on_growth,
+                async_dropped_bytes_on_growth=(
+                    self.async_dropped_bytes_on_growth
+                ),
+            )
         return res
 
     # ------------------------------------------------------------------

@@ -69,10 +69,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels import ref as _ref
-from repro.kernels import flash_attention as _fa
 from repro.kernels import effective_movement as _em
 from repro.kernels import fedavg as _fedavg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
 
 Impl = Literal["auto", "pallas", "chunked", "naive"]
 
@@ -331,6 +331,45 @@ def fedavg_grouped_dequant(
         params, weights, gmask, wsum, gsel, scales, prev,
         bound=bound, side=side,
     ).astype(jnp.dtype(out_dtype or jnp.float32))
+
+
+def fedavg_grouped_edge(
+    entries,  # per-group slices: (vals [k, n_g], w [k], idx [n_g], scale|None)
+    n: int,  # compressed panel width the partial covers (layout.n_active)
+    *,
+    bound=None,  # quarantine gate, applied at the edge (same semantics)
+):
+    """One EDGE aggregator's partial fold (ISSUE 10, two-tier rounds): the
+    edge's slice of each group panel folds into one associative ``(num,
+    den)`` pair over the ``[n]`` compressed column space — exactly the
+    per-row terms of ``fedavg_grouped`` (``num += w·val``, ``den += w``
+    over the group's live columns, the quarantine gate subtracting ``w``
+    per bad entry), so summing the edge pairs over any fan-in reproduces
+    the flat kernel's num/den before the ratio.  ``scale`` dequantizes an
+    int8 slice at the edge (``val = q·scale``) — bitwise the dequant the
+    fused kernel performs, just earlier in the tree.
+
+    Counted under ``DISPATCHES["fedavg_grouped_edges"]`` — one entry per
+    edge launch, like the sharded per-shard counters: the round-level
+    one-``fedavg_grouped``-dispatch contract stays with the top-tier
+    carrier dispatch, and the per-edge launches report fan-out without
+    weakening it.  All device work is async scatter-adds — no host sync."""
+    DISPATCHES["fedavg_grouped_edges"] += 1
+    num = jnp.zeros((n,), jnp.float32)
+    den = jnp.zeros((n,), jnp.float32)
+    for vals, w, idx, scale in entries:
+        val = vals.astype(jnp.float32)
+        if scale is not None:
+            val = val * scale.astype(jnp.float32)[None, :]
+        wf = w.astype(jnp.float32)
+        dloc = jnp.full((val.shape[1],), jnp.sum(wf), jnp.float32)
+        if bound is not None:
+            bad = ~jnp.isfinite(val) | (jnp.abs(val) > bound)
+            val = jnp.where(bad, 0.0, val)
+            dloc = dloc - jnp.einsum("k,kn->n", wf, bad.astype(jnp.float32))
+        num = num.at[idx].add(jnp.einsum("k,kn->n", wf, val))
+        den = den.at[idx].add(dloc)
+    return num, den
 
 
 # ---------------------------------------------------------------------------

@@ -35,7 +35,13 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, get_config, list_configs  # noqa: E402
+from repro.configs.base import (  # noqa: E402
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    get_config,
+    list_configs,
+)
 from repro.core import progressive as PROG  # noqa: E402
 from repro.launch import sharding  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402

@@ -42,7 +42,7 @@ from repro.fl.server import FLConfig, ProFLServer
 from repro.models.cnn import CNNConfig
 from repro.train import checkpoint as CK
 
-from test_contract import _bit_equal_rounds, _K_MIXED, build_mixed_world
+from test_contract import _K_MIXED, _bit_equal_rounds, build_mixed_world
 
 
 @pytest.fixture()
@@ -427,3 +427,78 @@ def test_async_convergence_smoke_non_iid(tiny_world):
     s_acc = float(np.mean(sync["curve"][max(0, publishes - 3):publishes]))
     assert abs(a_acc - s_acc) <= 0.15, (a_acc, s_acc, publishes)
     assert asy["curve"][-1] > 0.25  # and it genuinely learned (chance=0.1)
+
+
+# ---------------------------------------------------------------------------
+# step-boundary drops under growth (ISSUE 10 bugfix): counted, never silent
+# ---------------------------------------------------------------------------
+
+
+def _toy_plan(tr, k, seed=0):
+    """A degenerate one-group plan over ``tr`` (the ProFL round shape)."""
+    import jax.numpy as jnp
+
+    d = int(tr["w"].shape[0])
+
+    def loss(trn, fro, bn, xb, yb):
+        return jnp.mean((xb @ trn["w"] - yb) ** 2), bn
+
+    rng = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(rng, (k, 8, d))
+    ys = jax.random.normal(jax.random.fold_in(rng, 1), (k, 8))
+    rngs = jax.random.split(jax.random.fold_in(rng, 2), k)
+    return ENG.GroupPlan(loss, tr, {}, {}, xs, ys, rngs,
+                         jnp.arange(1.0, k + 1.0), 0.1, 1, 8)
+
+
+def test_async_dropped_on_growth_counted(tiny_world):
+    """A model-structure change under async aggregation drops the buffered
+    and in-flight submissions (they trained against the dead pack spec).
+    The drop used to vanish silently; now it lands in
+    ``AGG_STATS["async_dropped_on_growth"]`` with the resident bytes
+    pinned to the ``memory_model.async_buffer_bytes`` twin, and the
+    cumulative counters survive later publishes (which clear AGG_STATS)."""
+    import jax.numpy as jnp
+
+    xtr, ytr, xte, yte, parts, budgets = tiny_world
+    cfg = CNNConfig("vgg11", width_mult=0.0625, in_size=16)
+    srv = ProFLServer(
+        cfg, _fl(async_agg=AS.AsyncConfig(p_slow=0.0, publish_at=8)),
+        xtr, ytr, xte, yte, parts, budgets,
+    )
+    tr1 = {"w": jnp.zeros((4,))}
+    plan1 = _toy_plan(tr1, k=3)
+    # two rounds buffer 6 rows — under the publish_at=8 threshold
+    assert srv._async_grouped(plan1, tr1, None) is None
+    assert srv._async_grouped(plan1, tr1, None) is None
+    entries = [(e.k, e.n_cols) for e in srv._async_srv.buffer]
+    want_rows = srv._async_srv.buffer_rows + sum(
+        int(item[0].xs.shape[0]) for _, _, item in srv._async_sim._pending
+    )
+    want_bytes = srv._async_srv.buffer_bytes()
+    assert want_rows == 6 and want_bytes == MM.async_buffer_bytes(entries)
+    # growth: a wider trainable is a new pack spec — the server rebuilds
+    # and the stranded submissions are dropped AND counted
+    tr2 = {"w": jnp.zeros((6,))}
+    plan2 = _toy_plan(tr2, k=3, seed=1)
+    assert srv._async_grouped(plan2, tr2, None) is None
+    assert srv.async_dropped_on_growth == want_rows
+    assert srv.async_dropped_bytes_on_growth == want_bytes
+    assert ENG.AGG_STATS["async_dropped_on_growth"] == want_rows
+    assert ENG.AGG_STATS["async_dropped_bytes_on_growth"] == want_bytes
+    # two more cohorts push the new buffer to 9 >= 8: the publish clears
+    # AGG_STATS, but the cumulative drop counters must stay visible
+    assert srv._async_grouped(plan2, tr2, None) is None
+    res = srv._async_grouped(plan2, tr2, None)
+    assert res is not None
+    assert ENG.AGG_STATS["async_dropped_on_growth"] == want_rows
+    assert ENG.AGG_STATS["async_dropped_bytes_on_growth"] == want_bytes
+    assert srv.async_dropped_on_growth == want_rows
+    # a second growth accumulates on top of the first
+    res2 = srv._async_grouped(plan1, tr1, None)
+    assert res2 is None
+    assert srv.async_dropped_on_growth == want_rows  # buffer was empty
+    assert srv._async_grouped(plan1, tr1, None) is None  # 6 rows buffered
+    dropped2 = srv._async_srv.buffer_rows
+    srv._async_grouped(plan2, tr2, None)
+    assert srv.async_dropped_on_growth == want_rows + dropped2

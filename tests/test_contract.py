@@ -1056,6 +1056,35 @@ assert all(bool(jnp.all(jnp.isfinite(l)))
            for l in jax.tree.leaves(got_stale.trainable))
 assert ENG.AGG_STATS["async_stale_rows"] == 3, dict(ENG.AGG_STATS)
 print("ASYNC_OK", srv.version)
+
+# HIER (ISSUE 10) on the composed mesh: edges=1 IS the flat sharded round
+# (verbatim routing, bit-equal); a 3-edge two-tier fold matches it to fp
+# tolerance while keeping ONE logical carrier dispatch + 3 per-edge folds,
+# and the measured per-tier bytes equal the memory-model twins on the
+# real 2-shard model axis
+from repro.fl import memory_model as MM4
+want_h = eng.grouped_round(plans, tr, {}, agg="sharded")
+got_h1 = eng.grouped_round(plans, tr, {}, agg="sharded", edges=1)
+for a, b in zip(jax.tree.leaves(want_h.trainable),
+                jax.tree.leaves(got_h1.trainable)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+OPS3.reset_dispatches()
+got_h3 = eng.grouped_round(plans, tr, {}, agg="sharded", edges=3)
+assert OPS3.DISPATCHES["fedavg_grouped"] == 1, dict(OPS3.DISPATCHES)
+assert OPS3.DISPATCHES["fedavg_grouped_edges"] == 3, dict(OPS3.DISPATCHES)
+st_h = dict(ENG.AGG_STATS)
+assert st_h["hier_edges_used"] == 3, st_h
+assert st_h["hier_server_peak_bytes"] == MM4.hier_server_peak_bytes(
+    st_h["n"], 3, n_devices=st_h["n_shards"], agg="sharded"
+), st_h
+assert st_h["hier_edge_partial_bytes"] == MM4.edge_partial_bytes(st_h["n"])
+err_h = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree.leaves(want_h.trainable),
+                    jax.tree.leaves(got_h3.trainable))
+)
+assert err_h <= 1e-5, err_h
+print("HIER_OK", err_h)
 """
 
 
@@ -1081,6 +1110,7 @@ def test_composed_mesh_sharded_agg_subprocess():
     assert "TRANSPORT_OK" in out.stdout
     assert "FAULTS_OK" in out.stdout
     assert "ASYNC_OK" in out.stdout
+    assert "HIER_OK" in out.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -1864,4 +1894,234 @@ def test_async_agg_stats_match_memory_model_twins(mixed_world):
     assert st["async_versions_retained"] == 3
     assert st["async_version_table_bytes"] == MM.async_version_table_bytes(
         3, n
+    )
+
+
+# ---------------------------------------------------------------------------
+# two-tier hierarchical aggregation (ISSUE 10): E edge folds + one carrier
+# ---------------------------------------------------------------------------
+
+# tier-1 allowlist for the edges=1-verbatim cells; the rest run slow.
+# fused_masked appears with edges=1 only — the masked kernel has no side
+# operands, so edges>1 rejects it (pinned in the knob-validation test).
+HIER_TIER1 = {
+    ("vmap", "serial", "replicated"),
+    ("packed", "serial", "replicated"),
+    ("packed", "fused", "replicated"),
+    ("packed", "fused", "sharded"),
+    ("packed", "fused_masked", "replicated"),
+    ("sharded", "fused", "sharded"),
+}
+
+
+def _hier_matrix():
+    for mode in MODES:
+        for impl in IMPLS:
+            for agg in AGGS:
+                marks = ()
+                if (mode, impl, agg) not in HIER_TIER1:
+                    marks = (pytest.mark.slow,)
+                yield pytest.param(mode, impl, agg, marks=marks,
+                                   id=f"{mode}-{impl}-{agg}")
+
+
+@pytest.mark.parametrize("mode,impl,agg", list(_hier_matrix()))
+def test_hier_edges1_bit_equal(mode, impl, agg, mixed_world):
+    """``edges=1`` routes VERBATIM to the flat round in every matrix cell —
+    the single-edge hierarchy is the flat dispatch, bit-for-bit, the same
+    way the async server's staleness-0 publish is the sync round."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine(mode)
+    base = eng.grouped_round(plans, gtr, gbn, impl=impl, agg=agg)
+    got = eng.grouped_round(plans, gtr, gbn, impl=impl, agg=agg, edges=1)
+    _bit_equal_rounds(base, got)
+
+
+def test_hier_edges1_bit_equal_frozen(mixed_frozen):
+    """The edges=1-verbatim contract holds under a frozen-column epoch."""
+    plans, gtr, gbn, _, fro = mixed_frozen
+    eng = ENG.make_engine("packed")
+    base = eng.grouped_round(plans, gtr, gbn, agg="sharded", frozen=fro)
+    got = eng.grouped_round(plans, gtr, gbn, agg="sharded", frozen=fro,
+                            edges=1)
+    _bit_equal_rounds(base, got)
+
+
+def test_hier_edges1_bit_equal_faulted(mixed_world):
+    """The edges=1-verbatim contract holds under an armed FaultPlan (fresh
+    engines per side so the straggler staging starts identical)."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({
+        1: FLT.ClientFault("dropped"),
+        4: FLT.ClientFault("corrupt", mode="norm_blowup"),
+    }, norm_bound=1e6)
+    base = ENG.make_engine("packed").grouped_round(plans, gtr, gbn, faults=fp)
+    got = ENG.make_engine("packed").grouped_round(plans, gtr, gbn, faults=fp,
+                                                  edges=1)
+    _bit_equal_rounds(base, got)
+
+
+def test_hier_edges1_bit_equal_int8_stream(mixed_world):
+    """The edges=1-verbatim contract holds on the quantized wire (fresh
+    engines per side so the int8 EF residuals start identical)."""
+    plans, gtr, gbn, _ = mixed_world
+    base = ENG.make_engine("packed", stream_dtype="int8").grouped_round(
+        plans, gtr, gbn, agg="sharded"
+    )
+    got = ENG.make_engine("packed", stream_dtype="int8").grouped_round(
+        plans, gtr, gbn, agg="sharded", edges=1
+    )
+    _bit_equal_rounds(base, got)
+
+
+@pytest.mark.parametrize("edges", (2, 4, _K_MIXED + 3))
+@pytest.mark.parametrize("agg", AGGS)
+def test_hier_matches_oracle(edges, agg, mixed_world):
+    """A multi-edge round is the SAME weighted mean re-associated: per-edge
+    (num, den) partials summed tree-wise equal the flat per-row sums up to
+    fp associativity, so every edge count matches the vmap oracle at the
+    matrix tolerance — including E > K, where only K edges carry rows."""
+    plans, gtr, gbn, want = mixed_world
+    got = ENG.make_engine("packed").grouped_round(
+        plans, gtr, gbn, agg=agg, edges=edges
+    )
+    _grouped_close(want, got)
+    st = dict(ENG.AGG_STATS)
+    assert st["hier_edges"] == edges
+    assert st["hier_edges_used"] == min(edges, _K_MIXED)
+
+
+def test_hier_replicated_vs_sharded_bit_equal(mixed_world):
+    """The per-column num/den ratio has no cross-column coupling, so the
+    column split preserves the hierarchical result bit-for-bit, exactly as
+    it does the flat round."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    got_r = eng.grouped_round(plans, gtr, gbn, agg="replicated", edges=4)
+    got_s = eng.grouped_round(plans, gtr, gbn, agg="sharded", edges=4)
+    _bit_equal_rounds(got_r, got_s)
+
+
+@pytest.mark.parametrize("edges", (2, 4))
+def test_hier_round_contracts(edges, mixed_world):
+    """The amended round contracts at E edges: E ``fedavg_grouped_edges``
+    folds feed ONE logical ``fedavg_grouped`` carrier dispatch and one
+    ``block_until_ready`` — the edge tier adds folds, never barriers."""
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    eng.grouped_round(plans, gtr, gbn, agg="sharded", edges=edges)  # warm
+    real = jax.block_until_ready
+    calls = []
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        OPS.reset_dispatches()
+        ENG.reset_syncs()
+        eng.grouped_round(plans, gtr, gbn, agg="sharded", edges=edges)
+        assert OPS.DISPATCHES["fedavg_grouped"] == 1
+        assert OPS.DISPATCHES["fedavg_grouped_edges"] == edges
+        assert len(calls) == 1, f"expected 1 host sync, saw {len(calls)}"
+        assert ENG.SYNCS["aggregation_barrier"] == 1
+    finally:
+        jax.block_until_ready = real
+    ENG.reset_syncs()
+    OPS.reset_dispatches()
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_hier_agg_stats_match_memory_model_twins(agg, mixed_world):
+    """The hier telemetry is plan metadata, never a sync — and equals the
+    ``fl/memory_model.py`` twins EXACTLY: the per-edge partial pair via
+    ``edge_partial_bytes`` and the server-side peak (E placed pairs + the
+    reduced pair + carrier + gmask + prev) via ``hier_server_peak_bytes``,
+    per aggregation placement."""
+    plans, gtr, gbn, _ = mixed_world
+    E = 3
+    ENG.make_engine("packed").grouped_round(plans, gtr, gbn, agg=agg,
+                                            edges=E)
+    st = dict(ENG.AGG_STATS)
+    layout = ENG.make_group_layout(plans, gtr, gbn, force_index=True)
+    assert st["stream"] == "hier"
+    assert st["hier_edges"] == E and st["hier_edges_used"] == E
+    assert st["hier_edge_partial_bytes"] == MM.edge_partial_bytes(layout.n)
+    assert st["hier_server_peak_bytes"] == MM.hier_server_peak_bytes(
+        layout.n, E, n_devices=st["n_shards"], agg=agg
+    )
+    # the point of the tier: at the SAME placement the hier server only
+    # keeps 2E+5 resident vectors where the flat round keeps K panel rows
+    # plus its G+4 working vectors — fewer even in this tiny world
+    flat_peak = MM.server_aggregation_peak_bytes(
+        layout.k_total, layout.n, layout.n_groups,
+        n_devices=st["n_shards"], agg=agg,
+    )
+    assert st["hier_server_peak_bytes"] < flat_peak
+
+
+def test_hier_peak_independent_of_cohort_size():
+    """The memory-wall claim in the model: the flat peak grows linearly in
+    K while the hier peak depends only on (n, E) — for any fixed E the
+    crossover is K ≈ 2E+5 rows, far below a production cohort."""
+    n, G = 1000, 4
+    for E in (2, 8, 32):
+        hp = MM.hier_server_peak_bytes(n, E)
+        assert hp == MM.hier_server_peak_bytes(n, E)  # pure
+        assert MM.hier_server_peak_bytes(n, E + 1) > hp  # monotone in E
+        assert hp < MM.server_aggregation_peak_bytes(512, n, G)
+    with pytest.raises(ValueError):
+        MM.hier_server_peak_bytes(n, -1)
+    with pytest.raises(ValueError):
+        MM.edge_partial_bytes(10, n_frozen=11)
+
+
+def test_hier_edges_knob_validation(mixed_world):
+    plans, gtr, gbn, _ = mixed_world
+    eng = ENG.make_engine("packed")
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, edges=0)
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, edges=1.5)
+    # the masked kernel has no side operands to carry the edge partials:
+    # edges>1 rejects it, edges=1 routes flat and stays accepted
+    with pytest.raises(ValueError):
+        eng.grouped_round(plans, gtr, gbn, impl="fused_masked", edges=2)
+    eng.grouped_round(plans, gtr, gbn, impl="fused_masked", edges=1)
+
+
+def test_hier_faulted_matches_flat_faulted(mixed_world):
+    """An armed FaultPlan (drop + quarantine) produces the same result
+    through the two-tier fold as through the flat dispatch, to fp
+    associativity tolerance — the per-row gate terms are folded per edge,
+    not re-derived."""
+    plans, gtr, gbn, _ = mixed_world
+    fp = _plan_with({
+        1: FLT.ClientFault("dropped"),
+        4: FLT.ClientFault("corrupt", mode="norm_blowup"),
+    }, norm_bound=1e6)
+    want = ENG.make_engine("packed").grouped_round(plans, gtr, gbn,
+                                                   faults=fp)
+    got = ENG.make_engine("packed").grouped_round(plans, gtr, gbn,
+                                                  faults=fp, edges=3)
+    _grouped_close(want, got)
+
+
+def test_hier_frozen_matches_flat_frozen(mixed_frozen):
+    """A frozen-column epoch rides the edge tier: frozen columns leave the
+    edge partials (``edge_partial_bytes(n, n_frozen)`` is the model) and
+    the result matches the flat frozen round."""
+    plans, gtr, gbn, _, fro = mixed_frozen
+    want = ENG.make_engine("packed").grouped_round(plans, gtr, gbn,
+                                                   frozen=fro)
+    got = ENG.make_engine("packed").grouped_round(plans, gtr, gbn,
+                                                  frozen=fro, edges=3)
+    _grouped_close(want, got)
+    np.testing.assert_array_equal(
+        np.asarray(got.trainable["blocks"][1]), np.asarray(gtr["blocks"][1])
+    )
+    st = dict(ENG.AGG_STATS)
+    assert st["hier_edge_partial_bytes"] == MM.edge_partial_bytes(
+        st["n"], n_frozen=st["n_frozen"]
     )

@@ -1,0 +1,303 @@
+"""Client-population registry + memory-budgeted cohort admission (ISSUE 10).
+
+The registry/sampler contract (``fl/population.py``):
+
+* :func:`build_population` is a pure function of the config seed — two
+  fresh interpreter processes build the identical registry and draw the
+  identical cohort (the subprocess digest test, mirroring the fault
+  module's (seed, round) reproducibility test);
+* :func:`sample_cohort` is a pure function of ``(seed, round_idx)``:
+  replaying a round re-derives the identical admission decisions, and the
+  two memory gates (device budget via
+  ``memory_model.submodel_train_memory_mb``-built need vectors, server
+  peak via ``memory_model.server_aggregation_peak_bytes``) hold on every
+  admitted client;
+* :class:`CohortSampler`'s cursor round-trips through
+  ``train/checkpoint.py`` — a restored run continues the exact cohort
+  sequence it would have drawn (algebraic monotonicity/quota properties
+  live in tests/test_properties.py).
+
+Also here: the unit tests for ``benchmarks/check_bench_record.py`` — the
+declarative CI bench-artifact gate.  The spec must keep covering every
+gated bench section, and a section or key dropping out of a record must
+fail loud (the inline-Python predecessor only watched two sections).
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.fl import memory_model as MM
+from repro.fl import population as POP
+from repro.models.cnn import CNNConfig
+from repro.train import checkpoint as CK
+
+# small registry for unit tests: big enough for ~even strata, small enough
+# to build in milliseconds (the 1M registry runs in the hierarchy bench)
+_N = 20_000
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return POP.build_population(
+        POP.PopulationConfig(n_clients=_N, n_groups=4, seed=7)
+    )
+
+
+@pytest.fixture(scope="module")
+def need():
+    # resnet34's tier ladder pokes above group 3's budget floor, so the
+    # device gate genuinely rejects (same choice as the hierarchy bench)
+    return POP.group_train_need_mb(CNNConfig("resnet34"), 4)
+
+
+def test_registry_invariants(pop):
+    cfg = pop.cfg
+    assert pop.n_clients == _N
+    assert pop.groups.dtype == np.int16
+    assert pop.budgets_mb.shape == (_N,) and pop.weights.shape == (_N,)
+    assert np.all(pop.weights >= 1.0)
+    assert np.all((pop.budgets_mb >= cfg.budget_lo)
+                  & (pop.budgets_mb <= cfg.budget_hi))
+    # groups ARE the budget tiers: searchsorted against the thresholds
+    want = np.searchsorted(pop.thresholds, pop.budgets_mb)
+    np.testing.assert_array_equal(pop.groups, want)
+    # strata partition the id space
+    allids = np.sort(np.concatenate(pop.strata))
+    np.testing.assert_array_equal(allids, np.arange(_N))
+    for g, ids in enumerate(pop.strata):
+        assert np.all(pop.groups[ids] == g)
+
+
+def test_registry_deterministic_in_seed():
+    cfg = POP.PopulationConfig(n_clients=3000, seed=11)
+    a, b = POP.build_population(cfg), POP.build_population(cfg)
+    np.testing.assert_array_equal(a.groups, b.groups)
+    np.testing.assert_array_equal(a.budgets_mb, b.budgets_mb)
+    np.testing.assert_array_equal(a.weights, b.weights)
+    c = POP.build_population(POP.PopulationConfig(n_clients=3000, seed=12))
+    assert not np.array_equal(a.budgets_mb, c.budgets_mb)
+
+
+def test_registry_validation():
+    with pytest.raises(ValueError):
+        POP.build_population(POP.PopulationConfig(n_clients=0))
+    with pytest.raises(ValueError):
+        POP.build_population(POP.PopulationConfig(n_groups=0))
+
+
+def test_sample_cohort_pure_in_seed_and_round(pop, need):
+    a = POP.sample_cohort(pop, 5, cohort_size=64, need_mb=need)
+    b = POP.sample_cohort(pop, 5, cohort_size=64, need_mb=need)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.groups, b.groups)
+    np.testing.assert_array_equal(a.weights, b.weights)
+    assert (a.considered, a.rejected_budget, a.rejected_server) == \
+           (b.considered, b.rejected_budget, b.rejected_server)
+    # a different round or a different seed is a different draw
+    c = POP.sample_cohort(pop, 6, cohort_size=64, need_mb=need)
+    assert not np.array_equal(a.ids, c.ids)
+    d = POP.sample_cohort(pop, 5, cohort_size=64, need_mb=need, seed=99)
+    assert not np.array_equal(a.ids, d.ids)
+
+
+def test_sample_cohort_admission_gates_hold(pop, need):
+    co = POP.sample_cohort(pop, 2, cohort_size=128, need_mb=need)
+    assert co.k <= 128 and co.k > 0
+    assert len(set(co.ids.tolist())) == co.k  # without replacement
+    np.testing.assert_array_equal(co.groups, pop.groups[co.ids])
+    np.testing.assert_array_equal(co.weights, pop.weights[co.ids])
+    # the device gate: every admitted client affords its group's footprint
+    assert np.all(pop.budgets_mb[co.ids] >= np.asarray(need)[co.groups])
+    assert co.rejected_budget > 0  # resnet34's top tier genuinely rejects
+    assert co.considered == co.k + co.rejected_budget
+    assert co.rejected_server == 0  # no server budget configured
+
+
+def test_sample_cohort_server_gate_caps_cohort(pop, need):
+    n_cols = 4096
+    full = POP.sample_cohort(pop, 2, cohort_size=128, need_mb=need)
+    budget = int(MM.server_aggregation_peak_bytes(40, n_cols, 4))
+    capped = POP.sample_cohort(
+        pop, 2, cohort_size=128, need_mb=need,
+        server_peak_budget_bytes=budget, n_cols=n_cols,
+    )
+    assert 0 < capped.k < full.k
+    assert capped.rejected_server > 0
+    assert MM.server_aggregation_peak_bytes(capped.k, n_cols, 4) <= budget
+    # the admitted prefix is a SUBSET of the uncapped round's draw — the
+    # gate truncates, it never reshuffles
+    assert set(capped.ids.tolist()) <= set(full.ids.tolist())
+
+
+def test_sample_cohort_validation(pop, need):
+    with pytest.raises(ValueError):
+        POP.sample_cohort(pop, 0, cohort_size=0, need_mb=need)
+    with pytest.raises(ValueError):
+        POP.sample_cohort(pop, 0, cohort_size=8, need_mb=[1.0, 2.0])
+    with pytest.raises(ValueError):
+        POP.sample_cohort(pop, 0, cohort_size=8, need_mb=need,
+                          server_peak_budget_bytes=10**9)  # n_cols missing
+
+
+def test_cohort_sampler_checkpoint_roundtrip(pop, need, tmp_path):
+    """Stop mid-stream, save the cursor through train/checkpoint.py, restore
+    into a FRESH sampler: the continued cohort sequence is bit-identical to
+    never having stopped."""
+    kw = dict(cohort_size=48, need_mb=need)
+    ref = POP.CohortSampler(pop, **kw)
+    want = [ref.next_cohort() for _ in range(5)]
+    a = POP.CohortSampler(pop, **kw)
+    for _ in range(2):
+        a.next_cohort()
+    path = str(tmp_path / "cursor.npz")
+    CK.save(path, a.state_to_tree())
+    b = POP.CohortSampler(pop, **kw)
+    b.state_from_tree(CK.load(path))
+    assert b.round == 2
+    got = [b.next_cohort() for _ in range(3)]
+    for w, g in zip(want[2:], got):
+        assert w.round_idx == g.round_idx
+        np.testing.assert_array_equal(w.ids, g.ids)
+        np.testing.assert_array_equal(w.weights, g.weights)
+
+
+_POP_DETERMINISM_SCRIPT = r"""
+import hashlib
+import numpy as np
+from repro.fl import population as POP
+from repro.models.cnn import CNNConfig
+
+pop = POP.build_population(
+    POP.PopulationConfig(n_clients=50_000, n_groups=4, seed=3)
+)
+need = POP.group_train_need_mb(CNNConfig("resnet34"), 4)
+h = hashlib.sha256()
+h.update(np.ascontiguousarray(pop.groups).tobytes())
+h.update(np.ascontiguousarray(pop.budgets_mb).tobytes())
+h.update(np.ascontiguousarray(pop.weights).tobytes())
+for rnd in (0, 1, 7):
+    co = POP.sample_cohort(pop, rnd, cohort_size=96, need_mb=need)
+    h.update(np.ascontiguousarray(co.ids).tobytes())
+    h.update(np.ascontiguousarray(co.groups).tobytes())
+    h.update(np.asarray([co.considered, co.rejected_budget,
+                         co.rejected_server], np.int64).tobytes())
+print("POP_DIGEST", h.hexdigest())
+"""
+
+
+def test_population_deterministic_across_processes():
+    """Same seeds ⇒ the identical registry AND cohort stream in two FRESH
+    interpreter processes — the reproducibility the resumable cursor and
+    the bench's admission-replay gate build on."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_compile_cache")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    digests = []
+    for _ in range(2):
+        out = subprocess.run(
+            [sys.executable, "-c", _POP_DETERMINISM_SCRIPT],
+            env=env, capture_output=True, text=True, timeout=300,
+        )
+        assert out.returncode == 0, out.stdout + out.stderr
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("POP_DIGEST")]
+        assert line, out.stdout
+        digests.append(line[0].split()[1])
+    assert digests[0] == digests[1]
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/check_bench_record.py: the declarative CI bench-artifact gate
+# ---------------------------------------------------------------------------
+
+
+def _load_checker():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "check_bench_record.py")
+    spec = importlib.util.spec_from_file_location("check_bench_record", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _full_record(chk):
+    """A minimal record satisfying every REQUIRED_SECTIONS entry."""
+    rec = {}
+    for section, keys in chk.REQUIRED_SECTIONS.items():
+        sec = {}
+        for path in keys:
+            cur = sec
+            parts = path.split(".")
+            for p in parts[:-1]:
+                cur = cur.setdefault(p, {})
+            cur[parts[-1]] = 1
+        rec[section] = sec
+    return rec
+
+
+def test_check_bench_record_spec_covers_gated_sections():
+    """Every gated bench section is registered — adding a gated section to
+    bench_kernels.py without declaring it here must fail THIS test, so the
+    CI gate can never silently lag the bench."""
+    chk = _load_checker()
+    assert set(chk.REQUIRED_SECTIONS) == {
+        "transport", "async", "faults", "freeze_decay", "hierarchy"
+    }
+    # the hierarchy entry pins the admission counts and both edge tiers
+    hier = chk.REQUIRED_SECTIONS["hierarchy"]
+    assert "admission.rejected_budget" in hier
+    assert "edges.4.hier_server_peak_bytes" in hier
+    assert "edges.8.hier_server_peak_bytes" in hier
+
+
+def test_check_bench_record_passes_complete_record():
+    chk = _load_checker()
+    assert chk.check_record(_full_record(chk)) == []
+
+
+def test_check_bench_record_fails_missing_section_and_key():
+    chk = _load_checker()
+    rec = _full_record(chk)
+    del rec["faults"]
+    del rec["transport"]["int8_over_f32_wire"]
+    rec["async"]["buffer_peak_bytes"] = None  # present but null: still fails
+    problems = chk.check_record(rec)
+    assert any("'faults' missing" in p for p in problems)
+    assert any("int8_over_f32_wire" in p for p in problems)
+    assert any("buffer_peak_bytes" in p for p in problems)
+    assert len(problems) == 3
+
+
+def test_check_bench_record_cli_exit_codes(tmp_path):
+    chk = _load_checker()
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_full_record(chk)))
+    bad = tmp_path / "bad.json"
+    rec = _full_record(chk)
+    del rec["hierarchy"]
+    bad.write_text(json.dumps(rec))
+    garbled = tmp_path / "garbled.json"
+    garbled.write_text("{not json")
+    assert chk.main(["check", str(good)]) == 0
+    assert chk.main(["check", str(bad)]) == 1
+    assert chk.main(["check", str(tmp_path / "absent.json")]) == 1
+    assert chk.main(["check", str(garbled)]) == 1
+    assert chk.main(["check"]) == 2
+
+
+def test_check_bench_record_accepts_committed_seed():
+    """The committed BENCH_kernels.json seed must satisfy the spec — the
+    artifact CI gates against is the shape the repo actually records."""
+    chk = _load_checker()
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_kernels.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert chk.check_record(rec) == []

@@ -116,7 +116,6 @@ def test_param_sharding_rules_divide():
     (sanitization invariant) for every full-size arch."""
     from repro.configs.base import list_configs
     from repro.launch import sharding
-    import numpy as np
 
     # abstract mesh spec check: emulate 16x16 axis sizes without devices
     class FakeMesh:
